@@ -1,0 +1,39 @@
+"""Paper Figs. 3/7/11: execution-time breakdown (DRAM vs compute) before
+each refinement iteration — the data-driven signal that picks the next
+step.  Iter#1 sees O0, Iter#2 sees O1, Iter#3 sees O3."""
+
+from repro.core.costmodel import MACHSUITE_PROFILES, kernel_time
+from repro.core.guideline import recommend
+from repro.core.optlevel import OptLevel
+
+SNAPSHOTS = {
+    "before_iter1(Fig3)": OptLevel.O0,
+    "before_iter2(Fig7)": OptLevel.O1,
+    "before_iter3(Fig11)": OptLevel.O3,
+}
+
+
+def main():
+    rows = []
+    for snap, lvl in SNAPSHOTS.items():
+        for name, prof in MACHSUITE_PROFILES.items():
+            t = kernel_time(prof, lvl)
+            total = t["dram_s"] + t["compute_s"]
+            dram_frac = t["dram_s"] / total if total else 0.0
+            rec = recommend(level=lvl, compute_s=t["compute_s"],
+                            memory_s=t["dram_s"], offload_s=t["pcie_s"],
+                            baseline_s=prof.cpu_time_s)
+            head = ("STOP" if rec.stop
+                    else rec.step.value if rec.step else "done")
+            rows.append((
+                f"breakdown/{snap}/{name}",
+                total * 1e6,
+                f"dram={dram_frac:.0%} compute={1 - dram_frac:.0%} "
+                f"next={head}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

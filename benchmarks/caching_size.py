@@ -1,0 +1,36 @@
+"""Paper Fig. 6: speedup sensitivity to the explicit-caching size
+(2 KB / 64 KB / 1 MB / infinite), normalized per kernel."""
+
+import math
+
+from repro.core.costmodel import MACHSUITE_PROFILES, kernel_time
+from repro.core.optlevel import OptLevel
+
+SIZES = {"2KB": 2 * 1024, "64KB": 64 * 1024, "1MB": 1024 * 1024,
+         "inf": float("inf")}
+
+
+def main():
+    rows = []
+    for name, prof in MACHSUITE_PROFILES.items():
+        ts = {}
+        for label, size in SIZES.items():
+            if math.isinf(size):
+                # no burst-init overhead at all: one giant burst
+                t = kernel_time(prof, OptLevel.O5,
+                                cache_bytes=prof.bytes_in + prof.bytes_out
+                                + 1)
+            else:
+                t = kernel_time(prof, OptLevel.O5, cache_bytes=size)
+            ts[label] = t["system_s"]
+        base = ts["64KB"]
+        detail = " ".join(
+            f"{k}={base / v:.3f}" for k, v in ts.items())
+        rows.append((f"caching_size/{name}", base * 1e6,
+                     f"normalized_speedup[{detail}]"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,32 @@
+"""Paper Table 5: PCIe transfer time normalized to CPU runtime — the
+communication-bound filter that rejects BFS and SPMV before refinement."""
+
+from repro.core.costmodel import MACHSUITE_PROFILES, kernel_time
+from repro.core.guideline import COMM_BOUND_THRESHOLD, comm_bound_filter
+from repro.core.optlevel import OptLevel
+
+PAPER_TABLE5 = {
+    "aes": 2.2e-3, "bfs": 0.8, "gemm": 6.0e-4, "kmp": 5.9e-2,
+    "nw": 1.5e-3, "sort": 4.9e-3, "spmv": 1.3, "viterbi": 1.4e-2,
+}
+
+
+def main():
+    rows = []
+    for name, prof in MACHSUITE_PROFILES.items():
+        t = kernel_time(prof, OptLevel.O0)
+        ratio = t["pcie_s"] / prof.cpu_time_s
+        verdict = comm_bound_filter(t["pcie_s"], prof.cpu_time_s)
+        rows.append((
+            f"comm_filter/{name}",
+            t["pcie_s"] * 1e6,
+            f"pcie/cpu={ratio:.2e} paper={PAPER_TABLE5[name]:.2e} "
+            f"{'REJECT' if verdict else 'accept'}"
+            f" (threshold={COMM_BOUND_THRESHOLD})",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,90 @@
+"""Paper Fig. 1 + Fig. 12: cumulative speedup of the five refinement steps.
+
+Two views:
+  * ``model``  — the analytic FPGA model at the paper's full input sizes
+    (the faithful-reproduction numbers EXPERIMENTS.md compares to the
+    paper's 42~29030x / 34.4x claims);
+  * ``measured`` — wall-clock of the *JAX ladder implementations* on this
+    container's CPU at reduced sizes (shows the same structural transforms
+    speed up real executions too, not only the model).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.costmodel import MACHSUITE_PROFILES, refinement_curve
+from repro.core.optlevel import OptLevel
+from repro.machsuite import KERNELS
+
+MEASURE_SCALES = {
+    "aes": 2048 / 64e6, "bfs": 32 / 4096, "gemm": 32 / 1024,
+    "kmp": 8192 / 128e6, "nw": 1 / 4096, "sort": 64 / 262144 / 16,
+    "spmv": 1 / 64, "viterbi": 1 / 62500,
+}
+# O0 is element-at-a-time under jit -- measure it only where it is not
+# pathologically slow to compile/run on CPU.
+MEASURE_LEVELS = (OptLevel.O1, OptLevel.O2, OptLevel.O3, OptLevel.O4,
+                  OptLevel.O5)
+
+
+def model_rows():
+    rows = []
+    for name, prof in MACHSUITE_PROFILES.items():
+        curve = refinement_curve(prof)
+        base = curve[0]["system_s"]
+        for lvl in range(6):
+            t = curve[lvl]
+            rows.append((
+                f"model/{name}/O{lvl}",
+                t["system_s"] * 1e6,
+                f"speedup_vs_naive={base / t['system_s']:.1f}x "
+                f"vs_cpu={t['speedup_vs_cpu']:.3g}x",
+            ))
+    return rows
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    np.asarray(out if not isinstance(out, tuple) else out[0])  # sync
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    np.asarray(out if not isinstance(out, tuple) else out[0])
+    return (time.perf_counter() - t0) / reps
+
+
+def measured_rows():
+    rows = []
+    rng = np.random.default_rng(0)
+    for name, mod in KERNELS.items():
+        inp = mod.make_inputs(rng, MEASURE_SCALES[name])
+        base = None
+        for lvl in MEASURE_LEVELS:
+            try:
+                dt = _time(lambda: np.asarray(mod.run(lvl, **inp)))
+            except Exception as e:   # noqa: BLE001
+                rows.append((f"measured/{name}/O{int(lvl)}", -1, repr(e)))
+                continue
+            if base is None:
+                base = dt
+            rows.append((
+                f"measured/{name}/O{int(lvl)}",
+                dt * 1e6,
+                f"speedup_vs_O1={base / dt:.2f}x",
+            ))
+    return rows
+
+
+def main(measure: bool = True):
+    rows = model_rows()
+    if measure:
+        rows += measured_rows()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

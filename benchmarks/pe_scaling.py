@@ -1,0 +1,32 @@
+"""Paper Fig. 9: computation speedup vs PE duplication factor (1..128),
+normalized to the 1-PE design.  BFS is absent (chain-dependent), SORT
+scales sub-linearly (tree reduce) — exactly the paper's observations."""
+
+from repro.core.costmodel import MACHSUITE_PROFILES, kernel_time
+from repro.core.optlevel import OptLevel
+
+PES = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def main():
+    rows = []
+    for name, prof in MACHSUITE_PROFILES.items():
+        if prof.parallel_jobs == 0:
+            rows.append((f"pe_scaling/{name}", 0.0,
+                         "n/a (chain-dependent, paper Fig. 9 omits BFS)"))
+            continue
+        base = kernel_time(prof, OptLevel.O3, pe=1)["compute_s"]
+        pts = []
+        for pe in PES:
+            if pe > prof.max_pe:
+                pts.append(f"{pe}:resource-capped")
+                continue
+            c = kernel_time(prof, OptLevel.O3, pe=pe)["compute_s"]
+            pts.append(f"{pe}:{base / c:.1f}x")
+        rows.append((f"pe_scaling/{name}", base * 1e6, " ".join(pts)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md §Roofline markdown tables from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.render_roofline_md
+"""
+
+from benchmarks.roofline_table import load_cells
+
+
+def fmt(rec):
+    def s(x):
+        return f"{x:.3g}"
+    fused = rec.get("memory_fused_s")
+    return (f"| {rec['arch']} | {rec['shape']} | {s(rec['compute_s'])} "
+            f"| {s(rec['memory_s'])} "
+            f"| {s(fused) if fused is not None else '—'} "
+            f"| {s(rec['collective_s'])} "
+            f"| {rec['dominant']} "
+            f"| {rec.get('useful_flops_fraction', 0):.2f} "
+            f"| {rec.get('roofline_fraction', 0) * 100:.2f}% "
+            f"| {rec.get('peak_memory_bytes', 0) / 2**30:.1f} |")
+
+
+def main():
+    print("| arch | shape | compute_s | memory_s | mem_fused_s "
+          "| collective_s | dominant "
+          "| useful_flops | roofline | peak GiB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    cells = load_cells("single_pod")
+    keys = sorted(cells, key=lambda k: (k.split("__")[0],
+                                        order.index(k.split("__")[1])))
+    skips = []
+    errors = []
+    for key in keys:
+        rec = cells[key]
+        if rec.get("status") == "skipped":
+            skips.append(key)
+            continue
+        if rec.get("status") != "ok" or "dominant" not in rec:
+            errors.append((key, rec.get("error", "no twin")))
+            continue
+        print(fmt(rec))
+    if skips:
+        print(f"\nSkipped cells (long_500k x full-attention archs, "
+              f"DESIGN.md §Arch-applicability): {len(skips)}")
+        for k in skips:
+            print(f"  - {k}")
+    if errors:
+        print(f"\nErrors: {errors}")
+
+    multi = load_cells("multi_pod")
+    ok = sum(1 for r in multi.values() if r.get("status") == "ok")
+    sk = sum(1 for r in multi.values() if r.get("status") == "skipped")
+    print(f"\nMulti-pod (2,16,16): {ok} cells lowered+compiled OK, "
+          f"{sk} skipped, {len(multi) - ok - sk} failed.")
+
+
+if __name__ == "__main__":
+    main()

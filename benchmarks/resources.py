@@ -1,0 +1,53 @@
+"""Paper Table 6: resource consumption per strategy (BRAM block math of
+§5.2/§6 on the Virtex-7: 18 Kb blocks, <=36-bit native width)."""
+
+import math
+
+from repro.core.hw import FPGA_2012
+
+
+def bram_blocks(capacity_bytes: int, width_bits: int) -> int:
+    """Blocks to build a ``width_bits``-wide buffer of given capacity.
+
+    A block supplies <=36 bits of width; wider words gang ceil(w/36)
+    blocks; total must also cover capacity."""
+    hw = FPGA_2012
+    by_width = math.ceil(width_bits / hw.bram_block_max_width)
+    by_cap = math.ceil(capacity_bytes * 8 / hw.bram_block_bits)
+    return max(by_width, by_cap)
+
+
+def main():
+    hw = FPGA_2012
+    cache = 64 * 1024
+    rows = []
+    rows.append(("resources/caching/64KB_buffer",
+                 bram_blocks(cache, 32),
+                 f"blocks of {hw.bram_blocks} "
+                 f"({bram_blocks(cache, 32) / hw.bram_blocks:.1%})"))
+    rows.append(("resources/double_buffering/3x64KB",
+                 3 * bram_blocks(cache, 32),
+                 "3x caching (paper: 'merely costs 3x BRAM')"))
+    for width in (64, 128, 256, 512):
+        blocks = bram_blocks(cache, width)
+        rows.append((
+            f"resources/scratchpad_reorg/width{width}",
+            blocks,
+            f"{width}-bit 64KB buffer; paper: 8 blocks@256b, 15@512b "
+            f"per buffer minimum -> width x PE trade-off",
+        ))
+    # the paper's 128-PE feasibility check (§5.2)
+    pe, width = 128, 256
+    need = 3 * pe * bram_blocks(cache // pe, width)
+    rows.append((
+        "resources/128PE_x_256bit_x_3buf",
+        need,
+        f"{'OVER' if need > hw.bram_blocks else 'fits'} "
+        f"{hw.bram_blocks}-block fabric (paper: must trade PEs vs width)",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

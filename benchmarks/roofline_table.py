@@ -1,0 +1,56 @@
+"""EXPERIMENTS.md §Roofline generator: reads the dry-run JSON records and
+emits one row per (arch x shape) cell — the three roofline terms, the
+dominant bottleneck, useful-flops fraction, and roofline fraction."""
+
+import json
+import os
+
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def load_cells(mesh: str = "single_pod"):
+    d = os.path.join(EXP_DIR, mesh)
+    cells = {}
+    if not os.path.isdir(d):
+        return cells
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                cells[name[:-5]] = json.load(f)
+    return cells
+
+
+def main():
+    rows = []
+    for mesh in ("single_pod", "multi_pod"):
+        for cell, rec in load_cells(mesh).items():
+            status = rec.get("status")
+            if status == "skipped":
+                rows.append((f"roofline/{mesh}/{cell}", 0.0,
+                             "SKIP " + rec.get("reason", "")[:60]))
+                continue
+            if status != "ok":
+                rows.append((f"roofline/{mesh}/{cell}", -1.0,
+                             "ERROR " + str(rec.get("error"))[:80]))
+                continue
+            if "dominant" not in rec:
+                rows.append((f"roofline/{mesh}/{cell}",
+                             0.0, "compiled (no twin terms on this mesh)"))
+                continue
+            rows.append((
+                f"roofline/{mesh}/{cell}",
+                rec["step_time_s"] * 1e6,
+                f"compute={rec['compute_s']:.3g}s "
+                f"memory={rec['memory_s']:.3g}s "
+                f"collective={rec['collective_s']:.3g}s "
+                f"dominant={rec['dominant']} "
+                f"useful_flops={rec.get('useful_flops_fraction', 0):.2f} "
+                f"roofline_frac={rec.get('roofline_fraction', 0):.4f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,49 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+table.  Prints ``name,us_per_call,derived`` CSV rows (and a summary).
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-measured]
+"""
+
+import argparse
+import sys
+import time
+
+from benchmarks import (breakdowns, caching_size, comm_filter,
+                        machsuite_steps, pe_scaling, pipelining_table,
+                        resources, roofline_table)
+
+SECTIONS = [
+    ("machsuite_steps (Fig.1/12)", machsuite_steps),
+    ("pipelining (Table 4)", pipelining_table),
+    ("caching_size (Fig.6)", caching_size),
+    ("pe_scaling (Fig.9)", pe_scaling),
+    ("comm_filter (Table 5)", comm_filter),
+    ("breakdowns (Fig.3/7/11)", breakdowns),
+    ("resources (Table 6)", resources),
+    ("roofline (EXPERIMENTS §Roofline)", roofline_table),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="model-only machsuite rows (fast)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    n = 0
+    t0 = time.time()
+    for title, mod in SECTIONS:
+        print(f"# --- {title}", flush=True)
+        if mod is machsuite_steps:
+            rows = mod.main(measure=not args.skip_measured)
+        else:
+            rows = mod.main()
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}")
+            n += 1
+    print(f"# {n} rows in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

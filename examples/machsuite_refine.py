@@ -1,0 +1,48 @@
+"""Full MachSuite refinement demo: every kernel, every level — the
+paper's Fig. 12 as a table, plus the communication-bound filter verdicts
+(Table 5) and the final paper-vs-model comparison.
+
+  PYTHONPATH=src python examples/machsuite_refine.py
+"""
+
+from repro.core import costmodel
+from repro.core.guideline import comm_bound_filter
+from repro.core.optlevel import OptLevel
+from repro.core.refine import refine_modelled
+
+
+def main():
+    profiles = costmodel.MACHSUITE_PROFILES
+
+    print(f"{'kernel':10s} {'filter':8s} " +
+          " ".join(f"{'O' + str(i):>10s}" for i in range(6)) +
+          "   final vs CPU")
+    print("-" * 92)
+    for name, prof in profiles.items():
+        t0 = costmodel.kernel_time(prof, OptLevel.O0)
+        verdict = comm_bound_filter(t0["pcie_s"], prof.cpu_time_s)
+        filt = "REJECT" if verdict else "accept"
+        curve = costmodel.refinement_curve(prof)
+        base = curve[0]["system_s"]
+        cells = " ".join(
+            f"{base / curve[i]['system_s']:>9.1f}x" for i in range(6))
+        final = curve[5]["speedup_vs_cpu"]
+        print(f"{name:10s} {filt:8s} {cells}   {final:8.1f}x")
+
+    t = costmodel.paper_validation_table()
+    agg = t.pop("_aggregate")
+    print("\npaper abstract vs this model:")
+    print(f"  naive slowdown   paper ~292.5x | model "
+          f"{agg['gmean_naive_slowdown']:.1f}x (gmean)")
+    mean_sp = sum(r['final_speedup'] for r in t.values()) / len(t)
+    print(f"  final speedup    paper  ~34.4x | model {mean_sp:.1f}x (mean)")
+    print(f"  improvement      paper 42~29030x | model "
+          f"{agg['min_improvement']:.0f}~{agg['max_improvement']:.0f}x")
+
+    print("\nthe refinement *process* on NW (guideline-driven):")
+    for r in refine_modelled(profiles["nw"]):
+        print(f"  O{int(r.level)} -> {r.recommendation}")
+
+
+if __name__ == "__main__":
+    main()

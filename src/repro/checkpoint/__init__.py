@@ -1,0 +1,2 @@
+from repro.checkpoint.sharded import (CheckpointManager,  # noqa: F401
+                                      load_checkpoint, save_checkpoint)

@@ -1,0 +1,44 @@
+"""Config registry: ``--arch <id>`` resolution for all assigned archs."""
+
+from repro.configs import (
+    internvl2_26b,
+    llama4_scout_17b_a16e,
+    mistral_large_123b,
+    nemotron_4_340b,
+    qwen3_8b,
+    qwen3_moe_30b_a3b,
+    rwkv6_3b,
+    smollm_360m,
+    whisper_base,
+    zamba2_2p7b,
+)
+from repro.configs.base import (
+    ArchConfig,
+    SHAPES,
+    ShapeConfig,
+    applicable_shapes,
+    model_flops,
+)
+
+_MODULES = {
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "zamba2-2.7b": zamba2_2p7b,
+    "rwkv6-3b": rwkv6_3b,
+    "mistral-large-123b": mistral_large_123b,
+    "nemotron-4-340b": nemotron_4_340b,
+    "smollm-360m": smollm_360m,
+    "qwen3-8b": qwen3_8b,
+    "whisper-base": whisper_base,
+    "internvl2-26b": internvl2_26b,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    return _MODULES[name].FULL
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _MODULES[name].smoke()

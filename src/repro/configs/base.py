@@ -1,0 +1,233 @@
+"""Architecture + run configuration.
+
+One ``ArchConfig`` per assigned architecture lives in ``repro/configs/<id>.py``
+with the exact published dimensions; ``smoke()`` returns a reduced config of
+the same family for CPU tests.  ``ShapeConfig`` captures the assigned
+input-shape sets (train_4k / prefill_32k / decode_32k / long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.optlevel import BestEffortConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                 # 0 => attention-free (rwkv)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 => d_model // n_heads
+
+    # MoE --------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0         # d_ff of each expert (d_ff then = shared/dense)
+    shared_expert: bool = False  # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+
+    # SSM / hybrid -------------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    attn_every: int = 0          # hybrid: shared attn block every N ssm layers
+
+    # RWKV ---------------------------------------------------------------
+    rwkv_head_dim: int = 64
+
+    # Attention flavor -----------------------------------------------------
+    qk_norm: bool = False
+    mlp_kind: str = "swiglu"     # swiglu | relu2 (nemotron squared-ReLU)
+    rope_theta: float = 10_000.0
+
+    # Enc-dec (whisper) ----------------------------------------------------
+    n_enc_layers: int = 0        # >0 => encoder-decoder backbone
+
+    # Modality frontend stubs ----------------------------------------------
+    frontend: str = "none"       # none | audio_frames | vision_patches
+    n_prefix: int = 0            # vlm: patch tokens prepended to text
+
+    # Numerics / memory ------------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = ""       # "" => legacy `remat` flag; full|dots|none
+    cast_params_once: bool = False  # cast f32 params -> compute dtype once
+                                 # per step, BEFORE the FSDP gathers (halves
+                                 # gather + per-layer weight-read bytes)
+    scores_dtype: str = "float32"  # attention logits dtype; "bfloat16"
+                                 # halves the S^2 score-tensor HBM traffic
+                                 # (softmax still reduces in f32 internally)
+    loss_chunk: int = 2048       # chunked cross-entropy (memory cap)
+    q_chunk: int = 1024          # chunked attention query block (O1/O2 analog)
+
+    # Distribution (see parallel/sharding.py) ---------------------------------
+    moe_local_dispatch: bool = False  # per-DP-group MoE dispatch (a2a
+                                 # combine instead of (T,d) all-reduce)
+    microbatch: int = 0          # >1: grad-accumulation microbatches per
+                                 # step (bounds activation memory; the
+                                 # metric twin lowers microbatch=0 since
+                                 # accumulation only reschedules the work)
+    fsdp_over_pod: bool = False  # ZeRO the pod axis too (123B/340B class)
+    seq_shard_decode: bool = True  # shard long KV/seq over `data` at decode
+
+    # Cost-twin lowering (see launch/dryrun.py): unroll every loop so
+    # XLA cost analysis counts true trip counts.
+    unroll_layers: bool = False
+
+    # Best-effort ladder (paper) ------------------------------------------
+    best_effort: BestEffortConfig = dataclasses.field(
+        default_factory=BestEffortConfig
+    )
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def n_params(self) -> float:
+        """Total parameter count (embedding + blocks + head)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        emb = 2 * V * d  # untied in/out
+        if self.family == "ssm":   # rwkv6
+            per = _rwkv6_block_params(self)
+            return emb + L * per
+        if self.family == "hybrid":
+            return emb + _zamba2_params(self)
+        per = _attn_params(self) + _mlp_params(self)
+        if self.n_experts:
+            per = _attn_params(self) + _moe_params(self)
+        total = L * per
+        if self.is_encdec:
+            enc = self.n_enc_layers * (_attn_params(self) + _mlp_params(self))
+            dec_cross = self.n_layers * _attn_params(self)  # cross-attn
+            total = total + enc + dec_cross
+        return emb + total
+
+    def n_active_params(self) -> float:
+        """Active params per token (= total for dense)."""
+        if not self.n_experts:
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        act_moe = self.top_k * 3 * d * self.expert_d_ff + d * self.n_experts
+        if self.shared_expert:
+            act_moe += 3 * d * self.d_ff
+        per = _attn_params(self) + act_moe
+        return 2 * self.vocab * d + L * per
+
+
+def _attn_params(c: ArchConfig) -> float:
+    dh = c.head_dim
+    return (
+        c.d_model * c.n_heads * dh            # q
+        + 2 * c.d_model * c.n_kv_heads * dh   # k, v
+        + c.n_heads * dh * c.d_model          # o
+        + 2 * c.d_model                       # norms
+    )
+
+
+def _mlp_params(c: ArchConfig) -> float:
+    if c.mlp_kind == "relu2":
+        return 2 * c.d_model * c.d_ff
+    return 3 * c.d_model * c.d_ff             # swiglu
+
+
+def _moe_params(c: ArchConfig) -> float:
+    per_exp = 3 * c.d_model * c.expert_d_ff
+    total = c.n_experts * per_exp + c.d_model * c.n_experts  # + router
+    if c.shared_expert:
+        total += 3 * c.d_model * c.d_ff
+    return total
+
+
+def _rwkv6_block_params(c: ArchConfig) -> float:
+    d = c.d_model
+    tm = 5 * d * d + 6 * d + 2 * (d * 32 + 32 * 5 * d)  # r,k,v,g,o + ddlerp lora
+    cm = 2 * d * c.d_ff + d * d                        # channel mix (k,v,r)
+    return tm + cm + 4 * d
+
+
+def _zamba2_params(c: ArchConfig) -> float:
+    d = c.d_model
+    d_in = c.ssm_expand * d
+    nheads = d_in // c.ssm_head_dim
+    per_mamba = (
+        d * (2 * d_in + 2 * c.ssm_state + nheads)  # in_proj
+        + c.conv_width * (d_in + 2 * c.ssm_state)  # conv
+        + 3 * nheads                               # A, D, dt_bias
+        + d_in * d + 2 * d                         # out_proj + norms
+    )
+    n_apps = c.n_layers // max(1, c.attn_every)
+    shared = _attn_params(c) + _mlp_params(c)
+    proj = n_apps * (2 * d * d)  # per-application down-projections
+    return c.n_layers * per_mamba + shared + proj
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper (LM shapes: seq_len x global_batch).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ArchConfig) -> list:
+    """The assigned shape cells for one arch (skips noted in DESIGN.md)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        names.append("long_500k")   # needs sub-quadratic attention
+    return [SHAPES[n] for n in names]
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS per step: 6*N*D train (N_active for MoE), 2*N*D inference
+    (+ attention context flops for decode against the cache)."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence + KV-context reads as flops
+    tokens = shape.global_batch
+    attn_ctx = 0.0
+    if cfg.n_heads:
+        attn_dim = cfg.n_heads * cfg.head_dim
+        layers = cfg.n_layers if not cfg.is_encdec else cfg.n_layers * 2
+        if cfg.family == "hybrid":
+            layers = cfg.n_layers // max(1, cfg.attn_every)
+        attn_ctx = 4.0 * layers * shape.seq_len * attn_dim * tokens
+    return 2.0 * n_active * tokens + attn_ctx

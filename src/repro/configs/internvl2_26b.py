@@ -1,0 +1,18 @@
+"""internvl2-26b [vlm]: InternLM2-20B backbone 48L d_model=6144 48H
+(GQA kv=8) d_ff=16384 vocab=92553; InternViT frontend STUBBED
+(input_specs supplies patch embeddings). [arXiv:2404.16821; hf]"""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab=92_553, head_dim=128,
+    frontend="vision_patches", n_prefix=256,
+)
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        FULL, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256, n_prefix=8, q_chunk=32, loss_chunk=32,
+        remat=False)

@@ -1,0 +1,18 @@
+"""mistral-large-123b [dense]: 88L d_model=12288 96H (GQA kv=8)
+d_ff=28672 vocab=32768. [hf:mistralai/Mistral-Large-Instruct-2407;
+unverified]"""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8,
+    d_ff=28672, vocab=32_768, head_dim=128,
+    fsdp_over_pod=True,
+)
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        FULL, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256, q_chunk=32, loss_chunk=32, remat=False,
+        fsdp_over_pod=False)

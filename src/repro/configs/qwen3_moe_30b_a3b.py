@@ -1,0 +1,18 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4) expert d_ff=768
+vocab=151936, MoE 128 experts top-8, qk-norm (Qwen3 family).
+[hf:Qwen/Qwen3-30B-A3B; hf]"""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4,
+    d_ff=768, vocab=151_936,
+    n_experts=128, top_k=8, expert_d_ff=768, qk_norm=True,
+)
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        FULL, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=48, vocab=256, n_experts=8, top_k=2, expert_d_ff=48,
+        q_chunk=32, loss_chunk=32, remat=False)

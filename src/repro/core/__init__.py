@@ -1,0 +1,49 @@
+"""Core: the paper's best-effort guideline, reified.
+
+Public surface:
+  OptLevel / Step / BestEffortConfig  — the five steps as config
+  recommend / comm_bound_filter       — bottleneck -> next step
+  refine_modelled / refine_compiled   — the iterative refinement drivers
+  Roofline / roofline_from_compiled   — 3-term analysis of compiled programs
+  KernelProfile / kernel_time / MACHSUITE_PROFILES — faithful FPGA model
+  TPU_V5E / FPGA_2012                 — platform constants
+"""
+
+from repro.core.analyzer import (
+    Roofline,
+    extract_cost,
+    roofline_from_compiled,
+)
+from repro.core.costmodel import (
+    MACHSUITE_PROFILES,
+    KernelProfile,
+    kernel_time,
+    paper_validation_table,
+    refinement_curve,
+)
+from repro.core.guideline import (
+    COMM_BOUND_THRESHOLD,
+    Recommendation,
+    comm_bound_filter,
+    recommend,
+)
+from repro.core.hlo_stats import HloStats, parse_hlo, shape_bytes
+from repro.core.hw import FPGA_2012, TPU_V5E
+from repro.core.optlevel import (
+    ALL_LEVELS,
+    STEP_ORDER,
+    BestEffortConfig,
+    OptLevel,
+    Step,
+)
+from repro.core.refine import RefineRecord, refine_compiled, refine_modelled
+
+__all__ = [
+    "ALL_LEVELS", "BestEffortConfig", "COMM_BOUND_THRESHOLD", "FPGA_2012",
+    "HloStats", "KernelProfile", "MACHSUITE_PROFILES", "OptLevel",
+    "Recommendation", "RefineRecord", "Roofline", "STEP_ORDER", "Step",
+    "TPU_V5E", "comm_bound_filter", "extract_cost", "kernel_time",
+    "paper_validation_table", "parse_hlo", "recommend", "refine_compiled",
+    "refine_modelled", "refinement_curve", "roofline_from_compiled",
+    "shape_bytes",
+]

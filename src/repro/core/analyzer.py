@@ -1,0 +1,177 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+This is the TPU analog of the paper's execution-time breakdown (Fig. 3/7/11):
+instead of DRAM-vs-compute wall-time bars measured on the board, we derive
+
+    compute term    = HLO_FLOPs        / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes        / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+from ``compiled.cost_analysis()`` and the post-optimization HLO text
+(collective bytes are not in cost_analysis; see ``core.hlo_stats``).
+
+NOTE on normalization: ``cost_analysis()`` runs on the SPMD-partitioned
+module, so its flops/bytes are *per device*.  We therefore multiply by the
+device count to obtain module-total HLO_FLOPs/HLO_bytes before applying the
+formulas above (equivalently: per-device work over per-chip peak).  The same
+holds for collective operand bytes parsed from the partitioned HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import hlo_stats
+from repro.core.hw import TPU_V5E, TpuSpec
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one (program, mesh) pair."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # Raw, per-device:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    # Terms, in seconds:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # Accounting:
+    model_flops: float = 0.0            # 6*N*D (dense) or 6*N_active*D (MoE)
+    peak_memory_bytes: float = 0.0      # per-device, from memory_analysis
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time if nothing overlaps badly: max of terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound implied by the terms: useful compute time
+        over the bounding term (1.0 == useful work runs at chip peak)."""
+        if self.step_time_s == 0:
+            return 0.0
+        useful_s = self.model_flops / (self.chips * TPU_V5E.peak_bf16_flops)
+        return useful_s / self.step_time_s
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["step_time_s"] = self.step_time_s
+        d["useful_flops_fraction"] = self.useful_flops_fraction
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def _cost_value(cost: dict, *keys: str) -> float:
+    for k in keys:
+        if k in cost and cost[k] is not None:
+            try:
+                v = float(cost[k])
+            except (TypeError, ValueError):
+                continue
+            if v >= 0:
+                return v
+    return 0.0
+
+
+def extract_cost(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def roofline_from_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    model_flops: float = 0.0,
+    spec: TpuSpec = TPU_V5E,
+    hlo_text: str = None,
+    notes: str = "",
+) -> Roofline:
+    cost = extract_cost(compiled)
+    flops = _cost_value(cost, "flops")
+    bytes_accessed = _cost_value(cost, "bytes accessed", "bytes_accessed")
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    stats = hlo_stats.parse_hlo(text)
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "peak": getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0),
+            "args": getattr(ma, "argument_size_in_bytes", 0),
+            "out": getattr(ma, "output_size_in_bytes", 0),
+        }
+    except Exception:  # pragma: no cover - backend-dependent
+        mem = {"peak": 0, "args": 0, "out": 0}
+
+    # Per-device -> module totals (see module docstring).
+    total_flops = flops * chips
+    total_bytes = bytes_accessed * chips
+    total_coll = stats.collective_bytes * chips
+
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        collective_bytes_per_device=stats.collective_bytes,
+        compute_s=total_flops / (chips * spec.peak_bf16_flops),
+        memory_s=total_bytes / (chips * spec.hbm_bw),
+        collective_s=total_coll / (chips * spec.ici_link_bw),
+        model_flops=model_flops,
+        peak_memory_bytes=mem["peak"],
+        argument_bytes=mem["args"],
+        output_bytes=mem["out"],
+        collective_breakdown={
+            k: v.operand_bytes for k, v in stats.collectives.items()
+        },
+        notes=notes,
+    )
+
+
+def save_roofline(r: Roofline, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(r.to_dict(), f, indent=2)
+
+
+def load_roofline(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

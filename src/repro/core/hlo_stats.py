@@ -1,0 +1,327 @@
+"""Parse HLO text for the statistics ``cost_analysis()`` does not expose.
+
+The roofline's collective term requires summing operand bytes over every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` in the *post-optimization* HLO
+(``compiled.as_text()``), since that is where SPMD partitioning has already
+materialized the real collective schedule.
+
+Also provides an op census (for remat/duplication forensics) and a
+reshape/transpose count (layout-mismatch smell, per the brief's hints).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+
+# Bytes per element for HLO primitive types.
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s2": 1, "u2": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e4m3": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# One array shape like ``bf16[128,1024]{1,0:T(8,128)}`` or ``f32[]``.
+_SHAPE_RE = re.compile(
+    r"\b([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?"
+)
+
+# ``%name = `` prefix of an instruction definition line.
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\s*\(")
+
+
+def _consume_shape(s: str):
+    """Split ``s`` into (shape_text, rest). Handles tuple shapes and layout
+    annotations containing parens, e.g. ``f32[8,128]{1,0:T(8,128)}``."""
+    s = s.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[: i + 1], s[i + 1:]
+        return s, ""
+    m = re.match(r"[a-z][a-z0-9]*\[[0-9,]*\]", s)
+    if not m:
+        return "", s
+    end = m.end()
+    if end < len(s) and s[end] == "{":
+        depth = 0
+        for i in range(end, len(s)):
+            if s[i] == "{":
+                depth += 1
+            elif s[i] == "}":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+    return s[:end], s[end:]
+
+
+def _parse_instr(ln: str):
+    """Parse one instruction line -> (name, shape_text, opcode, args_text)."""
+    m = _DEF_RE.match(ln)
+    if not m:
+        return None
+    name = m.group(1)
+    shape_text, rest = _consume_shape(ln[m.end():])
+    if not shape_text:
+        return None
+    m2 = _OPCODE_RE.match(rest)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    paren = rest[m2.end():]
+    depth, end = 1, len(paren)
+    for i, ch in enumerate(paren):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return name, shape_text, opcode, paren[:end]
+
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPCODES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Total bytes of every array shape appearing in ``shape_text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveInfo:
+    opcode: str
+    operand_bytes: int
+    result_bytes: int
+    count: int = 1
+
+
+@dataclasses.dataclass
+class HloStats:
+    """Aggregate statistics over one HLO module's text."""
+
+    collective_bytes: int
+    collectives: dict            # opcode -> CollectiveInfo (aggregated)
+    op_census: Counter           # opcode -> count
+    reshape_transpose_count: int
+    fusion_count: int
+    instruction_count: int
+
+    def bytes_by_opcode(self) -> dict:
+        return {k: v.operand_bytes for k, v in self.collectives.items()}
+
+
+def _base_opcode(opcode: str) -> str:
+    """Map async start/done variants onto their base collective opcode."""
+    for base in COLLECTIVE_OPCODES:
+        if opcode == base or opcode == base + "-start":
+            return base
+    return ""
+
+
+def parse_hlo(text: str) -> HloStats:
+    """One pass over HLO text, resolving operand shapes via a symbol table.
+
+    Async collectives appear as ``<op>-start`` / ``<op>-done`` pairs; only the
+    ``-start`` (or the sync form) is counted, so nothing is double-counted.
+    """
+    # Pass 1: symbol table  name -> result bytes.
+    sym: dict = {}
+    parsed = []
+    for ln in text.splitlines():
+        rec = _parse_instr(ln)
+        if rec is None:
+            continue
+        name, shape_text, opcode, args = rec
+        rb = shape_bytes(shape_text)
+        sym[name] = rb
+        parsed.append((name, shape_text, opcode, args, rb, ln))
+
+    census: Counter = Counter()
+    collectives: dict = {}
+    total_coll_bytes = 0
+    reshapes = 0
+    fusions = 0
+
+    for name, shape_text, opcode, args, result_bytes, ln_full in parsed:
+        census[opcode] += 1
+        if opcode in ("reshape", "transpose", "copy"):
+            reshapes += 1
+        if opcode == "fusion":
+            fusions += 1
+        base = _base_opcode(opcode)
+        if not base:
+            continue
+        # Operand bytes: prefer inline operand shapes inside the call parens;
+        # fall back to symbol-table lookup of operand names.
+        op_bytes = shape_bytes(args)
+        if op_bytes == 0:
+            for oname in _OPERAND_NAME_RE.findall(args):
+                op_bytes += sym.get(oname, 0)
+        if op_bytes == 0:
+            # Last resort: for -start ops the result is a tuple (in, out);
+            # use result bytes as a proxy.
+            op_bytes = result_bytes
+        # XLA's bf16->f32 all-reduce *promotion* (CPU backend) widens the
+        # wire payload artificially; the TPU target reduces bf16 on the
+        # wire (f32 accumulate inside the reduction unit).  Count promoted
+        # collectives at their pre-promotion width.
+        if "_promoted" in ln_full:
+            op_bytes //= 2
+        info = collectives.setdefault(
+            base, CollectiveInfo(base, 0, 0, 0)
+        )
+        info.operand_bytes += op_bytes
+        info.result_bytes += result_bytes
+        info.count += 1
+        total_coll_bytes += op_bytes
+
+    return HloStats(
+        collective_bytes=total_coll_bytes,
+        collectives=collectives,
+        op_census=census,
+        reshape_transpose_count=reshapes,
+        fusion_count=fusions,
+        instruction_count=len(parsed),
+    )
+
+
+def top_collectives(text: str, n: int = 15) -> list:
+    """The n largest individual collective instructions: (opcode,
+    operand_bytes, result_shape) — the §Perf forensic that tells you WHICH
+    tensor a fat all-reduce is moving."""
+    sym: dict = {}
+    rows = []
+    for ln in text.splitlines():
+        rec = _parse_instr(ln)
+        if rec is None:
+            continue
+        name, shape_text, opcode, args = rec
+        sym[name] = shape_bytes(shape_text)
+        base = _base_opcode(opcode)
+        if not base:
+            continue
+        op_bytes = shape_bytes(args)
+        if op_bytes == 0:
+            for oname in _OPERAND_NAME_RE.findall(args):
+                op_bytes += sym.get(oname, 0)
+        if op_bytes == 0:
+            op_bytes = sym[name]
+        rows.append((base, op_bytes, shape_text[:64]))
+    rows.sort(key=lambda r: -r[1])
+    return rows[:n]
+
+
+# Opcodes whose results genuinely materialize in HBM on the TPU target.
+# Elementwise chains (convert/add/multiply/select/broadcast/...) fuse into
+# their consumers under the TPU XLA pipeline; the CPU backend we lower on
+# leaves them unfused, which inflates raw "bytes accessed" several-fold
+# (see EXPERIMENTS §Perf forensics).  ``fused_bytes`` re-censuses the
+# module counting only fusion-boundary traffic — the TPU-target estimate.
+MATERIALIZING_OPS = frozenset({
+    "dot", "convolution", "fusion", "custom-call", "copy",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "concatenate", "pad", "reduce", "reduce-window", "sort", "rng",
+    "cholesky", "triangular-solve",
+} | set(COLLECTIVE_OPCODES))
+
+
+def fused_bytes(text: str) -> int:
+    """TPU-fusion-adjusted byte census: operand+result bytes summed over
+    materializing ops only (fusion operands resolve through the symbol
+    table, so a fusion's internal ops are never double-counted).
+
+    In-place update ops (scatter / dynamic-update-slice) alias their
+    destination buffer on TPU: only the written region moves, so they are
+    counted at 2x the non-destination operand bytes (read-modify-write of
+    the touched rows) instead of the full buffer the XLA cost model
+    charges — this is what makes decode-cell KV-cache updates sane."""
+    sym: dict = {}
+    total = 0
+    for ln in text.splitlines():
+        rec = _parse_instr(ln)
+        if rec is None:
+            continue
+        name, shape_text, opcode, args = rec
+        rb = shape_bytes(shape_text)
+        sym[name] = rb
+        base = _base_opcode(opcode) or opcode
+        if base not in MATERIALIZING_OPS:
+            continue
+        ops = [sym.get(o, 0) for o in _OPERAND_NAME_RE.findall(args)]
+        if base in ("scatter", "dynamic-update-slice") and ops:
+            total += 2 * (sum(ops) - max(ops))   # updates + indices, r+w
+            continue
+        total += rb + sum(ops)
+    return total
+
+
+def bytes_by_opcode(text: str, n: int = 12) -> list:
+    """Aggregate (operand+result) bytes per opcode over the module — the
+    fusion-boundary traffic census that approximates what cost_analysis
+    counts as "bytes accessed".  Returns the top-n (opcode, bytes, count)."""
+    sym: dict = {}
+    agg: Counter = Counter()
+    cnt: Counter = Counter()
+    for ln in text.splitlines():
+        rec = _parse_instr(ln)
+        if rec is None:
+            continue
+        name, shape_text, opcode, args = rec
+        rb = shape_bytes(shape_text)
+        sym[name] = rb
+        ob = 0
+        for oname in _OPERAND_NAME_RE.findall(args):
+            ob += sym.get(oname, 0)
+        if opcode in ("parameter", "constant", "iota"):
+            continue
+        agg[opcode] += rb + ob
+        cnt[opcode] += 1
+    return [(op, b, cnt[op]) for op, b in agg.most_common(n)]
+
+
+def remat_duplication(census: Counter) -> dict:
+    """Heuristic remat detector: ops whose counts look duplicated.
+
+    Returns {opcode: count} for the compute-heavy opcodes; the refinement
+    driver compares counts across policies to spot recompute blowups.
+    """
+    heavy = ("dot", "convolution", "fusion", "custom-call")
+    return {k: census[k] for k in heavy if census.get(k)}

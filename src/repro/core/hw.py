@@ -1,0 +1,97 @@
+"""Hardware constants for the two platforms this repo reasons about.
+
+``TPU_V5E`` is the TARGET platform (the container is CPU-only; all perf
+numbers are derived analytically from compiled artifacts against these
+constants, per the brief).
+
+``FPGA_2012`` reproduces the paper's experimental platform (Table 2 of
+Cong et al. 2018) and is used by ``core.costmodel`` to validate the
+faithful reproduction against the paper's own reported numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """One TPU chip + its pod interconnect."""
+
+    name: str
+    peak_bf16_flops: float      # FLOP/s per chip
+    peak_int8_ops: float        # OP/s per chip
+    hbm_bytes: int              # per chip
+    hbm_bw: float               # bytes/s per chip
+    vmem_bytes: int             # per core
+    ici_link_bw: float          # bytes/s per link (one direction)
+    ici_links: int              # links per chip in the 2D torus
+    dcn_bw: float               # bytes/s per chip for cross-pod (data-center net)
+    mxu_shape: tuple = (128, 128)
+    vpu_lanes: tuple = (8, 128)
+    clock_hz: float = 0.94e9
+
+    # Derived helpers -----------------------------------------------------
+    def compute_time(self, flops: float, chips: int = 1) -> float:
+        return flops / (chips * self.peak_bf16_flops)
+
+    def memory_time(self, bytes_: float, chips: int = 1) -> float:
+        return bytes_ / (chips * self.hbm_bw)
+
+    def collective_time(self, bytes_: float, chips: int = 1) -> float:
+        # Per the brief: collective term = collective_bytes / (chips x link_bw).
+        return bytes_ / (chips * self.ici_link_bw)
+
+
+# Constants fixed by the brief: 197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s/link ICI.
+TPU_V5E = TpuSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    peak_int8_ops=394e12,
+    hbm_bytes=16 * 1024**3,
+    hbm_bw=819e9,
+    vmem_bytes=128 * 1024**2,
+    ici_link_bw=50e9,
+    ici_links=4,
+    dcn_bw=6.25e9,   # ~50 Gb/s per chip across pods, conservative
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FpgaSpec:
+    """The paper's 2012 CPU-FPGA platform (Table 2 + §3 constants)."""
+
+    name: str = "virtex7_sdaccel_2015_4"
+    clock_hz: float = 200e6                  # FPGA fabric clock
+    cpu_clock_hz: float = 1.9e9              # Xeon E5-2420
+    dram_bw: float = 12.8e9                  # device DDR3-1600, bytes/s
+    pcie_bw: float = 8e9                     # PCIe gen3 x8, bytes/s
+    dram_init_cycles: int = 100              # per-burst initiation (~500 ns)
+    bram_total_bytes: int = 4 * 1024**2      # usable for accelerators (~4 MB)
+    bram_blocks: int = 3000                  # 18 Kb blocks on the fabric
+    bram_block_bits: int = 18 * 1024
+    bram_block_max_width: int = 36           # bits, single block
+    axi_bus_bits: int = 512                  # max burst datapath width
+    max_pe: int = 128                        # paper sweeps 1..128 PEs
+
+    @property
+    def cycle_s(self) -> float:
+        return 1.0 / self.clock_hz
+
+    def burst_time(self, payload_bytes: float, width_bits: int = 512) -> float:
+        """Time for one DRAM burst: init overhead + streaming at bus width.
+
+        The paper's model (§3.2): 100 cycles init + ~1 cycle per beat.
+        A beat moves ``width_bits`` bits.
+        """
+        beats = payload_bytes * 8.0 / width_bits
+        return (self.dram_init_cycles + beats) * self.cycle_s
+
+
+FPGA_2012 = FpgaSpec()
+
+# Mesh/pod geometry used throughout (fixed by the brief).
+SINGLE_POD_SHAPE = (16, 16)            # axes ("data", "model") = 256 chips
+MULTI_POD_SHAPE = (2, 16, 16)          # axes ("pod", "data", "model") = 512 chips
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512

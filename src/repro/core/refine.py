@@ -1,0 +1,102 @@
+"""Data-driven iterative refinement driver (the paper's outer loop).
+
+Two backends:
+
+  * ``refine_modelled`` — drives a ``costmodel.KernelProfile`` up the
+    O0..O5 ladder exactly as the paper does its three iterations,
+    re-measuring the (modelled) breakdown each time and letting the
+    guideline pick the next step.  This reproduces the *process*, not just
+    the endpoint, and is what ``examples/machsuite_refine.py`` prints.
+
+  * ``refine_compiled`` — the TPU-native version: takes a callable that
+    (re)builds a jitted program for a given ``BestEffortConfig``, lowers +
+    compiles it, extracts roofline terms, and asks the guideline for the
+    next step.  This is the hillclimbing harness used in EXPERIMENTS §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import costmodel
+from repro.core.analyzer import Roofline
+from repro.core.guideline import Recommendation, recommend
+from repro.core.optlevel import STEP_ORDER, BestEffortConfig, OptLevel
+
+
+@dataclasses.dataclass
+class RefineRecord:
+    level: OptLevel
+    breakdown: dict
+    recommendation: str
+    speedup_vs_baseline: float
+
+
+def refine_modelled(
+    profile: costmodel.KernelProfile,
+    *,
+    hw=None,
+    cache_bytes: float = 64 * 1024,
+    pe: int = 128,
+) -> list:
+    """Walk the ladder, logging breakdown + recommendation per level."""
+    hw = hw or costmodel.FPGA_2012
+    records = []
+    t0 = None
+    level = OptLevel.O0
+    while True:
+        t = costmodel.kernel_time(
+            profile, level, hw, cache_bytes=cache_bytes, pe=pe
+        )
+        if t0 is None:
+            t0 = t["system_s"]
+        rec = recommend(
+            level=level,
+            compute_s=t["compute_s"],
+            memory_s=t["dram_s"],
+            offload_s=t["pcie_s"],
+            baseline_s=profile.cpu_time_s,
+        )
+        records.append(
+            RefineRecord(
+                level=level,
+                breakdown={k: t[k] for k in ("dram_s", "compute_s", "pcie_s",
+                                             "kernel_s", "system_s")},
+                recommendation=str(rec),
+                speedup_vs_baseline=t0 / t["system_s"],
+            )
+        )
+        if rec.stop or rec.step is None or level == OptLevel.O5:
+            break
+        # Apply the recommended step = move to the level that includes it.
+        level = OptLevel(STEP_ORDER.index(rec.step) + 1)
+    return records
+
+
+def refine_compiled(
+    build_and_compile,
+    *,
+    max_iters: int = 6,
+    start: BestEffortConfig = None,
+) -> list:
+    """TPU-native refinement: ``build_and_compile(cfg) -> Roofline``.
+
+    The callable re-lowers the program under ``cfg`` and returns a
+    ``Roofline``; the guideline chooses the next step from its terms.
+    Returns [(cfg, roofline, recommendation), ...].
+    """
+    cfg = start or BestEffortConfig(level=OptLevel.O0)
+    out = []
+    for _ in range(max_iters):
+        rf: Roofline = build_and_compile(cfg)
+        rec: Recommendation = recommend(
+            level=cfg.level,
+            compute_s=rf.compute_s,
+            memory_s=rf.memory_s,
+            collective_s=rf.collective_s,
+        )
+        out.append((cfg, rf, str(rec)))
+        if rec.stop or rec.step is None:
+            break
+        cfg = cfg.with_level(OptLevel(STEP_ORDER.index(rec.step) + 1))
+    return out

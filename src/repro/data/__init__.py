@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLM, Prefetcher,  # noqa: F401
+                                 make_pipeline)

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel is a subpackage with the repo-standard triple:
+
+  kernel.py — ``pl.pallas_call`` + explicit ``BlockSpec`` VMEM tiling
+  ops.py    — the jit'd public wrapper (shape plumbing, level knobs)
+  ref.py    — the pure-jnp oracle the tests assert against
+
+The container is CPU-only: kernels target TPU (BlockSpec shapes chosen for
+VMEM/MXU) and are validated in ``interpret=True`` mode, which executes the
+kernel body on CPU.
+
+Kernels:
+
+  tiled_matmul    — the paper's Fig. 4 ladder transplanted to a TPU matmul:
+                    block staging (O1), grid software pipelining (O2),
+                    parallel tile grid (O3), double-buffer-aware block
+                    sizing (O4), bf16 lane packing w/ f32 accum (O5)
+  flash_attention — blocked causal attention (online softmax), the
+                    data-caching + pipelining steps applied to attention
+  rwkv6_wkv       — RWKV-6 chunked WKV recurrence (state in VMEM scratch,
+                    chunk grid = the load-compute-store rotation)
+  mamba2_ssd      — Mamba-2 SSD chunked scan, same structure
+"""
+
+from repro.kernels.tiled_matmul import ops as tiled_matmul  # noqa: F401
+from repro.kernels.flash_attention import ops as flash_attention  # noqa: F401
+from repro.kernels.rwkv6_wkv import ops as rwkv6_wkv  # noqa: F401
+from repro.kernels.mamba2_ssd import ops as mamba2_ssd  # noqa: F401

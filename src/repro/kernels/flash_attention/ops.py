@@ -1,0 +1,29 @@
+"""Public wrapper: GQA-aware flash attention entry point."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (B, S, H, D); k, v: (B, S, Hkv, D) with H % Hkv == 0.
+
+    Returns (B, S, H, D).  KV heads are repeated to H (the wrapper's job;
+    the kernel sees flat (B*H, S, D) streams).
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    to_flat = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    out = flash_attention_pallas(
+        to_flat(q), to_flat(k), to_flat(v), causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,1 @@
+from repro.kernels.mamba2_ssd.ops import ssd  # noqa: F401

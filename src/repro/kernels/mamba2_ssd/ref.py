@@ -1,0 +1,22 @@
+"""Pure-jnp sequential oracle for the SSD kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bs, Cs, s0):
+    """Step-by-step recurrence.  x: (B,S,H,P); dt: (B,S,H); A: (H,);
+    Bs, Cs: (B,S,N); s0: (B,H,P,N) f32."""
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp            # (B,H,P),(B,H),(B,N)
+        la = dt_t.astype(jnp.float32) * A    # (B,H)
+        decay = jnp.exp(la)
+        upd = jnp.einsum("bhp,bn,bh->bhpn", x_t.astype(jnp.float32),
+                         B_t.astype(jnp.float32), dt_t.astype(jnp.float32))
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+        return state, y
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0)
+    final, ys = jax.lax.scan(step, s0, (tm(x), tm(dt), tm(Bs), tm(Cs)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

@@ -1,0 +1,1 @@
+from repro.kernels.rwkv6_wkv.ops import wkv  # noqa: F401

@@ -1,0 +1,20 @@
+"""Pure-jnp sequential oracle for the WKV kernel (flat (BH, ...) layout)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, lw, u, s0):
+    """r,k,v,lw: (BH, S, N); u: (BH, N); s0: (BH, N, N) f32."""
+    def step(state, inp):
+        r_t, k_t, v_t, lw_t = inp                 # (BH, N)
+        kv = jnp.einsum("bc,bn->bcn", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y = jnp.einsum("bc,bcn->bn", r_t.astype(jnp.float32),
+                       state + u.astype(jnp.float32)[..., None] * kv)
+        state = state * jnp.exp(lw_t.astype(jnp.float32))[..., None] + kv
+        return state, y
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0)
+    final, ys = jax.lax.scan(step, s0, (tm(r), tm(k), tm(v), tm(lw)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final

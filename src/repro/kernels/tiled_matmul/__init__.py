@@ -1,0 +1,1 @@
+from repro.kernels.tiled_matmul.ops import matmul  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the tiled matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,158 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing harness (EXPERIMENTS.md §Perf).
+
+Lowers one (arch x shape) cell on the production mesh with explicit config
+overrides, extracts the three roofline terms (via the unrolled cost twin),
+and prints HLO forensics (top collectives, op census, remat duplication)
+so each hypothesis -> change -> measure cycle is one command:
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch qwen3-8b \
+      --shape train_4k --tag baseline
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch qwen3-8b \
+      --shape train_4k --tag bf16params --set param_dtype=bfloat16
+
+Results append to experiments/perf/<arch>__<shape>.jsonl.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config, model_flops
+from repro.core import hlo_stats
+from repro.core.analyzer import extract_cost
+from repro.core.hw import TPU_V5E
+from repro.launch import dryrun, steps
+from repro.launch.mesh import make_production_mesh, mesh_chips
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "perf")
+
+
+def parse_value(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    return v
+
+
+def apply_overrides(cfg, overrides: dict):
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def measure(arch: str, shape_name: str, overrides: dict, *,
+            multi_pod: bool = False, forensics: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    cfg = apply_overrides(get_config(arch), overrides)
+    shape = SHAPES[shape_name]
+
+    t0 = time.time()
+    art = dryrun._build(cfg, shape, mesh)
+    lowered = art.lower()
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+
+    # twin terms (true trip counts)
+    tw = dryrun.cost_twin(cfg, shape, mesh)
+    coll_total = sum(tw["coll"].values())
+    rec = {
+        "arch": arch, "shape": shape_name, "overrides": overrides,
+        "chips": chips,
+        "flops_per_device": tw["flops"],
+        "bytes_per_device": tw["bytes"],
+        "fused_bytes_per_device": tw["fused_bytes"],
+        "collective_bytes_per_device": coll_total,
+        "collective_breakdown": tw["coll"],
+        "compute_s": tw["flops"] / TPU_V5E.peak_bf16_flops,
+        "memory_s": tw["bytes"] / TPU_V5E.hbm_bw,
+        "memory_fused_s": tw["fused_bytes"] / TPU_V5E.hbm_bw,
+        "collective_s": coll_total / TPU_V5E.ici_link_bw,
+        "model_flops": model_flops(cfg, shape),
+        "peak_temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "wall_s": round(time.time() - t0, 1),
+    }
+    terms = {k: rec[k + "_s"] for k in ("compute", "memory", "collective")}
+    rec["dominant"] = max(terms, key=terms.get)
+    rec["step_time_s"] = max(terms.values())
+    useful_s = rec["model_flops"] / (chips * TPU_V5E.peak_bf16_flops)
+    rec["roofline_fraction"] = useful_s / rec["step_time_s"]
+    # TPU-fusion-adjusted view (same formula, fused memory term)
+    fterms = dict(terms, memory=rec["memory_fused_s"])
+    rec["dominant_fused"] = max(fterms, key=fterms.get)
+    rec["step_time_fused_s"] = max(fterms.values())
+    rec["roofline_fraction_fused"] = useful_s / rec["step_time_fused_s"]
+    rec["useful_flops_fraction"] = (
+        rec["model_flops"] / (tw["flops"] * chips) if tw["flops"] else 0)
+
+    if forensics:
+        # forensics on the 2-unit unrolled twin (true per-layer picture)
+        c1, c2, K = dryrun.twin_cfgs(cfg)
+        art2 = dryrun._build(c2, shape, mesh)
+        txt = art2.lower().compile().as_text()
+        stats = hlo_stats.parse_hlo(txt)
+        rec["forensics"] = {
+            "collectives_2unit": {
+                k: {"bytes": v.operand_bytes, "count": v.count}
+                for k, v in stats.collectives.items()},
+            "top_collectives_2unit": [
+                {"op": op, "bytes": b, "shape": sh}
+                for op, b, sh in hlo_stats.top_collectives(txt, 12)],
+            "bytes_by_opcode_2unit": [
+                {"op": op, "GiB": round(b / 2**30, 2), "count": c}
+                for op, b, c in hlo_stats.bytes_by_opcode(txt, 12)],
+            "heavy_ops_2unit": hlo_stats.remat_duplication(stats.op_census),
+            "reshape_transpose_2unit": stats.reshape_transpose_count,
+            "instructions_2unit": stats.instruction_count,
+        }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="key=value")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-forensics", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in getattr(args, "set"):
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+
+    rec = measure(args.arch, args.shape, overrides,
+                  multi_pod=args.multi_pod,
+                  forensics=not args.no_forensics)
+    rec["tag"] = args.tag
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{args.arch}__{args.shape}.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k != "forensics"}, indent=1))
+    if "forensics" in rec:
+        print("--- forensics (2-unit twin) ---")
+        print(json.dumps(rec["forensics"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

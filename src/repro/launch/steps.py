@@ -1,0 +1,217 @@
+"""Step construction: train_step / serve_step with full sharding plumbing.
+
+Shared by the real drivers (``launch/train.py``, ``launch/serve.py``), the
+multi-pod dry-run (``launch/dryrun.py``) and the tests.  Everything here is
+mesh-parametric: pass any mesh (production 16x16 / 2x16x16 or a tiny host
+mesh) and the same code lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import get_model, input_specs, decode_input_specs
+from repro.models.layers import param_shapes
+from repro.optim import adamw
+from repro.parallel.sharding import Sharder, make_rules, use_sharder
+
+
+@dataclasses.dataclass
+class TrainArtifacts:
+    cfg: ArchConfig
+    model: Any
+    sharder: Sharder
+    step_fn: Any                 # (params, opt, batch) -> (params, opt, metrics)
+    param_specs: Any             # ShapeDtypeStruct tree
+    opt_specs: Any
+    batch_specs: Any
+    in_shardings: tuple
+    out_shardings: tuple
+    donate: tuple = (0, 1)
+
+    def jit(self):
+        return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        with self.sharder.mesh, use_sharder(self.sharder):
+            return self.jit().lower(self.param_specs, self.opt_specs,
+                                    self.batch_specs)
+
+
+@dataclasses.dataclass
+class ServeArtifacts:
+    cfg: ArchConfig
+    model: Any
+    sharder: Sharder
+    step_fn: Any                 # (params, cache, tokens, pos) -> (tok, cache)
+    param_specs: Any
+    cache_specs: Any
+    token_spec: Any
+    pos_spec: Any
+    in_shardings: tuple
+    out_shardings: tuple
+    donate: tuple = (1,)
+
+    def jit(self):
+        return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        with self.sharder.mesh, use_sharder(self.sharder):
+            return self.jit().lower(self.param_specs, self.cache_specs,
+                                    self.token_spec, self.pos_spec)
+
+
+def _batch_axes(specs: dict) -> dict:
+    out = {}
+    for k, s in specs.items():
+        out[k] = ("batch",) + (None,) * (len(s.shape) - 1)
+    return out
+
+
+def _cast_params(cfg: ArchConfig, params):
+    """§Perf knob (``cast_params_once``): cast f32 params to the compute
+    dtype ONCE per step while still FSDP-sharded, so the implicit
+    all-gathers move half the bytes and per-layer ``astype`` casts become
+    no-ops.  Gradients flow through the cast, accumulating in f32 (classic
+    mixed precision: f32 master weights live in params/optimizer)."""
+    if not cfg.cast_params_once:
+        return params
+    ct = jnp.dtype(cfg.compute_dtype)
+
+    def cast(x):
+        return x.astype(ct) if x.dtype == jnp.float32 else x
+
+    return jax.tree.map(cast, params)
+
+
+def make_sharder(cfg: ArchConfig, mesh) -> Sharder:
+    return Sharder(mesh, make_rules(mesh, fsdp_over_pod=cfg.fsdp_over_pod))
+
+
+def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                adamw_cfg: Optional[adamw.AdamWConfig] = None,
+                ) -> TrainArtifacts:
+    model = get_model(cfg)
+    acfg = adamw_cfg or adamw.AdamWConfig()
+    sharder = make_sharder(cfg, mesh)
+
+    p_specs = param_shapes(model.defs(), jnp.dtype(cfg.param_dtype))
+    o_specs = adamw.state_spec(acfg, p_specs)
+    b_specs = input_specs(cfg, shape)
+
+    axes = model.axes()
+    p_sh = sharder.tree_shardings(axes, p_specs)
+    o_sh = sharder.tree_shardings(adamw.state_axes(axes), o_specs)
+    b_sh = sharder.tree_shardings(_batch_axes(b_specs), b_specs)
+    scalar = NamedSharding(mesh, P())
+    m_sh = {"loss": scalar, "grad_norm": scalar, "lr": scalar}
+
+    def loss_fn(p, b):
+        return model.loss(_cast_params(cfg, p), b)
+
+    def train_step(params, opt, batch):
+        M = cfg.microbatch
+        if M and M > 1:
+            # Gradient accumulation: scan over M microbatches, f32 grad
+            # accumulator.  Bounds activation memory to one microbatch
+            # (the explicit-data-caching step applied to the batch dim).
+            def split(x):
+                xs = x.reshape((M, x.shape[0] // M) + x.shape[1:])
+                return sharder.constrain(
+                    xs, None, "batch", *((None,) * (x.ndim - 1)))
+
+            micro = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb(carry, b):
+                acc, loss_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, b)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / M, acc, grads)
+                return (acc, loss_acc + loss / M), None
+
+            (grads, loss), _ = jax.lax.scan(mb, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype),
+                                 grads, params)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_p, new_opt, metrics = adamw.update(acfg, grads, opt, params)
+        metrics["loss"] = loss
+        return new_p, new_opt, metrics
+
+    return TrainArtifacts(
+        cfg=cfg, model=model, sharder=sharder, step_fn=train_step,
+        param_specs=p_specs, opt_specs=o_specs, batch_specs=b_specs,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+    )
+
+
+def build_serve(cfg: ArchConfig, shape: ShapeConfig, mesh) -> ServeArtifacts:
+    model = get_model(cfg)
+    sharder = make_sharder(cfg, mesh)
+
+    p_specs = param_shapes(model.defs(), jnp.dtype(cfg.param_dtype))
+    c_specs, t_spec, pos_spec = decode_input_specs(cfg, shape)
+
+    p_sh = sharder.tree_shardings(model.axes(), p_specs)
+    c_sh = sharder.tree_shardings(model.cache_axes(), c_specs)
+    t_sh = sharder.named(("batch", None), t_spec.shape)
+    pos_sh = sharder.named(("batch",), pos_spec.shape)
+
+    def serve_step(params, cache, tokens, positions):
+        logits, new_cache = model.decode_step(_cast_params(cfg, params),
+                                              cache, tokens, positions)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    return ServeArtifacts(
+        cfg=cfg, model=model, sharder=sharder, step_fn=serve_step,
+        param_specs=p_specs, cache_specs=c_specs, token_spec=t_spec,
+        pos_spec=pos_spec,
+        in_shardings=(p_sh, c_sh, t_sh, pos_sh),
+        out_shardings=(t_sh, c_sh),
+    )
+
+
+def build_prefill(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Prefill = forward pass over the full prompt (loss-free), the
+    inference-prefill lowering for the ``prefill_32k`` cells."""
+    model = get_model(cfg)
+    sharder = make_sharder(cfg, mesh)
+    p_specs = param_shapes(model.defs(), jnp.dtype(cfg.param_dtype))
+    b_specs = input_specs(cfg, shape)
+    p_sh = sharder.tree_shardings(model.axes(), p_specs)
+    b_sh = sharder.tree_shardings(_batch_axes(b_specs), b_specs)
+
+    def prefill_step(params, batch):
+        # Forward only; reuse the loss graph without the backward pass.
+        return model.loss(_cast_params(cfg, params), batch)
+
+    art = TrainArtifacts(
+        cfg=cfg, model=model, sharder=sharder, step_fn=prefill_step,
+        param_specs=p_specs, opt_specs=None, batch_specs=b_specs,
+        in_shardings=(p_sh, b_sh),
+        out_shardings=NamedSharding(mesh, P()),
+        donate=(),
+    )
+
+    def lower():
+        with sharder.mesh, use_sharder(sharder):
+            return jax.jit(prefill_step, in_shardings=art.in_shardings,
+                           out_shardings=art.out_shardings).lower(
+                               p_specs, b_specs)
+
+    art.lower = lower
+    return art

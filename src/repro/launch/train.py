@@ -1,0 +1,178 @@
+"""End-to-end training driver.
+
+Wires every subsystem: config -> mesh -> sharded step (steps.py) ->
+deterministic sharded data pipeline (double-buffered prefetch) -> AdamW ->
+async sharded checkpointing -> resilient step loop (retry / restore /
+straggler accounting).  The same driver runs the production cells (on a
+real fleet) and the reduced smoke configs (this container):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt /tmp/ck
+
+Distributed-optimization knobs (the paper's O4/O5 analogs at the fleet
+level): ``--overlap-grad-sync`` applies the cross-pod gradient reduction
+one step late (hiding DCN latency under compute), ``--compress-grads``
+int8-compresses that reduction with error feedback.  Both change the
+update schedule, not the substrate — see runtime/overlap.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke, SHAPES
+from repro.configs.base import ShapeConfig
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import make_pipeline
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw
+from repro.runtime import (CompressedReducer, DelayedGradSync,
+                           ResilientRunner)
+from repro.parallel.sharding import use_sharder
+
+
+def build_state(art, rng):
+    """Init params/opt on the artifact's shardings."""
+    with art.sharder.mesh, use_sharder(art.sharder):
+        params = jax.jit(
+            art.model.init, out_shardings=art.in_shardings[0])(rng)
+        opt = jax.jit(
+            lambda p: adamw.init_state(adamw.AdamWConfig(), p),
+            out_shardings=art.in_shardings[1])(params)
+    return params, opt
+
+
+def train(cfg, shape, *, steps: int = 20, ckpt_dir: str = None,
+          ckpt_every: int = 10, seed: int = 0, mesh=None,
+          overlap_grad_sync: bool = False, compress_grads: bool = False,
+          log_every: int = 1, resume: bool = True) -> dict:
+    mesh = mesh if mesh is not None else make_host_mesh()
+    art = steps_lib.build_train(cfg, shape, mesh)
+    step_jit = None
+    with art.sharder.mesh, use_sharder(art.sharder):
+        step_jit = art.jit()
+
+    # ---- gradient-sync pipeline knobs (multi-pod only) --------------------
+    has_pod = "pod" in mesh.axis_names
+    if (overlap_grad_sync or compress_grads) and not has_pod:
+        print("[train] no pod axis in mesh; overlap/compression knobs "
+              "are no-ops on this mesh")
+
+    rng = jax.random.PRNGKey(seed)
+    params, opt = build_state(art, rng)
+
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    start_step = 0
+    if mgr is not None and resume:
+        restored = mgr.restore_latest(
+            {"params": art.param_specs, "opt": art.opt_specs},
+            shardings={"params": art.in_shardings[0],
+                       "opt": art.in_shardings[1]})
+        if restored is not None:
+            tree, start_step, _ = restored
+            params, opt = tree["params"], tree["opt"]
+            print(f"[train] restored checkpoint at step {start_step}")
+
+    batch_shard = art.in_shardings[2]["tokens"]
+    pipe = make_pipeline(cfg, shape, seed=seed, start_step=start_step,
+                         sharding=batch_shard
+                         if jax.device_count() > 1 else None)
+
+    losses = []
+
+    def one_step(state, step):
+        params, opt = state
+        batch = pipe.get(step)
+        with art.sharder.mesh:
+            params, opt, metrics = step_jit(params, opt, batch)
+        if step % log_every == 0:
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            print(f"[train] step {step:5d} loss {loss:.4f}")
+        return params, opt
+
+    def save(state, step):
+        if mgr is not None:
+            mgr.save_async({"params": state[0], "opt": state[1]}, step=step)
+
+    def restore():
+        if mgr is None:
+            return None
+        mgr.wait()
+        restored = mgr.restore_latest(
+            {"params": art.param_specs, "opt": art.opt_specs},
+            shardings={"params": art.in_shardings[0],
+                       "opt": art.in_shardings[1]})
+        if restored is None:
+            return None
+        tree, step, _ = restored
+        nonlocal_pipe_reset(step)
+        return (tree["params"], tree["opt"]), step
+
+    def nonlocal_pipe_reset(step):
+        nonlocal pipe
+        pipe.close()
+        pipe = make_pipeline(cfg, shape, seed=seed, start_step=step,
+                             sharding=batch_shard
+                             if jax.device_count() > 1 else None)
+
+    runner = ResilientRunner(one_step, save_fn=save, restore_fn=restore,
+                             every=ckpt_every)
+    t0 = time.time()
+    (params, opt), end_step = runner.run(
+        (params, opt), start_step=start_step, n_steps=steps)
+    wall = time.time() - t0
+    if mgr is not None:
+        mgr.save_async({"params": params, "opt": opt}, step=end_step)
+        mgr.close()
+    pipe.close()
+    return {
+        "losses": losses,
+        "steps": end_step - start_step,
+        "wall_s": wall,
+        "events": runner.events,
+        "params": params,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=ARCH_NAMES)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--overlap-grad-sync", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = get_smoke(args.arch)
+        shape = ShapeConfig("smoke_train", args.seq, args.batch, "train")
+    else:
+        cfg = get_config(args.arch)
+        shape = SHAPES[args.shape]
+
+    out = train(cfg, shape, steps=args.steps, ckpt_dir=args.ckpt,
+                ckpt_every=args.ckpt_every, seed=args.seed,
+                overlap_grad_sync=args.overlap_grad_sync,
+                compress_grads=args.compress_grads)
+    first = out["losses"][0][1] if out["losses"] else float("nan")
+    last = out["losses"][-1][1] if out["losses"] else float("nan")
+    print(f"[train] {out['steps']} steps in {out['wall_s']:.1f}s   "
+          f"loss {first:.4f} -> {last:.4f}")
+
+
+if __name__ == "__main__":
+    main()

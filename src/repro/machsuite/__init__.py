@@ -1,0 +1,37 @@
+"""MachSuite kernels in JAX — the paper's faithful benchmark substrate.
+
+Each kernel module exposes:
+
+  make_inputs(rng, scale) -> dict      scaled-down inputs (scale=1.0 is the
+                                       paper's Table 3 size; tests use <<1)
+  oracle(**inputs) -> array            pure-numpy reference
+  run(level, **inputs) -> array        JAX implementation whose *structure*
+                                       follows the paper's refinement ladder
+                                       (O0 naive .. O5 scratchpad-reorg);
+                                       every level is output-identical
+  PROFILE                              the analytic-model profile
+                                       (core.costmodel.MACHSUITE_PROFILES)
+
+The level variants are the paper's Fig. 4 code walk transplanted to JAX:
+  O0  element-at-a-time compute against "DRAM" (per-element dynamic_slice)
+  O1  explicit data caching: batch/tile staging, then compute per element
+  O2  customized pipelining: vectorized/scanned inner loops (II -> 1)
+  O3  PE duplication: vmap over independent jobs (where they exist)
+  O4  double buffering: explicit 3-slot load/compute/store rotation
+  O5  scratchpad reorganization: packed wide-word staging buffers
+"""
+
+from repro.machsuite import aes, bfs, gemm, kmp, nw, sort, spmv, viterbi
+
+KERNELS = {
+    "aes": aes,
+    "bfs": bfs,
+    "gemm": gemm,
+    "kmp": kmp,
+    "nw": nw,
+    "sort": sort,
+    "spmv": spmv,
+    "viterbi": viterbi,
+}
+
+KERNEL_NAMES = tuple(KERNELS)

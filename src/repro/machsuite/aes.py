@@ -1,0 +1,316 @@
+"""AES-256 ECB — the paper's Fig. 2/4 walkthrough kernel.
+
+Table 3: 256-bit key, 64 MB data.  The level ladder below transplants the
+paper's exact code walk (Fig. 4a-d) to JAX:
+
+  O0  block-at-a-time against the full buffer (per-block dynamic_slice =
+      the naive per-access DRAM architecture of Fig. 2)
+  O1  batch staging: scan over BATCH_SIZE slabs, blocks still sequential
+  O2  + vectorize each block's 16 byte-lanes; blocks pipelined via scan
+  O3  + all blocks of a batch encrypted in parallel (PE per block group)
+  O4  + explicit 3-slot load/compute/store rotation (Fig. 4c)
+  O5  + batch slabs staged as packed uint32 wide words (Fig. 4d)
+
+The S-box is *derived* (GF(2^8) inverse + affine), not transcribed, and the
+whole cipher is pinned by the FIPS-197 appendix C.3 test vector in the tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import MACHSUITE_PROFILES
+from repro.machsuite.common import (OptLevel, Step, pack_u8_to_u32, rotate3,
+                                    unpack_u32_to_u8)
+
+PROFILE = MACHSUITE_PROFILES["aes"]
+
+N_ROUNDS = 14                      # AES-256
+BLOCK = 16
+BATCH_BLOCKS = 64                  # paper BATCH_SIZE = 1 KB slabs
+BATCH_BYTES = BATCH_BLOCKS * BLOCK
+PE_NUM = 8                         # paper Fig. 4(b) duplication factor
+
+
+# ---------------------------------------------------------------------------
+# Tables (host-side, derived from first principles)
+# ---------------------------------------------------------------------------
+
+def _gf_mul(a: int, b: int) -> int:
+    p = 0
+    for _ in range(8):
+        if b & 1:
+            p ^= a
+        hi = a & 0x80
+        a = (a << 1) & 0xFF
+        if hi:
+            a ^= 0x1B
+        b >>= 1
+    return p
+
+
+def _make_sbox() -> np.ndarray:
+    inv = np.zeros(256, np.uint8)
+    for x in range(1, 256):
+        for y in range(1, 256):
+            if _gf_mul(x, y) == 1:
+                inv[x] = y
+                break
+    rotl = lambda v, n: ((v << n) | (v >> (8 - n))) & 0xFF
+    sbox = np.zeros(256, np.uint8)
+    for x in range(256):
+        b = int(inv[x])
+        sbox[x] = b ^ rotl(b, 1) ^ rotl(b, 2) ^ rotl(b, 3) ^ rotl(b, 4) ^ 0x63
+    return sbox
+
+
+SBOX = _make_sbox()
+
+# ShiftRows on the FIPS state layout (flat index = r + 4c):
+# out[r + 4c] = in[r + 4*((c + r) % 4)]
+SHIFT_PERM = np.array(
+    [r + 4 * ((c + r) % 4) for c in range(4) for r in range(4)], np.int32
+)
+
+
+def expand_key(key: np.ndarray) -> np.ndarray:
+    """FIPS-197 key expansion for AES-256 -> (15, 16) round keys (uint8)."""
+    key = np.asarray(key, np.uint8)
+    assert key.shape == (32,), key.shape
+    Nk, Nr = 8, N_ROUNDS
+    w = np.zeros((4 * (Nr + 1), 4), np.uint8)
+    w[:Nk] = key.reshape(Nk, 4)
+    rcon = 1
+    for i in range(Nk, 4 * (Nr + 1)):
+        t = w[i - 1].copy()
+        if i % Nk == 0:
+            t = np.roll(t, -1)
+            t = SBOX[t]
+            t[0] ^= rcon
+            rcon = _gf_mul(rcon, 2)
+        elif i % Nk == 4:
+            t = SBOX[t]
+        w[i] = w[i - Nk] ^ t
+    return w.reshape(Nr + 1, 16)
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle
+# ---------------------------------------------------------------------------
+
+def _xtime_np(x):
+    return (((x.astype(np.uint16) << 1) & 0xFF)
+            ^ (((x >> 7) & 1) * 0x1B)).astype(np.uint8)
+
+
+def _mix_columns_np(s):
+    """s: (..., 16) uint8, columns are consecutive 4-byte groups."""
+    c = s.reshape(*s.shape[:-1], 4, 4)
+    a0, a1, a2, a3 = c[..., 0], c[..., 1], c[..., 2], c[..., 3]
+    x0, x1, x2, x3 = map(_xtime_np, (a0, a1, a2, a3))
+    b0 = x0 ^ (x1 ^ a1) ^ a2 ^ a3
+    b1 = a0 ^ x1 ^ (x2 ^ a2) ^ a3
+    b2 = a0 ^ a1 ^ x2 ^ (x3 ^ a3)
+    b3 = (x0 ^ a0) ^ a1 ^ a2 ^ x3
+    return np.stack([b0, b1, b2, b3], axis=-1).reshape(s.shape)
+
+
+def encrypt_blocks_np(blocks: np.ndarray, round_keys: np.ndarray) -> np.ndarray:
+    """blocks: (B, 16) uint8; round_keys: (15, 16)."""
+    s = blocks ^ round_keys[0]
+    for r in range(1, N_ROUNDS):
+        s = SBOX[s]
+        s = s[..., SHIFT_PERM]
+        s = _mix_columns_np(s)
+        s = s ^ round_keys[r]
+    s = SBOX[s]
+    s = s[..., SHIFT_PERM]
+    return s ^ round_keys[N_ROUNDS]
+
+
+def oracle(data: np.ndarray, key: np.ndarray) -> np.ndarray:
+    rk = expand_key(key)
+    blocks = np.asarray(data, np.uint8).reshape(-1, 16)
+    return encrypt_blocks_np(blocks, rk).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# JAX implementation, per level
+# ---------------------------------------------------------------------------
+
+_SBOX_J = jnp.asarray(SBOX)
+_PERM_J = jnp.asarray(SHIFT_PERM)
+
+
+def _xtime(x):
+    return ((x << 1) & 0xFF) ^ (((x >> 7) & 1) * jnp.uint8(0x1B))
+
+
+def _mix_columns(s):
+    c = s.reshape(*s.shape[:-1], 4, 4)
+    a0, a1, a2, a3 = c[..., 0], c[..., 1], c[..., 2], c[..., 3]
+    x0, x1, x2, x3 = map(_xtime, (a0, a1, a2, a3))
+    b0 = x0 ^ (x1 ^ a1) ^ a2 ^ a3
+    b1 = a0 ^ x1 ^ (x2 ^ a2) ^ a3
+    b2 = a0 ^ a1 ^ x2 ^ (x3 ^ a3)
+    b3 = (x0 ^ a0) ^ a1 ^ a2 ^ x3
+    return jnp.stack([b0, b1, b2, b3], axis=-1).reshape(s.shape)
+
+
+def encrypt_blocks(blocks: jax.Array, round_keys: jax.Array) -> jax.Array:
+    """Fully vectorized rounds over (..., 16) uint8 blocks."""
+    s = blocks ^ round_keys[0]
+
+    def round_fn(r, s):
+        s = _SBOX_J[s]
+        s = s[..., _PERM_J]
+        s = _mix_columns(s)
+        return s ^ round_keys[r]
+
+    s = jax.lax.fori_loop(1, N_ROUNDS, round_fn, s)
+    s = _SBOX_J[s]
+    s = s[..., _PERM_J]
+    return s ^ round_keys[N_ROUNDS]
+
+
+def _encrypt_block_bytewise(blk: jax.Array, round_keys: jax.Array):
+    """O0/O1 compute: one 16-byte block, byte loops explicit (fori over the
+    16 lanes for SubBytes/AddRoundKey — the un-pipelined inner loop)."""
+    def sub_ark(s, rk):
+        def body(i, acc):
+            b = _SBOX_J[s[i]]
+            return acc.at[i].set(b ^ rk[i])
+        return jax.lax.fori_loop(0, BLOCK, body, jnp.zeros_like(s))
+
+    s = blk ^ round_keys[0]
+
+    def round_fn(r, s):
+        s = sub_ark(s, jnp.zeros_like(round_keys[r]))   # SubBytes
+        s = s[_PERM_J]
+        s = _mix_columns(s)
+        return s ^ round_keys[r]
+
+    s = jax.lax.fori_loop(1, N_ROUNDS, round_fn, s)
+    s = _SBOX_J[s][_PERM_J]
+    return s ^ round_keys[N_ROUNDS]
+
+
+def _run_o0(data, rk):
+    n_blocks = data.shape[0] // BLOCK
+
+    def body(i, buf):
+        blk = jax.lax.dynamic_slice(buf, (i * BLOCK,), (BLOCK,))
+        enc = _encrypt_block_bytewise(blk, rk)
+        return jax.lax.dynamic_update_slice(buf, enc, (i * BLOCK,))
+
+    return jax.lax.fori_loop(0, n_blocks, body, data)
+
+
+def _run_o1(data, rk):
+    slabs = data.reshape(-1, BATCH_BYTES)
+
+    def per_slab(slab):
+        def body(i, buf):
+            blk = jax.lax.dynamic_slice(buf, (i * BLOCK,), (BLOCK,))
+            enc = _encrypt_block_bytewise(blk, rk)
+            return jax.lax.dynamic_update_slice(buf, enc, (i * BLOCK,))
+        return jax.lax.fori_loop(0, BATCH_BLOCKS, body, slab)
+
+    _, out = jax.lax.scan(lambda _, s: (None, per_slab(s)), None, slabs)
+    return out.reshape(-1)
+
+
+def _run_o2(data, rk):
+    slabs = data.reshape(-1, BATCH_BLOCKS, BLOCK)
+
+    def per_slab(slab):
+        _, out = jax.lax.scan(
+            lambda _, blk: (None, encrypt_blocks(blk, rk)), None, slab
+        )
+        return out
+
+    _, out = jax.lax.scan(lambda _, s: (None, per_slab(s)), None, slabs)
+    return out.reshape(-1)
+
+
+def _run_o3(data, rk):
+    slabs = data.reshape(-1, PE_NUM, BATCH_BLOCKS // PE_NUM, BLOCK)
+
+    def per_slab(slab):                    # (PE, blocks/PE, 16)
+        return jax.vmap(lambda chunk: encrypt_blocks(chunk, rk))(slab)
+
+    _, out = jax.lax.scan(lambda _, s: (None, per_slab(s)), None, slabs)
+    return out.reshape(-1)
+
+
+def _run_o4(data, rk, *, packed=False):
+    """Fig. 4(c): 3-slot rotation.  Phase i loads slab i into slot i%3,
+    computes slot (i-1)%3, stores slot (i-2)%3."""
+    slabs = data.reshape(-1, BATCH_BYTES)
+    n = slabs.shape[0]
+
+    if packed:                              # O5: wide-word staging buffers
+        slabs = pack_u8_to_u32(slabs)
+
+    def compute(slab):
+        u8 = unpack_u32_to_u8(slab) if packed else slab
+        enc = jax.vmap(lambda chunk: encrypt_blocks(chunk, rk))(
+            u8.reshape(PE_NUM, -1, BLOCK)
+        ).reshape(-1)
+        return pack_u8_to_u32(enc) if packed else enc
+
+    bufs0 = {
+        "slots": jnp.zeros((3,) + slabs.shape[1:], slabs.dtype),
+        "out": jnp.zeros_like(slabs),
+    }
+
+    def body(i, slot, bufs):
+        slots = bufs["slots"]
+        # load phase-i input into slot
+        slots = jax.lax.dynamic_update_index_in_dim(
+            slots, slabs[jnp.minimum(i, n - 1)], slot, 0)
+        # compute slot (i-1)%3, store slot content computed at (i-1)
+        c = (i - 1) % 3
+        computed = compute(slots[c])
+        out = jax.lax.cond(
+            i >= 1,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, computed, jnp.maximum(i - 1, 0), 0),
+            lambda o: o,
+            bufs["out"],
+        )
+        return {"slots": slots, "out": out}
+
+    bufs = rotate3(body, n + 1, bufs0)
+    out = bufs["out"]
+    if packed:
+        out = unpack_u32_to_u8(out)
+    return out.reshape(-1)
+
+
+def run(level: OptLevel, data, key) -> jax.Array:
+    """Encrypt ``data`` (uint8, len % BATCH_BYTES == 0) at one opt level."""
+    rk = jnp.asarray(expand_key(np.asarray(key)))
+    data = jnp.asarray(data, jnp.uint8)
+    level = OptLevel(level)
+    if level == OptLevel.O0:
+        return _run_o0(data, rk)
+    if level == OptLevel.O1:
+        return _run_o1(data, rk)
+    if level == OptLevel.O2:
+        return _run_o2(data, rk)
+    if level == OptLevel.O3:
+        return _run_o3(data, rk)
+    if level == OptLevel.O4:
+        return _run_o4(data, rk, packed=False)
+    return _run_o4(data, rk, packed=True)
+
+
+def make_inputs(rng: np.random.Generator, scale: float = 1.0) -> dict:
+    n = max(BATCH_BYTES, int(64e6 * scale) // BATCH_BYTES * BATCH_BYTES)
+    return {
+        "data": rng.integers(0, 256, n, dtype=np.uint8),
+        "key": rng.integers(0, 256, 32, dtype=np.uint8),
+    }

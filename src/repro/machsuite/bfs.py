@@ -1,0 +1,160 @@
+"""BFS (queue-based) — paper Table 3: 4K nodes, 64K edges.
+
+The paper's problem child: chain-dependent (no PE duplication, no double
+buffering — §4.2/§5.1) and PCIe-bound (Table 5: 0.8 -> rejected by the
+communication filter).  The ladder stops structurally at O2:
+
+  O0  faithful queue-based scalar BFS: pop one node per while-iteration,
+      walk its adjacency list element-at-a-time
+  O1  level-synchronous with edge relaxation in staged tiles
+  O2  + fully vectorized per-level relaxation (gather/scatter-min)
+  O3..O5  == O2 (inapplicable; the dependence chain is the kernel)
+
+Output: hop distance per node, -1 if unreachable.
+"""
+
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import MACHSUITE_PROFILES
+from repro.machsuite.common import OptLevel
+
+PROFILE = MACHSUITE_PROFILES["bfs"]
+
+INF = np.int32(2**30)
+EDGE_TILE = 256
+
+
+def oracle(offsets: np.ndarray, neighbors: np.ndarray, edge_src: np.ndarray,
+           source: int) -> np.ndarray:
+    n = len(offsets) - 1
+    dist = np.full(n, -1, np.int32)
+    dist[source] = 0
+    q = collections.deque([int(source)])
+    while q:
+        u = q.popleft()
+        for v in neighbors[offsets[u]:offsets[u + 1]]:
+            if dist[v] < 0:
+                dist[v] = dist[u] + 1
+                q.append(int(v))
+    return dist
+
+
+def _finish(dist):
+    return jnp.where(dist >= INF, -1, dist).astype(jnp.int32)
+
+
+def _run_o0(offsets, neighbors, source):
+    """Queue in a fixed-size array; one pop per outer while iteration."""
+    n = offsets.shape[0] - 1
+    dist0 = jnp.full((n,), INF, jnp.int32).at[source].set(0)
+    queue0 = jnp.zeros((n,), jnp.int32).at[0].set(source)
+
+    def cond(state):
+        _, _, head, tail = state
+        return head < tail
+
+    def body(state):
+        dist, queue, head, tail = state
+        u = queue[head]
+        start, stop = offsets[u], offsets[u + 1]
+
+        def edge_cond(es):
+            return es[0] < stop
+
+        def edge_body(es):
+            e, dist, queue, tail = es
+            v = neighbors[e]
+            fresh = dist[v] >= INF
+            dist = dist.at[v].min(dist[u] + 1)
+            queue = jnp.where(fresh, queue.at[tail].set(v), queue)
+            tail = tail + fresh.astype(jnp.int32)
+            return (e + 1, dist, queue, tail)
+
+        _, dist, queue, tail = jax.lax.while_loop(
+            edge_cond, edge_body, (start, dist, queue, tail))
+        return dist, queue, head + 1, tail
+
+    dist, *_ = jax.lax.while_loop(
+        cond, body, (dist0, queue0, jnp.int32(0), jnp.int32(1)))
+    return _finish(dist)
+
+
+def _relax_tiles(dist, level, edge_src, edge_dst, n_tiles):
+    """One BFS level: relax edges tile-by-tile (O1 staging)."""
+    src_t = edge_src.reshape(n_tiles, -1)
+    dst_t = edge_dst.reshape(n_tiles, -1)
+
+    def tile(dist, sd):
+        s, d = sd
+        on_frontier = dist[s] == level
+        cand = jnp.where(on_frontier, level + 1, INF)
+        return dist.at[d].min(cand), None
+
+    dist, _ = jax.lax.scan(tile, dist, (src_t, dst_t))
+    return dist
+
+
+def _run_levelsync(offsets, neighbors, edge_src, source, *, n_tiles):
+    n = offsets.shape[0] - 1
+    dist0 = jnp.full((n,), INF, jnp.int32).at[source].set(0)
+
+    def cond(state):
+        dist, level, changed = state
+        return changed & (level < n)
+
+    def body(state):
+        dist, level, _ = state
+        if n_tiles == 1:
+            on_frontier = dist[edge_src] == level
+            cand = jnp.where(on_frontier, level + 1, INF)
+            new = dist.at[neighbors].min(cand)
+        else:
+            new = _relax_tiles(dist, level, edge_src, neighbors, n_tiles)
+        changed = jnp.any(new != dist)
+        return new, level + 1, changed
+
+    dist, *_ = jax.lax.while_loop(
+        cond, body, (dist0, jnp.int32(0), jnp.bool_(True)))
+    return _finish(dist)
+
+
+def run(level: OptLevel, offsets, neighbors, edge_src, source) -> jax.Array:
+    offsets = jnp.asarray(offsets, jnp.int32)
+    neighbors = jnp.asarray(neighbors, jnp.int32)
+    edge_src = jnp.asarray(edge_src, jnp.int32)
+    source = jnp.asarray(source, jnp.int32)
+    level = OptLevel(level)
+    if level == OptLevel.O0:
+        return _run_o0(offsets, neighbors, source)
+    if level == OptLevel.O1:
+        n_tiles = max(1, neighbors.shape[0] // EDGE_TILE)
+        return _run_levelsync(offsets, neighbors, edge_src, source,
+                              n_tiles=n_tiles)
+    # O2..O5: vectorized level-synchronous relaxation (PE duplication and
+    # double buffering are inapplicable — paper §4.2/§5.1)
+    return _run_levelsync(offsets, neighbors, edge_src, source, n_tiles=1)
+
+
+def make_inputs(rng: np.random.Generator, scale: float = 1.0) -> dict:
+    n = max(16, int(4096 * scale))
+    e = max(4 * n, int(65536 * scale))
+    e = (e // EDGE_TILE) * EDGE_TILE if e >= EDGE_TILE else e
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    offsets = np.zeros(n + 1, np.int64)
+    np.add.at(offsets[1:], src, 1)
+    offsets = np.cumsum(offsets)
+    return {
+        "offsets": offsets.astype(np.int32),
+        "neighbors": dst.astype(np.int32),
+        "edge_src": src.astype(np.int32),
+        "source": np.int32(0),
+    }

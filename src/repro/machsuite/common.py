@@ -1,0 +1,47 @@
+"""Shared helpers for the MachSuite level ladder."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optlevel import OptLevel, Step
+
+__all__ = ["OptLevel", "Step", "has", "rotate3", "pack_u8_to_u32",
+           "unpack_u32_to_u8"]
+
+
+def has(level: OptLevel, step: Step) -> bool:
+    return level.has(step)
+
+
+def rotate3(body, n_iters: int, init_bufs):
+    """Paper Fig. 4(c): explicit 3-slot load/compute/store rotation.
+
+    ``body(i, slot, bufs) -> bufs`` performs the load/compute/store trio for
+    phase ``i`` against buffer group ``slot`` (= i % 3).  Numerically the
+    rotation is an identity scheduling transform — XLA overlaps the slots on
+    real hardware; here the structure is what's faithful.
+    """
+    def step_fn(bufs, i):
+        slot = i % 3
+        return body(i, slot, bufs), None
+
+    bufs, _ = jax.lax.scan(step_fn, init_bufs, jnp.arange(n_iters))
+    return bufs
+
+
+def pack_u8_to_u32(x_u8: jax.Array) -> jax.Array:
+    """Pack a (..., 4k) uint8 array into (..., k) uint32 little-endian words
+    — the paper's ap_uint<W> wide scratchpad word (§5.2)."""
+    assert x_u8.shape[-1] % 4 == 0, x_u8.shape
+    x = x_u8.reshape(*x_u8.shape[:-1], -1, 4).astype(jnp.uint32)
+    return (x[..., 0] | (x[..., 1] << 8) | (x[..., 2] << 16)
+            | (x[..., 3] << 24))
+
+
+def unpack_u32_to_u8(x_u32: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_u8_to_u32`."""
+    parts = [(x_u32 >> (8 * i)) & 0xFF for i in range(4)]
+    out = jnp.stack(parts, axis=-1).astype(jnp.uint8)
+    return out.reshape(*x_u32.shape[:-1], -1)

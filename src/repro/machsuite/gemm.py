@@ -1,0 +1,183 @@
+"""GEMM (N^3 algorithm) — paper Table 3: two 1024x1024 double matrices.
+
+Ladder (paper §3.2 data-tiling example):
+
+  O0  element-at-a-time triple loop against the full operands
+  O1  explicit tiling: (TI, TK)x(TK, TJ) tiles staged, inner k-loop scalar
+  O2  + pipelined tile compute (the tile contraction as one MXU-shaped dot)
+  O3  + PE duplication: all tiles of a block-row computed in parallel (vmap)
+  O4  + 3-slot rotation over the k tile loop (Fig. 4c)
+  O5  scratchpad reorg: inputs already max-width words (paper: limited gain
+      for wide types — kept identical to O4)
+
+Float note: accumulation order differs across levels, so tests compare with
+allclose against a float64 numpy oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import MACHSUITE_PROFILES
+from repro.machsuite.common import OptLevel, rotate3
+
+PROFILE = MACHSUITE_PROFILES["gemm"]
+
+TILE = 16   # staging tile (kept small so smoke inputs divide evenly)
+
+
+def oracle(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return (np.asarray(a, np.float64) @ np.asarray(b, np.float64)).astype(
+        np.float32)
+
+
+def _run_o0(a, b):
+    n, k = a.shape
+    m = b.shape[1]
+
+    def body(idx, c):
+        i, j = idx // m, idx % m
+        row = jax.lax.dynamic_slice(a, (i, 0), (1, k))
+        col = jax.lax.dynamic_slice(b, (0, j), (k, 1))
+
+        def inner(p, acc):
+            return acc + row[0, p] * col[p, 0]
+
+        v = jax.lax.fori_loop(0, k, inner, jnp.float32(0))
+        return c.at[i, j].set(v)
+
+    return jax.lax.fori_loop(0, n * m, body, jnp.zeros((n, m), jnp.float32))
+
+
+def _tiles(a, b):
+    n, k = a.shape
+    m = b.shape[1]
+    assert n % TILE == 0 and m % TILE == 0 and k % TILE == 0, (n, k, m)
+    return n // TILE, k // TILE, m // TILE
+
+
+def _run_o1(a, b):
+    nt, kt, mt = _tiles(a, b)
+
+    def tile_body(ti, tj, tk, acc):
+        at = jax.lax.dynamic_slice(a, (ti * TILE, tk * TILE), (TILE, TILE))
+        bt = jax.lax.dynamic_slice(b, (tk * TILE, tj * TILE), (TILE, TILE))
+
+        def cell(idx, acc):
+            i, j = idx // TILE, idx % TILE
+
+            def inner(p, s):
+                return s + at[i, p] * bt[p, j]
+
+            v = jax.lax.fori_loop(0, TILE, inner, jnp.float32(0))
+            return acc.at[i, j].add(v)
+
+        return jax.lax.fori_loop(0, TILE * TILE, cell, acc)
+
+    def out_tile(idx, c):
+        ti, tj = idx // mt, idx % mt
+        acc = jax.lax.fori_loop(
+            0, kt, lambda tk, acc: tile_body(ti, tj, tk, acc),
+            jnp.zeros((TILE, TILE), jnp.float32))
+        return jax.lax.dynamic_update_slice(c, acc, (ti * TILE, tj * TILE))
+
+    return jax.lax.fori_loop(0, nt * mt, out_tile,
+                             jnp.zeros((a.shape[0], b.shape[1]), jnp.float32))
+
+
+def _tile_view(a, b):
+    nt, kt, mt = _tiles(a, b)
+    at = a.reshape(nt, TILE, kt, TILE).transpose(0, 2, 1, 3)  # (nt,kt,T,T)
+    bt = b.reshape(kt, TILE, mt, TILE).transpose(0, 2, 1, 3)  # (kt,mt,T,T)
+    return at, bt, (nt, kt, mt)
+
+
+def _run_o2(a, b):
+    at, bt, (nt, kt, mt) = _tile_view(a, b)
+
+    def out_tile(ti, tj):
+        def k_step(acc, tk):
+            return acc + at[ti, tk] @ bt[tk, tj], None
+        acc, _ = jax.lax.scan(k_step, jnp.zeros((TILE, TILE), jnp.float32),
+                              jnp.arange(kt))
+        return acc
+
+    def row(c, ti):
+        def col(c, tj):
+            return c, out_tile(ti, tj)
+        _, tiles = jax.lax.scan(col, None, jnp.arange(mt))
+        return c, tiles
+
+    _, out = jax.lax.scan(row, None, jnp.arange(nt))   # (nt, mt, T, T)
+    return out.transpose(0, 2, 1, 3).reshape(a.shape[0], b.shape[1])
+
+
+def _run_o3(a, b):
+    at, bt, (nt, kt, mt) = _tile_view(a, b)
+
+    def out_tile(ti, tj):
+        def k_step(acc, tk):
+            return acc + at[ti, tk] @ bt[tk, tj], None
+        acc, _ = jax.lax.scan(k_step, jnp.zeros((TILE, TILE), jnp.float32),
+                              jnp.arange(kt))
+        return acc
+
+    pe_grid = jax.vmap(jax.vmap(out_tile, in_axes=(None, 0)),
+                       in_axes=(0, None))
+    out = pe_grid(jnp.arange(nt), jnp.arange(mt))      # (nt, mt, T, T)
+    return out.transpose(0, 2, 1, 3).reshape(a.shape[0], b.shape[1])
+
+
+def _run_o4(a, b):
+    """3-slot rotation over the k tile stream for every output tile."""
+    at, bt, (nt, kt, mt) = _tile_view(a, b)
+
+    def out_tile(ti, tj):
+        bufs0 = {
+            "a": jnp.zeros((3, TILE, TILE), jnp.float32),
+            "b": jnp.zeros((3, TILE, TILE), jnp.float32),
+            "acc": jnp.zeros((TILE, TILE), jnp.float32),
+        }
+
+        def body(i, slot, bufs):
+            tk = jnp.minimum(i, kt - 1)
+            a_s = jax.lax.dynamic_update_index_in_dim(
+                bufs["a"], at[ti, tk], slot, 0)
+            b_s = jax.lax.dynamic_update_index_in_dim(
+                bufs["b"], bt[tk, tj], slot, 0)
+            c = (i - 1) % 3
+            contrib = a_s[c] @ b_s[c]
+            acc = bufs["acc"] + jnp.where(i >= 1, 1.0, 0.0) * contrib
+            return {"a": a_s, "b": b_s, "acc": acc}
+
+        return rotate3(body, kt + 1, bufs0)["acc"]
+
+    pe_grid = jax.vmap(jax.vmap(out_tile, in_axes=(None, 0)),
+                       in_axes=(0, None))
+    out = pe_grid(jnp.arange(nt), jnp.arange(mt))
+    return out.transpose(0, 2, 1, 3).reshape(a.shape[0], b.shape[1])
+
+
+def run(level: OptLevel, a, b) -> jax.Array:
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    level = OptLevel(level)
+    if level == OptLevel.O0:
+        return _run_o0(a, b)
+    if level == OptLevel.O1:
+        return _run_o1(a, b)
+    if level == OptLevel.O2:
+        return _run_o2(a, b)
+    if level == OptLevel.O3:
+        return _run_o3(a, b)
+    return _run_o4(a, b)   # O4 == O5 (scratchpad reorg: no-op for f32/f64)
+
+
+def make_inputs(rng: np.random.Generator, scale: float = 1.0) -> dict:
+    n = max(TILE, int(1024 * scale) // TILE * TILE)
+    return {
+        "a": rng.standard_normal((n, n), np.float32),
+        "b": rng.standard_normal((n, n), np.float32),
+    }

@@ -1,0 +1,265 @@
+"""KMP string matching — paper Table 3: 128 MB string, 16 B substring.
+
+Output: the number of occurrences (the paper notes KMP's output is "merely
+an integer", which is why double buffering gains nothing for it).
+
+  O0  character scan with the classic failure-function backtrack
+      (while-loop inside the scan body = the un-pipelined inner loop)
+  O1  text staged in chunks; same backtracking automaton per chunk
+  O2  + the match loop compiled to a DFA: one table lookup per character,
+      II=1 (the paper's "pipeline pragma" step — KMP gains 7.0x, Table 4)
+  O3  + PE duplication: text split across PE chunks with (m-1)-overlap,
+      each PE counts matches *starting* in its span (vmap)
+  O4  + 3-slot rotation over chunks (paper: ~no gain for KMP — Fig. 12)
+  O5  + chunk staging in packed uint32 words (char->int reorg; KMP is a
+      top gainer for scratchpad reorg in the paper: byte-typed buffers)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import MACHSUITE_PROFILES
+from repro.machsuite.common import (OptLevel, pack_u8_to_u32, rotate3,
+                                    unpack_u32_to_u8)
+
+PROFILE = MACHSUITE_PROFILES["kmp"]
+
+PE_NUM = 8
+ALPHABET = 256
+
+
+def failure_fn(pattern: np.ndarray) -> np.ndarray:
+    """Classic KMP failure (longest proper prefix-suffix) table."""
+    p = np.asarray(pattern, np.uint8)
+    m = len(p)
+    fail = np.zeros(m, np.int32)
+    k = 0
+    for i in range(1, m):
+        while k > 0 and p[i] != p[k]:
+            k = fail[k - 1]
+        if p[i] == p[k]:
+            k += 1
+        fail[i] = k
+    return fail
+
+
+def dfa_table(pattern: np.ndarray) -> np.ndarray:
+    """(m+1, 256) next-state table: state = chars of pattern matched."""
+    p = np.asarray(pattern, np.uint8)
+    m = len(p)
+    fail = failure_fn(p)
+    dfa = np.zeros((m + 1, ALPHABET), np.int32)
+    for s in range(m + 1):
+        for c in range(ALPHABET):
+            if s < m and c == p[s]:
+                dfa[s, c] = s + 1
+            elif s == 0:
+                dfa[s, c] = 0
+            else:
+                # follow failure links from the longest border
+                k = fail[s - 1] if s <= m else 0
+                dfa[s, c] = dfa[k, c]
+    # state m (full match) continues from its border, same as other rows
+    return dfa
+
+
+def oracle(text: np.ndarray, pattern: np.ndarray) -> np.ndarray:
+    t = np.asarray(text, np.uint8)
+    p = np.asarray(pattern, np.uint8)
+    m = len(p)
+    if len(t) < m:
+        return np.int32(0)
+    windows = np.lib.stride_tricks.sliding_window_view(t, m)
+    return np.int32((windows == p).all(axis=1).sum())
+
+
+# ---------------------------------------------------------------------------
+# levels
+# ---------------------------------------------------------------------------
+
+def _scan_backtrack(text, pat_j, fail_j):
+    """O0/O1 inner automaton: per-char backtracking while-loop."""
+    m = pat_j.shape[0]
+
+    def step(carry, c):
+        j, count = carry
+
+        def cond(j):
+            return (j > 0) & (pat_j[j] != c)
+
+        j = jax.lax.while_loop(cond, lambda j: fail_j[j - 1], j)
+        j = jnp.where(pat_j[j] == c, j + 1, j)
+        matched = j == m
+        count = count + matched.astype(jnp.int32)
+        j = jnp.where(matched, fail_j[m - 1], j)
+        return (j, count), None
+
+    (j, count), _ = jax.lax.scan(step, (jnp.int32(0), jnp.int32(0)), text)
+    return count, j
+
+
+def _run_o0(text, pat_j, fail_j):
+    count, _ = _scan_backtrack(text, pat_j, fail_j)
+    return count
+
+
+def _chunks(text, n_chunks):
+    return text.reshape(n_chunks, -1)
+
+
+def _run_o1(text, pat_j, fail_j, n_chunks):
+    chunks = _chunks(text, n_chunks)
+
+    def per_chunk(carry, chunk):
+        j, count = carry
+
+        def step(c2, ch):
+            jj, cnt = c2
+
+            def cond(j):
+                return (j > 0) & (pat_j[j] != ch)
+
+            jj = jax.lax.while_loop(cond, lambda j: fail_j[j - 1], jj)
+            jj = jnp.where(pat_j[jj] == ch, jj + 1, jj)
+            matched = jj == pat_j.shape[0]
+            cnt = cnt + matched.astype(jnp.int32)
+            jj = jnp.where(matched, fail_j[pat_j.shape[0] - 1], jj)
+            return (jj, cnt), None
+
+        (j, count), _ = jax.lax.scan(step, (j, count), chunk)
+        return (j, count), None
+
+    (j, count), _ = jax.lax.scan(per_chunk, (jnp.int32(0), jnp.int32(0)),
+                                 chunks)
+    return count
+
+
+def _dfa_count(chunk, dfa_j, m, start_state=0):
+    """II=1 automaton: one lookup per char. Returns per-position match flag
+    sum and the final state."""
+    def step(s, c):
+        s2 = dfa_j[s, c]
+        return s2, (s2 == m).astype(jnp.int32)
+
+    final, hits = jax.lax.scan(step, jnp.int32(start_state), chunk)
+    return jnp.sum(hits), final
+
+
+def _run_o2(text, dfa_j, m, n_chunks):
+    chunks = _chunks(text, n_chunks)
+
+    def per_chunk(carry, chunk):
+        s, count = carry
+
+        def step(s, c):
+            s2 = dfa_j[s, c]
+            return s2, (s2 == m).astype(jnp.int32)
+
+        s, hits = jax.lax.scan(step, s, chunk)
+        return (s, count + jnp.sum(hits)), None
+
+    (s, count), _ = jax.lax.scan(per_chunk, (jnp.int32(0), jnp.int32(0)),
+                                 chunks)
+    return count
+
+
+def _pe_split(text, m):
+    """Split text into PE_NUM spans + (m-1)-char halo from the next span."""
+    T = text.shape[0]
+    assert T % PE_NUM == 0, (T, PE_NUM)
+    span = T // PE_NUM
+    padded = jnp.concatenate([text, jnp.zeros((m - 1,), text.dtype)])
+    idx = jnp.arange(span + m - 1)[None, :] + (
+        jnp.arange(PE_NUM) * span)[:, None]
+    return padded[idx], span
+
+
+def _run_o3(text, dfa_j, m):
+    ext, span = _pe_split(text, m)
+    T = text.shape[0]
+
+    def per_pe(chunk, pe):
+        def step(s, c):
+            s2 = dfa_j[s, c]
+            return s2, (s2 == m).astype(jnp.int32)
+
+        _, hits = jax.lax.scan(step, jnp.int32(0), chunk)
+        # count matches whose *start* is inside this PE's span AND whose
+        # end is inside the real text (halo padding must not count):
+        # match ending at local e starts at e-m+1
+        pos = jnp.arange(chunk.shape[0])
+        ok = (pos - (m - 1) < span) & (pe * span + pos < T)
+        return jnp.sum(hits * ok)
+
+    return jnp.sum(
+        jax.vmap(per_pe)(ext, jnp.arange(PE_NUM))).astype(jnp.int32)
+
+
+def _run_o4(text, dfa_j, m, *, packed=False):
+    ext, span = _pe_split(text, m)   # (PE, span+m-1)
+    n = ext.shape[0]
+    width = ext.shape[1]
+    pad = (-width) % 4
+    ext_p = jnp.pad(ext, ((0, 0), (0, pad)))
+    staged = pack_u8_to_u32(ext_p) if packed else ext_p
+
+    T = text.shape[0]
+
+    def compute(chunk, pe):
+        u8 = unpack_u32_to_u8(chunk) if packed else chunk
+        u8 = u8[:width]
+
+        def step(s, c):
+            s2 = dfa_j[s, c]
+            return s2, (s2 == m).astype(jnp.int32)
+
+        _, hits = jax.lax.scan(step, jnp.int32(0), u8)
+        pos = jnp.arange(width)
+        ok = (pos - (m - 1) < span) & (pe * span + pos < T)
+        return jnp.sum(hits * ok)
+
+    bufs0 = {
+        "slots": jnp.zeros((3,) + staged.shape[1:], staged.dtype),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+    def body(i, slot, bufs):
+        t = jnp.minimum(i, n - 1)
+        slots = jax.lax.dynamic_update_index_in_dim(
+            bufs["slots"], staged[t], slot, 0)
+        c = (i - 1) % 3
+        add = jnp.where(i >= 1, compute(slots[c], jnp.maximum(i - 1, 0)), 0)
+        return {"slots": slots, "count": bufs["count"] + add}
+
+    return rotate3(body, n + 1, bufs0)["count"]
+
+
+def run(level: OptLevel, text, pattern, n_chunks: int = 8) -> jax.Array:
+    pattern = np.asarray(pattern, np.uint8)
+    m = len(pattern)
+    text = jnp.asarray(text, jnp.uint8)
+    level = OptLevel(level)
+    if level == OptLevel.O0:
+        return _run_o0(text, jnp.asarray(pattern), jnp.asarray(failure_fn(pattern)))
+    if level == OptLevel.O1:
+        return _run_o1(text, jnp.asarray(pattern), jnp.asarray(failure_fn(pattern)),
+                       n_chunks)
+    dfa_j = jnp.asarray(dfa_table(pattern))
+    if level == OptLevel.O2:
+        return _run_o2(text, dfa_j, m, n_chunks)
+    if level == OptLevel.O3:
+        return _run_o3(text, dfa_j, m)
+    if level == OptLevel.O4:
+        return _run_o4(text, dfa_j, m, packed=False)
+    return _run_o4(text, dfa_j, m, packed=True)
+
+
+def make_inputs(rng: np.random.Generator, scale: float = 1.0) -> dict:
+    n = max(PE_NUM * 64, int(128e6 * scale) // (PE_NUM * 8) * (PE_NUM * 8))
+    # small alphabet => plenty of matches to count
+    text = rng.integers(0, 4, n, dtype=np.uint8)
+    pattern = rng.integers(0, 4, 16, dtype=np.uint8)
+    return {"text": text, "pattern": pattern}

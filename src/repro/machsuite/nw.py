@@ -1,0 +1,214 @@
+"""Needleman-Wunsch — paper Table 3: 64K pairs of 128-nucleotide sequences.
+
+Scoring follows MachSuite: MATCH +1, MISMATCH -1, GAP -1.  Output: the
+global-alignment score per pair (int32).
+
+  O0  per-pair row-by-row DP, cell-at-a-time (the un-pipelined nest)
+  O1  pairs staged in batches; same sequential per-pair DP
+  O2  + anti-diagonal wavefront: all cells of a diagonal in parallel —
+      the paper's II=1 pipeline for 2-D DP (NW gains 8.8x, Table 4)
+  O3  + PE duplication across pairs (vmap — NW is "fully parallel jobs")
+  O4  + 3-slot rotation over pair batches
+  O5  + 2-bit nucleotide codes staged in packed uint32 words (byte-typed
+      buffers make NW/AES/KMP the big scratchpad-reorg winners)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import MACHSUITE_PROFILES
+from repro.machsuite.common import (OptLevel, pack_u8_to_u32, rotate3,
+                                    unpack_u32_to_u8)
+
+PROFILE = MACHSUITE_PROFILES["nw"]
+
+MATCH, MISMATCH, GAP = 1, -1, -1
+BATCH = 16
+
+
+def oracle(seq_a: np.ndarray, seq_b: np.ndarray) -> np.ndarray:
+    a = np.asarray(seq_a)
+    b = np.asarray(seq_b)
+    n_pairs, L = a.shape
+    out = np.zeros(n_pairs, np.int32)
+    for p in range(n_pairs):
+        prev = np.arange(L + 1, dtype=np.int64) * GAP
+        for i in range(1, L + 1):
+            cur = np.empty(L + 1, np.int64)
+            cur[0] = i * GAP
+            sub = np.where(b[p] == a[p, i - 1], MATCH, MISMATCH)
+            for j in range(1, L + 1):
+                cur[j] = max(prev[j - 1] + sub[j - 1],
+                             prev[j] + GAP, cur[j - 1] + GAP)
+            prev = cur
+        out[p] = prev[L]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-pair DP kernels
+# ---------------------------------------------------------------------------
+
+def _dp_rowwise_cells(a, b):
+    """O0/O1: scan rows; each row scanned cell-at-a-time (j-dependency
+    serializes — the un-pipelined inner loop)."""
+    L = a.shape[0]
+    row0 = jnp.arange(L + 1, dtype=jnp.int32) * GAP
+
+    def row(prev, i):
+        sub = jnp.where(b == a[i], MATCH, MISMATCH)
+
+        def cell(left, j):
+            diag = prev[j] + sub[j]
+            up = prev[j + 1] + GAP
+            v = jnp.maximum(jnp.maximum(diag, up), left + GAP)
+            return v, v
+
+        _, vals = jax.lax.scan(cell, (i + 1) * GAP, jnp.arange(L))
+        cur = jnp.concatenate([jnp.array([(i + 1) * GAP], jnp.int32), vals])
+        return cur, None
+
+    last, _ = jax.lax.scan(row, row0, jnp.arange(L))
+    return last[L]
+
+
+def _dp_wavefront(a, b):
+    """O2+: anti-diagonal sweep — every cell on a diagonal is independent.
+
+    diag[d][k] = M[i, j] with i = k, j = d - k (1-based incl. borders).
+    We carry two previous diagonals of length L+1 (padded)."""
+    L = a.shape[0]
+    size = L + 1
+
+    # borders: M[i,0] = i*GAP ; M[0,j] = j*GAP
+    d0 = jnp.zeros((size,), jnp.int32)                       # diagonal d=0
+    d1 = jnp.full((size,), GAP, jnp.int32)                   # d=1: (0,1),(1,0)
+
+    idx = jnp.arange(size)
+
+    def diag_step(carry, d):
+        dm2, dm1 = carry
+        i = idx                      # candidate row index on diagonal d
+        j = d - i
+        valid = (i >= 1) & (j >= 1) & (i <= L) & (j <= L)
+        ai = a[jnp.clip(i - 1, 0, L - 1)]
+        bj = b[jnp.clip(j - 1, 0, L - 1)]
+        sub = jnp.where(ai == bj, MATCH, MISMATCH)
+        # M[i-1, j-1] lives on dm2 at row i-1; M[i-1, j] on dm1 at i-1;
+        # M[i, j-1] on dm1 at i.
+        diag = dm2[jnp.clip(i - 1, 0, L)] + sub
+        up = dm1[jnp.clip(i - 1, 0, L)] + GAP
+        left = dm1[i] + GAP
+        v = jnp.maximum(jnp.maximum(diag, up), left)
+        border = jnp.where(i == 0, j * GAP, i * GAP)   # i==0 or j==0 cells
+        cur = jnp.where(valid, v, border).astype(jnp.int32)
+        return (dm1, cur), None
+
+    (_, dlast), _ = jax.lax.scan(diag_step, (d0, d1),
+                                 jnp.arange(2, 2 * L + 1))
+    return dlast[L]        # cell (L, L) sits at row L of diagonal 2L
+
+
+# ---------------------------------------------------------------------------
+# levels
+# ---------------------------------------------------------------------------
+
+def _run_sequential(seq_a, seq_b, per_pair, batched: bool):
+    if not batched:
+        _, out = jax.lax.scan(
+            lambda _, ab: (None, per_pair(ab[0], ab[1])), None,
+            (seq_a, seq_b))
+        return out
+    a_b = seq_a.reshape(-1, BATCH, seq_a.shape[1])
+    b_b = seq_b.reshape(-1, BATCH, seq_b.shape[1])
+
+    def per_batch(_, ab):
+        a, b = ab
+        _, out = jax.lax.scan(
+            lambda _, p: (None, per_pair(p[0], p[1])), None, (a, b))
+        return None, out
+
+    _, out = jax.lax.scan(per_batch, None, (a_b, b_b))
+    return out.reshape(-1)
+
+
+def _run_o3(seq_a, seq_b):
+    a_b = seq_a.reshape(-1, BATCH, seq_a.shape[1])
+    b_b = seq_b.reshape(-1, BATCH, seq_b.shape[1])
+
+    def per_batch(_, ab):
+        return None, jax.vmap(_dp_wavefront)(ab[0], ab[1])
+
+    _, out = jax.lax.scan(per_batch, None, (a_b, b_b))
+    return out.reshape(-1)
+
+
+def _run_o4(seq_a, seq_b, *, packed=False):
+    L = seq_a.shape[1]
+    a_b = seq_a.reshape(-1, BATCH, L)
+    b_b = seq_b.reshape(-1, BATCH, L)
+    n = a_b.shape[0]
+    if packed:
+        pad = (-L) % 4
+        a_st = pack_u8_to_u32(jnp.pad(a_b, ((0, 0), (0, 0), (0, pad))))
+        b_st = pack_u8_to_u32(jnp.pad(b_b, ((0, 0), (0, 0), (0, pad))))
+    else:
+        a_st, b_st = a_b, b_b
+
+    def compute(a_slab, b_slab):
+        if packed:
+            a_u8 = unpack_u32_to_u8(a_slab)[:, :L]
+            b_u8 = unpack_u32_to_u8(b_slab)[:, :L]
+        else:
+            a_u8, b_u8 = a_slab, b_slab
+        return jax.vmap(_dp_wavefront)(a_u8, b_u8)
+
+    bufs0 = {
+        "a": jnp.zeros((3,) + a_st.shape[1:], a_st.dtype),
+        "b": jnp.zeros((3,) + b_st.shape[1:], b_st.dtype),
+        "out": jnp.zeros((n, BATCH), jnp.int32),
+    }
+
+    def body(i, slot, bufs):
+        t = jnp.minimum(i, n - 1)
+        a_s = jax.lax.dynamic_update_index_in_dim(bufs["a"], a_st[t], slot, 0)
+        b_s = jax.lax.dynamic_update_index_in_dim(bufs["b"], b_st[t], slot, 0)
+        c = (i - 1) % 3
+        scores = compute(a_s[c], b_s[c])
+        out = jax.lax.cond(
+            i >= 1,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, scores, jnp.maximum(i - 1, 0), 0),
+            lambda o: o, bufs["out"])
+        return {"a": a_s, "b": b_s, "out": out}
+
+    return rotate3(body, n + 1, bufs0)["out"].reshape(-1)
+
+
+def run(level: OptLevel, seq_a, seq_b) -> jax.Array:
+    seq_a = jnp.asarray(seq_a, jnp.uint8)
+    seq_b = jnp.asarray(seq_b, jnp.uint8)
+    level = OptLevel(level)
+    if level == OptLevel.O0:
+        return _run_sequential(seq_a, seq_b, _dp_rowwise_cells, batched=False)
+    if level == OptLevel.O1:
+        return _run_sequential(seq_a, seq_b, _dp_rowwise_cells, batched=True)
+    if level == OptLevel.O2:
+        return _run_sequential(seq_a, seq_b, _dp_wavefront, batched=True)
+    if level == OptLevel.O3:
+        return _run_o3(seq_a, seq_b)
+    if level == OptLevel.O4:
+        return _run_o4(seq_a, seq_b, packed=False)
+    return _run_o4(seq_a, seq_b, packed=True)
+
+
+def make_inputs(rng: np.random.Generator, scale: float = 1.0) -> dict:
+    n_pairs = max(BATCH, int(65536 * scale) // BATCH * BATCH)
+    L = 128 if scale >= 1.0 else max(8, int(128 * min(1.0, scale * 16)))
+    return {
+        "seq_a": rng.integers(0, 4, (n_pairs, L), dtype=np.uint8),
+        "seq_b": rng.integers(0, 4, (n_pairs, L), dtype=np.uint8),
+    }

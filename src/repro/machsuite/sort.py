@@ -1,0 +1,153 @@
+"""SORT (merge sort) — paper Table 3: 64 MB integer array.
+
+Per the paper (§2.2), the FPGA's goal is every 1 MB chunk sorted; the CPU
+merges the rest (tree-reduce parallelism dies off after a few layers).
+Output here: the array with every chunk independently sorted.
+
+  O0  insertion sort per chunk, element-at-a-time against the full buffer
+  O1  chunks staged; in-scratchpad insertion sort
+  O2  + pipelined sorting network: bitonic stages, each stage one
+      vectorized compare-exchange pass (the II=1 pipeline analog)
+  O3  + PE duplication across chunks (vmap)
+  O4  + 3-slot rotation over chunks
+  O5  kept == O4 (32-bit keys already word-wide; paper: SORT's scratchpad
+      gain comes from caching-size choice, fixed at 1 MB — Fig. 6 note)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import MACHSUITE_PROFILES
+from repro.machsuite.common import OptLevel, rotate3
+
+PROFILE = MACHSUITE_PROFILES["sort"]
+
+
+def oracle(data: np.ndarray, chunk: int) -> np.ndarray:
+    d = np.asarray(data).reshape(-1, chunk)
+    return np.sort(d, axis=1).reshape(-1)
+
+
+def _insertion_sort(buf):
+    n = buf.shape[0]
+
+    def outer(i, buf):
+        key = buf[i]
+
+        def cond(state):
+            j, b = state
+            return (j >= 0) & (b[jnp.maximum(j, 0)] > key)
+
+        def shift(state):
+            j, b = state
+            return j - 1, b.at[j + 1].set(b[j])
+
+        j, buf = jax.lax.while_loop(cond, shift, (i - 1, buf))
+        return buf.at[j + 1].set(key)
+
+    return jax.lax.fori_loop(1, n, outer, buf)
+
+
+def _bitonic_sort(buf):
+    """Power-of-two bitonic network; stages are static Python loops, each
+    stage one vectorized compare-exchange (the hardware pipeline)."""
+    n = buf.shape[0]
+    assert (n & (n - 1)) == 0, f"bitonic needs power-of-two, got {n}"
+    idx = jnp.arange(n)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            partner = idx ^ j
+            up = (idx & k) == 0
+            a = buf
+            b = buf[partner]
+            lo = jnp.minimum(a, b)
+            hi = jnp.maximum(a, b)
+            first = idx < partner
+            buf = jnp.where(first == up, lo, hi)
+            j //= 2
+        k *= 2
+    return buf
+
+
+def _run_o0(data, chunk):
+    n_chunks = data.shape[0] // chunk
+
+    def body(c, buf):
+        seg = jax.lax.dynamic_slice(buf, (c * chunk,), (chunk,))
+        seg = _insertion_sort(seg)
+        return jax.lax.dynamic_update_slice(buf, seg, (c * chunk,))
+
+    return jax.lax.fori_loop(0, n_chunks, body, data)
+
+
+def _run_o1(data, chunk):
+    chunks = data.reshape(-1, chunk)
+    _, out = jax.lax.scan(
+        lambda _, c: (None, _insertion_sort(c)), None, chunks)
+    return out.reshape(-1)
+
+
+def _run_o2(data, chunk):
+    chunks = data.reshape(-1, chunk)
+    _, out = jax.lax.scan(
+        lambda _, c: (None, _bitonic_sort(c)), None, chunks)
+    return out.reshape(-1)
+
+
+def _run_o3(data, chunk):
+    chunks = data.reshape(-1, chunk)
+    return jax.vmap(_bitonic_sort)(chunks).reshape(-1)
+
+
+def _run_o4(data, chunk):
+    chunks = data.reshape(-1, chunk)
+    n = chunks.shape[0]
+    bufs0 = {
+        "slots": jnp.zeros((3, chunk), chunks.dtype),
+        "out": jnp.zeros_like(chunks),
+    }
+
+    def body(i, slot, bufs):
+        t = jnp.minimum(i, n - 1)
+        slots = jax.lax.dynamic_update_index_in_dim(
+            bufs["slots"], chunks[t], slot, 0)
+        c = (i - 1) % 3
+        s = _bitonic_sort(slots[c])
+        out = jax.lax.cond(
+            i >= 1,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, s, jnp.maximum(i - 1, 0), 0),
+            lambda o: o, bufs["out"])
+        return {"slots": slots, "out": out}
+
+    return rotate3(body, n + 1, bufs0)["out"].reshape(-1)
+
+
+def run(level: OptLevel, data, chunk: int) -> jax.Array:
+    data = jnp.asarray(data, jnp.int32)
+    level = OptLevel(level)
+    if level == OptLevel.O0:
+        return _run_o0(data, chunk)
+    if level == OptLevel.O1:
+        return _run_o1(data, chunk)
+    if level == OptLevel.O2:
+        return _run_o2(data, chunk)
+    if level == OptLevel.O3:
+        return _run_o3(data, chunk)
+    return _run_o4(data, chunk)
+
+
+def make_inputs(rng: np.random.Generator, scale: float = 1.0) -> dict:
+    # paper: 64 MB of int32 = 16M elements, 1 MB (256K-element) chunks
+    chunk = 1 << max(4, int(np.log2(262_144 * scale)))
+    n_chunks = max(2, int(64 * min(1.0, scale * 32)))
+    return {
+        "data": rng.integers(-2**31, 2**31 - 1, n_chunks * chunk,
+                             dtype=np.int32),
+        "chunk": chunk,
+    }

@@ -1,0 +1,134 @@
+"""SPMV (ELLPACK) — paper Table 3: 4096x512 data/index matrices.
+
+y[i] = sum_l vals[i, l] * x[cols[i, l]].
+
+The paper rejects SPMV as communication-bound (Table 5, PCIe/CPU = 1.3) —
+the ladder is still implemented, mirroring what a programmer would build
+before the filter stops them.
+
+  O0  per-(row, lane) scalar accumulation against the full operands
+  O1  row tiles staged; per-element loops inside the tile
+  O2  + vectorized tile compute (gather + row-sum, the II=1 pipeline)
+  O3  + tiles in parallel (vmap)
+  O4  + 3-slot rotation over row tiles
+  O5  kept == O4 (operands already wide words; paper §5.2: limited gain)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import MACHSUITE_PROFILES
+from repro.machsuite.common import OptLevel, rotate3
+
+PROFILE = MACHSUITE_PROFILES["spmv"]
+
+TILE_ROWS = 64
+
+
+def oracle(vals: np.ndarray, cols: np.ndarray, x: np.ndarray) -> np.ndarray:
+    v = np.asarray(vals, np.float64)
+    return (v * np.asarray(x, np.float64)[cols]).sum(axis=1).astype(np.float32)
+
+
+def _run_o0(vals, cols, x):
+    n, l = vals.shape
+
+    def body(idx, y):
+        i, j = idx // l, idx % l
+        c = jax.lax.dynamic_slice(cols, (i, j), (1, 1))[0, 0]
+        v = jax.lax.dynamic_slice(vals, (i, j), (1, 1))[0, 0]
+        return y.at[i].add(v * x[c])
+
+    return jax.lax.fori_loop(0, n * l, body, jnp.zeros((n,), jnp.float32))
+
+
+def _run_o1(vals, cols, x):
+    n, l = vals.shape
+    nt = n // TILE_ROWS
+
+    def tile(t, y):
+        vt = jax.lax.dynamic_slice(vals, (t * TILE_ROWS, 0), (TILE_ROWS, l))
+        ct = jax.lax.dynamic_slice(cols, (t * TILE_ROWS, 0), (TILE_ROWS, l))
+
+        def cell(idx, acc):
+            i, j = idx // l, idx % l
+            return acc.at[i].add(vt[i, j] * x[ct[i, j]])
+
+        yt = jax.lax.fori_loop(0, TILE_ROWS * l, cell,
+                               jnp.zeros((TILE_ROWS,), jnp.float32))
+        return jax.lax.dynamic_update_slice(y, yt, (t * TILE_ROWS,))
+
+    return jax.lax.fori_loop(0, nt, tile, jnp.zeros((n,), jnp.float32))
+
+
+def _tile_compute(vt, ct, x):
+    return jnp.sum(vt * x[ct], axis=1)
+
+
+def _run_o2(vals, cols, x):
+    vt = vals.reshape(-1, TILE_ROWS, vals.shape[1])
+    ct = cols.reshape(-1, TILE_ROWS, cols.shape[1])
+    _, out = jax.lax.scan(
+        lambda _, vc: (None, _tile_compute(vc[0], vc[1], x)), None, (vt, ct))
+    return out.reshape(-1)
+
+
+def _run_o3(vals, cols, x):
+    vt = vals.reshape(-1, TILE_ROWS, vals.shape[1])
+    ct = cols.reshape(-1, TILE_ROWS, cols.shape[1])
+    return jax.vmap(lambda v, c: _tile_compute(v, c, x))(vt, ct).reshape(-1)
+
+
+def _run_o4(vals, cols, x):
+    vt = vals.reshape(-1, TILE_ROWS, vals.shape[1])
+    ct = cols.reshape(-1, TILE_ROWS, cols.shape[1])
+    nt = vt.shape[0]
+    bufs0 = {
+        "v": jnp.zeros((3,) + vt.shape[1:], vt.dtype),
+        "c": jnp.zeros((3,) + ct.shape[1:], ct.dtype),
+        "y": jnp.zeros((nt, TILE_ROWS), jnp.float32),
+    }
+
+    def body(i, slot, bufs):
+        t = jnp.minimum(i, nt - 1)
+        v_s = jax.lax.dynamic_update_index_in_dim(bufs["v"], vt[t], slot, 0)
+        c_s = jax.lax.dynamic_update_index_in_dim(bufs["c"], ct[t], slot, 0)
+        c = (i - 1) % 3
+        yt = _tile_compute(v_s[c], c_s[c], x)
+        y = jax.lax.cond(
+            i >= 1,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, yt, jnp.maximum(i - 1, 0), 0),
+            lambda o: o, bufs["y"])
+        return {"v": v_s, "c": c_s, "y": y}
+
+    return rotate3(body, nt + 1, bufs0)["y"].reshape(-1)
+
+
+def run(level: OptLevel, vals, cols, x) -> jax.Array:
+    vals = jnp.asarray(vals, jnp.float32)
+    cols = jnp.asarray(cols, jnp.int32)
+    x = jnp.asarray(x, jnp.float32)
+    level = OptLevel(level)
+    if level == OptLevel.O0:
+        return _run_o0(vals, cols, x)
+    if level == OptLevel.O1:
+        return _run_o1(vals, cols, x)
+    if level == OptLevel.O2:
+        return _run_o2(vals, cols, x)
+    if level == OptLevel.O3:
+        return _run_o3(vals, cols, x)
+    return _run_o4(vals, cols, x)
+
+
+def make_inputs(rng: np.random.Generator, scale: float = 1.0) -> dict:
+    n = max(TILE_ROWS, int(4096 * scale) // TILE_ROWS * TILE_ROWS)
+    l = max(8, int(512 * scale))
+    return {
+        "vals": rng.standard_normal((n, l), np.float32),
+        "cols": rng.integers(0, n, (n, l), dtype=np.int32),
+        "x": rng.standard_normal((n,), np.float32),
+    }

@@ -1,0 +1,157 @@
+"""Viterbi — paper Table 3: 1M chains of 128 observations (64-state HMM).
+
+MachSuite convention: negative-log-space, minimization.  Output: the
+min-cost (float32) of the best path per chain.  The paper notes Viterbi's
+pipeline II is limited by the float add/min chain per stage (3.2x, Table 4)
+unlike NW's single-cycle integer cells.
+
+  O0  per-chain, per-step, per-state scalar loops
+  O1  chains staged in batches; same scalar DP
+  O2  + vectorized state update: one (S x S) min-plus contraction per step
+  O3  + PE duplication across chains (vmap)
+  O4  + 3-slot rotation over chain batches
+  O5  kept == O4 (float64-wide words already; paper: limited gain)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import MACHSUITE_PROFILES
+from repro.machsuite.common import OptLevel, rotate3
+
+PROFILE = MACHSUITE_PROFILES["viterbi"]
+
+BATCH = 8
+
+
+def oracle(obs: np.ndarray, init: np.ndarray, trans: np.ndarray,
+           emit: np.ndarray) -> np.ndarray:
+    obs = np.asarray(obs)
+    n_chains, T = obs.shape
+    out = np.zeros(n_chains, np.float32)
+    for c in range(n_chains):
+        llh = init + emit[:, obs[c, 0]]
+        for t in range(1, T):
+            llh = (llh[:, None] + trans).min(axis=0) + emit[:, obs[c, t]]
+        out[c] = llh.min()
+    return out.astype(np.float32)
+
+
+def _chain_scalar(obs_c, init, trans, emit):
+    """O0/O1: explicit per-state loops (the un-pipelined nest)."""
+    S = init.shape[0]
+    llh0 = init + emit[:, obs_c[0]]
+
+    def step(llh, o_t):
+        def per_state(s, new):
+            def per_prev(r, best):
+                return jnp.minimum(best, llh[r] + trans[r, s])
+            v = jax.lax.fori_loop(0, S, per_prev, jnp.float32(jnp.inf))
+            return new.at[s].set(v + emit[s, o_t])
+        new = jax.lax.fori_loop(0, S, per_state, jnp.zeros_like(llh))
+        return new, None
+
+    llh, _ = jax.lax.scan(step, llh0, obs_c[1:])
+
+    def reduce_min(s, best):
+        return jnp.minimum(best, llh[s])
+
+    return jax.lax.fori_loop(0, S, reduce_min, jnp.float32(jnp.inf))
+
+
+def _chain_vector(obs_c, init, trans, emit):
+    """O2+: min-plus contraction, all states in parallel per step."""
+    llh0 = init + emit[:, obs_c[0]]
+
+    def step(llh, o_t):
+        new = jnp.min(llh[:, None] + trans, axis=0) + emit[:, o_t]
+        return new, None
+
+    llh, _ = jax.lax.scan(step, llh0, obs_c[1:])
+    return jnp.min(llh)
+
+
+def _run_sequential(obs, init, trans, emit, per_chain, batched):
+    if not batched:
+        _, out = jax.lax.scan(
+            lambda _, o: (None, per_chain(o, init, trans, emit)), None, obs)
+        return out
+    ob = obs.reshape(-1, BATCH, obs.shape[1])
+
+    def per_batch(_, o):
+        _, out = jax.lax.scan(
+            lambda _, oc: (None, per_chain(oc, init, trans, emit)), None, o)
+        return None, out
+
+    _, out = jax.lax.scan(per_batch, None, ob)
+    return out.reshape(-1)
+
+
+def _run_o3(obs, init, trans, emit):
+    ob = obs.reshape(-1, BATCH, obs.shape[1])
+
+    def per_batch(_, o):
+        return None, jax.vmap(
+            lambda oc: _chain_vector(oc, init, trans, emit))(o)
+
+    _, out = jax.lax.scan(per_batch, None, ob)
+    return out.reshape(-1)
+
+
+def _run_o4(obs, init, trans, emit):
+    ob = obs.reshape(-1, BATCH, obs.shape[1])
+    n = ob.shape[0]
+    bufs0 = {
+        "slots": jnp.zeros((3,) + ob.shape[1:], ob.dtype),
+        "out": jnp.zeros((n, BATCH), jnp.float32),
+    }
+
+    def body(i, slot, bufs):
+        t = jnp.minimum(i, n - 1)
+        slots = jax.lax.dynamic_update_index_in_dim(
+            bufs["slots"], ob[t], slot, 0)
+        c = (i - 1) % 3
+        vals = jax.vmap(
+            lambda oc: _chain_vector(oc, init, trans, emit))(slots[c])
+        out = jax.lax.cond(
+            i >= 1,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, vals, jnp.maximum(i - 1, 0), 0),
+            lambda o: o, bufs["out"])
+        return {"slots": slots, "out": out}
+
+    return rotate3(body, n + 1, bufs0)["out"].reshape(-1)
+
+
+def run(level: OptLevel, obs, init, trans, emit) -> jax.Array:
+    obs = jnp.asarray(obs, jnp.int32)
+    init = jnp.asarray(init, jnp.float32)
+    trans = jnp.asarray(trans, jnp.float32)
+    emit = jnp.asarray(emit, jnp.float32)
+    level = OptLevel(level)
+    if level == OptLevel.O0:
+        return _run_sequential(obs, init, trans, emit, _chain_scalar, False)
+    if level == OptLevel.O1:
+        return _run_sequential(obs, init, trans, emit, _chain_scalar, True)
+    if level == OptLevel.O2:
+        return _run_sequential(obs, init, trans, emit, _chain_vector, True)
+    if level == OptLevel.O3:
+        return _run_o3(obs, init, trans, emit)
+    return _run_o4(obs, init, trans, emit)
+
+
+def make_inputs(rng: np.random.Generator, scale: float = 1.0) -> dict:
+    n_chains = max(BATCH, int(1e6 * scale) // BATCH * BATCH)
+    T = 128 if scale >= 1.0 else max(4, int(128 * min(1.0, scale * 64)))
+    S, M = 64, 64
+    if scale < 1.0:
+        S, M = 8, 16
+    return {
+        "obs": rng.integers(0, M, (n_chains, T), dtype=np.int32),
+        "init": -np.log(rng.dirichlet(np.ones(S))).astype(np.float32),
+        "trans": -np.log(rng.dirichlet(np.ones(S), S)).astype(np.float32),
+        "emit": -np.log(rng.dirichlet(np.ones(M), S)).astype(np.float32),
+    }

@@ -1,0 +1,7 @@
+from repro.models.model_zoo import (
+    ModelAPI,
+    decode_input_specs,
+    get_model,
+    input_specs,
+    make_batch,
+)

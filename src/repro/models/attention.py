@@ -1,0 +1,252 @@
+"""Attention: GQA with rope / qk-norm, chunked prefill, cached decode.
+
+Memory discipline follows the paper's ladder: the *naive* (O0) formulation
+materializes the full (S, S) score tensor; the production path is the
+*chunked* formulation (O1 explicit caching + O2 pipelining via ``lax.scan``
+over query blocks) which keeps a (q_chunk, S) working set — the jnp analog
+of the Pallas flash kernel in ``repro/kernels/flash_attention.py`` (used on
+real TPU hardware; the scan form is what the dry-run lowers).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PDef, rms_norm, rope
+from repro.parallel.sharding import constrain
+
+
+def attn_defs(d: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool = False) -> dict:
+    defs = {
+        "wq": PDef((d, n_heads, head_dim), ("embed", "heads", None)),
+        "wk": PDef((d, n_kv, head_dim), ("embed", "kv", None)),
+        "wv": PDef((d, n_kv, head_dim), ("embed", "kv", None)),
+        "wo": PDef((n_heads, head_dim, d), ("heads", None, "embed")),
+    }
+    if qk_norm:
+        defs["q_norm"] = PDef((head_dim,), (None,), "ones")
+        defs["k_norm"] = PDef((head_dim,), (None,), "ones")
+    return defs
+
+
+def _project_qkv(params, x, positions, *, qk_norm: bool, rope_theta: float,
+                 use_rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _heads_shardable(n_heads: int) -> bool:
+    """True when the merged head count divides the mesh axes mapped to
+    "heads" (ambient sharder; True on CPU/no-mesh)."""
+    from repro.parallel.sharding import get_sharder
+    s = get_sharder()
+    if s is None:
+        return True
+    tp = 1
+    for ax in s.rules.get("heads", ()):
+        tp *= s.mesh_sizes.get(ax, 1)
+    return tp <= 1 or n_heads % tp == 0
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B, qc, KV, G, dh); k: (B, S, KV, dh) -> (B, KV, G, qc, S)."""
+    return jnp.einsum("bqhgk,bshk->bhgqs", q, k) * scale
+
+
+def attention(params, x, positions, *, n_heads, n_kv, head_dim,
+              causal=True, qk_norm=False, rope_theta=1e4, q_chunk=1024,
+              kv_x=None, kv_positions=None, use_rope=True, unroll=False,
+              scores_dtype=jnp.float32):
+    """Chunked multi-head attention.
+
+    ``kv_x`` switches to cross-attention (keys/values from encoder states,
+    no causal mask, no rope on kv side unless positions given).
+    x: (B, S, d) -> (B, S, d).
+    """
+    B, S, d = x.shape
+    dt = x.dtype
+    scale = head_dim ** -0.5
+    group = n_heads // n_kv
+
+    if kv_x is None:
+        q, k, v = _project_qkv(params, x, positions, qk_norm=qk_norm,
+                               rope_theta=rope_theta, use_rope=use_rope)
+        kv_pos = positions
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", kv_x, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", kv_x, params["wv"].astype(dt))
+        if qk_norm:
+            q = rms_norm(q, params["q_norm"])
+            k = rms_norm(k, params["k_norm"])
+        if use_rope:
+            q = rope(q, positions, rope_theta)
+            if kv_positions is not None:
+                k = rope(k, kv_positions, rope_theta)
+        kv_pos = kv_positions
+
+    # Layout selection: when the merged head count divides the TP axis,
+    # use the MERGED-heads discipline (Megatron): expand KV heads to the
+    # full H once, so q / k / v / scores / probs / o are ALL sharded on the
+    # same "heads" axis and the attention path needs zero resharding.  (A
+    # split (KV, G) layout forces the SPMD partitioner into involuntary
+    # full rematerialization between the heads-sharded projections and any
+    # score sharding — EXPERIMENTS §Perf measures the difference.)
+    #
+    # When heads DON'T divide (llama4's 40, smollm's 15 on a 16-way axis),
+    # expansion would replicate k/v AND the compute; instead keep the
+    # grouped GQA math with the query-SEQUENCE dim sharded end-to-end
+    # (sequence parallelism): scores, probs and o all shard over qc, so
+    # the quadratic work still spreads across the TP axis.
+    merged = _heads_shardable(n_heads)
+    S_kv = k.shape[1]
+
+    if merged:
+        if group > 1:
+            k = jnp.repeat(k, group, axis=2)              # (B, Skv, H, dh)
+            v = jnp.repeat(v, group, axis=2)
+        k = constrain(k, "batch", None, "heads", None)
+        v = constrain(v, "batch", None, "heads", None)
+        q = constrain(q, "batch", None, "heads", None)
+    else:
+        k = constrain(k, "batch", None, "kv", None)
+        v = constrain(v, "batch", None, "kv", None)
+        q = constrain(q, "batch", "q_seq", None, None)
+
+    n_chunks = max(1, S // q_chunk)
+    qc = S // n_chunks if S % n_chunks == 0 else S
+    if S % qc != 0:
+        n_chunks, qc = 1, S
+
+    if merged:
+        q = q.reshape(B, n_chunks, qc, n_heads, head_dim).swapaxes(0, 1)
+    else:
+        q = q.reshape(B, n_chunks, qc, n_kv, group, head_dim).swapaxes(0, 1)
+    qpos = positions.reshape(B, n_chunks, qc).swapaxes(0, 1) \
+        if positions is not None else None
+    kvp = (kv_pos if kv_pos is not None
+           else jnp.broadcast_to(jnp.arange(S_kv)[None], (B, S_kv)))
+
+    def _softmax(s):
+        if s.dtype == jnp.float32:
+            return jax.nn.softmax(s, axis=-1).astype(dt)
+        # bf16 logits: subtract the (f32) rowmax, exponentiate in bf16,
+        # normalize with an f32 sum — the flash-kernel numerics
+        m = jnp.max(s.astype(jnp.float32), axis=-1, keepdims=True)
+        e = jnp.exp(s - m.astype(s.dtype))
+        z = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+        return (e / z.astype(s.dtype)).astype(dt)
+
+    def block_merged(q_blk, qp_blk):
+        s = jnp.einsum("bqhk,bshk->bhqs", q_blk, k) * scale
+        s = s.astype(scores_dtype)   # f32 faithful; bf16 = §Perf knob
+        s = constrain(s, "batch", "heads", "q_seq", None)
+        if causal:
+            mask = qp_blk[:, None, :, None] >= kvp[:, None, None, :]
+            s = jnp.where(mask, s, -1e30)
+        p = _softmax(s)
+        o = jnp.einsum("bhqs,bshk->bqhk", p, v)           # (B,qc,H,dh)
+        return constrain(o, "batch", "q_seq", "heads", None)
+
+    def block_grouped(q_blk, qp_blk):
+        q_blk = constrain(q_blk, "batch", "q_seq", None, None, None)
+        s = jnp.einsum("bqhgk,bshk->bhgqs", q_blk, k) * scale
+        s = s.astype(scores_dtype)
+        s = constrain(s, "batch", "kv", None, "q_seq", None)
+        if causal:
+            mask = (qp_blk[:, None, None, :, None]
+                    >= kvp[:, None, None, None, :])
+            s = jnp.where(mask, s, -1e30)
+        p = _softmax(s)
+        o = jnp.einsum("bhgqs,bshk->bqhgk", p, v)         # (B,qc,KV,G,dh)
+        o = constrain(o, "batch", "q_seq", "kv", None, None)
+        return o.reshape(o.shape[0], o.shape[1], n_heads, head_dim)
+
+    block = block_merged if merged else block_grouped
+
+    if n_chunks == 1:
+        out = block(q[0], None if qpos is None else qpos[0])
+        out = out[None]
+    else:
+        # Remat per q-chunk: the backward pass recomputes one chunk's
+        # scores at a time instead of keeping all of them resident.
+        from repro.models.loops import map_or_unroll
+        blk = jax.checkpoint(lambda args: block(*args))
+        out = map_or_unroll(blk, (q, qpos), unroll=unroll)
+
+    out = out.swapaxes(0, 1).reshape(B, S, n_heads, head_dim)
+    out = constrain(out, "batch", None, "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+
+
+def init_kv_cache(batch, max_seq, n_kv, head_dim, dtype=jnp.bfloat16):
+    shape = (batch, max_seq, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_spec(batch, max_seq, n_kv, head_dim, dtype=jnp.bfloat16):
+    shape = (batch, max_seq, n_kv, head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def decode_attention(params, x, cache, positions, *, n_heads, n_kv, head_dim,
+                     qk_norm=False, rope_theta=1e4, cross=False,
+                     update_cache=True):
+    """Single-token attention against a KV cache.
+
+    x: (B, 1, d); positions: (B,) current index per sequence.
+    cache: {"k","v"} of (B, S_max, KV, dh), sequence-sharded for long ctx.
+    Returns (out (B, 1, d), new_cache).
+    """
+    B, T, d = x.shape
+    dt = x.dtype
+    scale = head_dim ** -0.5
+    group = n_heads // n_kv
+
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+    q = rope(q, positions[:, None], rope_theta)
+
+    if cross or not update_cache:
+        ck, cv = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+        if qk_norm:
+            k = rms_norm(k, params["k_norm"])
+        k = rope(k, positions[:, None], rope_theta)
+        b_idx = jnp.arange(B)
+        ck = cache["k"].at[b_idx, positions].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[b_idx, positions].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+
+    ck = constrain(ck, "batch", "kv_seq", "kv", None)
+    cv = constrain(cv, "batch", "kv_seq", "kv", None)
+    S = ck.shape[1]
+
+    qg = q.reshape(B, T, n_kv, group, head_dim)
+    s = jnp.einsum("bthgk,bshk->bhgts", qg, ck.astype(dt)) * scale
+    s = s.astype(jnp.float32)
+    kv_pos = jnp.arange(S)[None]
+    valid = kv_pos <= positions[:, None] if not cross \
+        else jnp.ones((B, S), bool)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(dt)
+    o = jnp.einsum("bhgts,bshk->bthgk", p, cv.astype(dt))
+    o = o.reshape(B, T, n_heads, head_dim)
+    out = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(dt))
+    return out, new_cache

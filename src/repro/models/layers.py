@@ -1,0 +1,192 @@
+"""Model-building primitives: declarative param defs, norms, MLPs, rope.
+
+Every layer declares its parameters as a nested dict of ``PDef`` records
+(shape + logical sharding axes + initializer).  A single generic
+``init_params`` / ``param_axes`` pair then guarantees the param pytree and
+its sharding-spec pytree never drift apart — the property tests rely on this.
+
+Logical axes used across the repo (mapped to mesh axes by
+``parallel/sharding.py``):
+
+  embed   — the d_model dimension of weights (FSDP axis)
+  mlp     — the hidden/ffn dimension (tensor-parallel axis)
+  heads   — attention-head dimension of fused head weights (TP axis)
+  kv      — kv-head dimension
+  vocab   — vocabulary dimension (TP axis)
+  expert  — MoE expert dimension (expert-parallel axis)
+  layers  — the scan-stacked layer dimension (never sharded)
+  None    — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    shape: tuple
+    axes: tuple                  # logical axis names (len == len(shape))
+    init: str = "normal"         # normal | zeros | ones | small
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple) -> int:
+    return shape[-2] if len(shape) >= 2 else max(1, shape[-1])
+
+
+def init_params(rng: jax.Array, defs, dtype=jnp.float32):
+    """Initialize a (nested-dict) tree of PDefs into arrays."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, PDef)
+    )
+    rngs = jax.random.split(rng, len(leaves))
+    arrs = []
+    for r, d in zip(rngs, leaves):
+        if d.init == "zeros":
+            a = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            a = jnp.ones(d.shape, dtype)
+        else:
+            std = d.scale if d.scale is not None else 1.0 / math.sqrt(
+                _fan_in(d.shape)
+            )
+            if d.init == "small":
+                std = d.scale if d.scale is not None else 0.02
+            a = (jax.random.normal(r, d.shape) * std).astype(dtype)
+        arrs.append(a)
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def param_axes(defs):
+    """Same-structure tree of logical-axes tuples."""
+    return jax.tree.map(
+        lambda d: d.axes, defs, is_leaf=lambda x: isinstance(x, PDef)
+    )
+
+
+def param_shapes(defs, dtype=jnp.float32):
+    """Same-structure tree of ShapeDtypeStructs (for dry-run/abstract init)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, PDef),
+    )
+
+
+def stack_defs(defs, n: int):
+    """Prepend a scan-stacked ``layers`` dimension to every PDef."""
+    return jax.tree.map(
+        lambda d: PDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, PDef),
+    )
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight.astype(dt)
+
+
+def rms_norm_defs(d: int) -> PDef:
+    return PDef((d,), (None,), "ones")
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu_defs(d: int, d_ff: int) -> dict:
+    return {
+        "wi": PDef((d, d_ff), ("embed", "mlp")),
+        "wg": PDef((d, d_ff), ("embed", "mlp")),
+        "wo": PDef((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def relu2_defs(d: int, d_ff: int) -> dict:
+    """Nemotron-4 squared-ReLU MLP (no gating)."""
+    return {
+        "wi": PDef((d, d_ff), ("embed", "mlp")),
+        "wo": PDef((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(params: dict, x, kind: str = "swiglu"):
+    dt = x.dtype
+    if kind == "relu2":
+        h = jnp.maximum(x @ params["wi"].astype(dt), 0.0)
+        h = h * h
+        return h @ params["wo"].astype(dt)
+    h = jax.nn.silu(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    return h @ params["wo"].astype(dt)
+
+
+def mlp_defs(d: int, d_ff: int, kind: str = "swiglu") -> dict:
+    return relu2_defs(d, d_ff) if kind == "relu2" else swiglu_defs(d, d_ff)
+
+
+def embed_defs(vocab: int, d: int) -> dict:
+    return {
+        "embedding": PDef((vocab, d), ("vocab", "embed"), "small"),
+        "lm_head": PDef((d, vocab), ("embed", "vocab")),
+        "final_norm": rms_norm_defs(d),
+    }
+
+
+def chunked_cross_entropy(h, params, labels, *, chunk: int = 2048,
+                          compute_dtype=jnp.bfloat16, unroll: bool = False):
+    """Mean token cross-entropy with the vocab projection applied per
+    sequence-chunk (bounds peak logits memory — the 'explicit data caching'
+    step applied to the loss).  h: (B, S, d); labels: (B, S) int32."""
+    d = h.shape[-1]
+    B, S = labels.shape
+    lm_head = params["lm_head"].astype(compute_dtype)
+    n_chunks = max(1, S // chunk)
+    while S % n_chunks:          # S need not be chunk-aligned (e.g. the
+        n_chunks -= 1            # vlm 32768-256 prefill): largest divisor
+    hs = h.reshape(B, n_chunks, -1, d).swapaxes(0, 1)       # (C, B, s, d)
+    ls = labels.reshape(B, n_chunks, -1).swapaxes(0, 1)     # (C, B, s)
+
+    def body(carry, xs):
+        hc, lc = xs
+        logits = (hc @ lm_head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, lc[..., None], axis=-1
+        ).squeeze(-1)
+        return carry + jnp.sum(logz - gold), None
+
+    from repro.models.loops import scan_or_unroll
+    total, _ = scan_or_unroll(body, jnp.zeros((), jnp.float32), (hs, ls),
+                              unroll=unroll)
+    return total / (B * S)

@@ -1,0 +1,224 @@
+"""Mamba-2 (SSD) block: chunked state-space scan + single-step decode.
+
+The chunked algorithm is the TPU adaptation of the paper's ladder applied to
+a recurrence: intra-chunk work is a dense (Q x Q) block computed on the MXU
+(explicit data caching: the chunk is the tile), chunks are walked by a
+``lax.scan`` carrying the (H, P, N) state (customized pipelining), heads
+shard over ``model`` (PE duplication).  A Pallas kernel with the identical
+chunk math lives in ``repro/kernels/mamba2_ssd.py``.
+
+Shapes: x (B, S, d_model); internally d_inner = expand*d_model split into
+H = d_inner/P heads of dim P; state N = ssm_state; groups fixed at 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PDef, rms_norm
+from repro.parallel.sharding import constrain
+
+
+def mamba2_defs(d: int, *, expand: int = 2, head_dim: int = 64,
+                state: int = 64, conv_width: int = 4) -> dict:
+    d_in = expand * d
+    nheads = d_in // head_dim
+    conv_ch = d_in + 2 * state
+    return {
+        "norm": PDef((d,), (None,), "ones"),
+        # in_proj -> [z (d_in), x (d_in), B (N), C (N), dt (H)]
+        "in_proj": PDef((d, 2 * d_in + 2 * state + nheads),
+                        ("embed", "mlp")),
+        "conv_w": PDef((conv_width, conv_ch), (None, "mlp"), "small"),
+        "conv_b": PDef((conv_ch,), ("mlp",), "zeros"),
+        "A_log": PDef((nheads,), (None,), "zeros"),
+        "D": PDef((nheads,), (None,), "ones"),
+        "dt_bias": PDef((nheads,), (None,), "zeros"),
+        "gate_norm": PDef((d_in,), ("mlp",), "ones"),
+        "out_proj": PDef((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(zxbcdt, d_in, state, nheads):
+    z = zxbcdt[..., :d_in]
+    xs = zxbcdt[..., d_in: 2 * d_in]
+    Bs = zxbcdt[..., 2 * d_in: 2 * d_in + state]
+    Cs = zxbcdt[..., 2 * d_in + state: 2 * d_in + 2 * state]
+    dt = zxbcdt[..., 2 * d_in + 2 * state:]
+    return z, xs, Bs, Cs, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, ch); w: (K, ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pad[:, i: i + x.shape[1]] * w[i]
+    return out + b
+
+
+def ssd_chunked(xh, dt, A, Bs, Cs, *, chunk: int, init_state=None,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) (negative);
+    Bs, Cs: (B, S, N).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bs.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    # Chunk-major layout for the scan: (nc, B, Q, ...).
+    xc = jnp.moveaxis(xh.reshape(Bsz, nc, chunk, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, chunk, H), 1, 0)
+    Bc = jnp.moveaxis(Bs.reshape(Bsz, nc, chunk, N), 1, 0)
+    Cc = jnp.moveaxis(Cs.reshape(Bsz, nc, chunk, N), 1, 0)
+
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, :, :, None]  # (1,Q,Q,1)
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), xh.dtype)).astype(jnp.float32)
+
+    def chunk_body(state, inp):
+        """One chunk: intra-chunk dense block + state read/update.
+
+        The (B, Q, Q, H) decay tensor exists only for the current chunk —
+        the scan is the load-compute-store rotation over chunks."""
+        x_c, dt_c, B_c, C_c = inp                # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        la = dt_c * A                            # (B,Q,H), <= 0
+        cum = jnp.cumsum(la, axis=1)             # (B,Q,H)
+
+        seg = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Q,Q,H)
+        L = jnp.where(causal, jnp.exp(seg), 0.0).astype(xh.dtype)
+        CB = jnp.einsum("bin,bjn->bij", C_c, B_c)         # (B,Q,Q)
+        xdt = x_c * dt_c[..., None]                       # (B,Q,H,P)
+        y_diag = jnp.einsum("bij,bijh,bjhp->bihp", CB, L, xdt)
+
+        # Contribution of the incoming state.
+        out_decay = jnp.exp(cum).astype(xh.dtype)         # (B,Q,H)
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", C_c,
+                           state.astype(xh.dtype), out_decay)
+
+        # Update state to end of chunk.
+        decay_states = jnp.exp(cum[:, -1:, :] - cum)      # (B,Q,H)
+        st_c = jnp.einsum("bjn,bjh,bjhp->bhpn", B_c, decay_states, xdt)
+        chunk_decay = jnp.exp(cum[:, -1, :]).astype(jnp.float32)
+        new_state = (state * chunk_decay[:, :, None, None]
+                     + st_c.astype(jnp.float32))
+        return new_state, (y_diag + y_off)
+
+    from repro.models.loops import scan_or_unroll
+    final, ys = scan_or_unroll(chunk_body, s0, (xc, dtc, Bc, Cc),
+                               unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y, final.astype(xh.dtype)
+
+
+def mamba2_apply(params, x, *, expand=2, head_dim=64, state=64,
+                 conv_width=4, chunk=256, unroll=False):
+    """Full-sequence block apply. x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    d_in = expand * d
+    H = d_in // head_dim
+
+    h = rms_norm(x, params["norm"])
+    zxbcdt = h @ params["in_proj"].astype(dt_)
+    z, xs, Bs, Cs, dtr = _split_proj(zxbcdt, d_in, state, H)
+
+    xbc = jnp.concatenate([xs, Bs, Cs], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"].astype(dt_),
+                                   params["conv_b"].astype(dt_)))
+    xs, Bs, Cs = (xbc[..., :d_in], xbc[..., d_in:d_in + state],
+                  xbc[..., d_in + state:])
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, S, H, head_dim)
+    xh = constrain(xh, "batch", None, "heads", None)
+
+    chunk = min(chunk, S)
+    y, _ = ssd_chunked(xh, dt.astype(dt_), A.astype(dt_), Bs, Cs,
+                       chunk=chunk, unroll=unroll)
+    y = y + xh * params["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"])
+    return y @ params["out_proj"].astype(dt_)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def mamba2_state_spec(batch, d, *, expand=2, head_dim=64, state=64,
+                      conv_width=4, dtype=jnp.bfloat16):
+    d_in = expand * d
+    H = d_in // head_dim
+    conv_ch = d_in + 2 * state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, conv_width - 1, conv_ch), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, H, head_dim, state), dtype),
+    }
+
+
+def mamba2_init_state(batch, d, *, expand=2, head_dim=64, state=64,
+                      conv_width=4, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        mamba2_state_spec(batch, d, expand=expand, head_dim=head_dim,
+                          state=state, conv_width=conv_width, dtype=dtype),
+    )
+
+
+def mamba2_decode(params, x, cache, *, expand=2, head_dim=64, state=64,
+                  conv_width=4):
+    """Single-token step. x: (B, 1, d); cache: {conv, ssm}."""
+    B, T, d = x.shape
+    dt_ = x.dtype
+    d_in = expand * d
+    H = d_in // head_dim
+
+    h = rms_norm(x, params["norm"])
+    zxbcdt = h @ params["in_proj"].astype(dt_)
+    z, xs, Bs, Cs, dtr = _split_proj(zxbcdt, d_in, state, H)
+
+    xbc_t = jnp.concatenate([xs, Bs, Cs], axis=-1)[:, 0]   # (B, ch)
+    window = jnp.concatenate(
+        [cache["conv"].astype(dt_), xbc_t[:, None]], axis=1
+    )                                                       # (B, K, ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window,
+                          params["conv_w"].astype(dt_)) \
+        + params["conv_b"].astype(dt_)
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xs_t = xbc[:, :d_in]
+    B_t = xbc[:, d_in:d_in + state]
+    C_t = xbc[:, d_in + state:]
+
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                 # (B,H)
+
+    xh = xs_t.reshape(B, H, head_dim)
+    xh = constrain(xh, "batch", "heads", None)
+    ssm = cache["ssm"].astype(jnp.float32)
+    ssm = constrain(ssm, "batch", "heads", None, None)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh.astype(jnp.float32),
+                     B_t.astype(jnp.float32), dt)
+    upd = constrain(upd, "batch", "heads", None, None)
+    ssm = ssm * decay[:, :, None, None] + upd
+    ssm = constrain(ssm, "batch", "heads", None, None)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, C_t.astype(jnp.float32))
+    y = constrain(y, "batch", "heads", None)
+    y = y.astype(dt_) + xh * params["D"].astype(dt_)[None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"])
+    out = y @ params["out_proj"].astype(dt_)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "ssm": ssm.astype(cache["ssm"].dtype)}

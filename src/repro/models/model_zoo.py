@@ -1,0 +1,111 @@
+"""Unified model API: family dispatch + input specs for every shape cell.
+
+``get_model(cfg)`` returns a ``ModelAPI`` whose functions close over the
+arch config.  ``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins
+for every model input of that (arch x shape) cell — weak-type-correct,
+shardable, no device allocation — which is what the multi-pod dry-run
+lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, rwkv_lm, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable            # (rng) -> params
+    axes: Callable            # () -> logical-axes tree
+    defs: Callable            # () -> PDef tree
+    loss: Callable            # (params, batch) -> scalar
+    decode_step: Callable     # (params, cache, tokens, positions) -> (logits, cache)
+    cache_spec: Callable      # (batch, max_seq) -> spec tree
+    init_cache: Callable      # (batch, max_seq) -> cache tree
+    cache_axes: Callable      # () -> logical-axes tree matching cache_spec
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif cfg.family == "ssm":
+        mod = rwkv_lm
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    elif cfg.family == "audio":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda rng: mod.init(cfg, rng),
+        axes=lambda: mod.axes(cfg),
+        defs=lambda: mod.model_defs(cfg),
+        loss=lambda params, batch: mod.lm_loss(cfg, params, batch),
+        decode_step=lambda params, cache, tokens, positions:
+            mod.decode_step(cfg, params, cache, tokens, positions),
+        cache_spec=lambda batch, max_seq:
+            mod.cache_spec(cfg, batch, max_seq),
+        init_cache=lambda batch, max_seq:
+            mod.init_cache(cfg, batch, max_seq),
+        cache_axes=lambda: mod.cache_axes(cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins and smoke-test shapes)
+# ---------------------------------------------------------------------------
+
+def _tok(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Train/prefill batch specs for one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    emb_dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb_dt),
+            "tokens": _tok((B, S)),
+            "labels": _tok((B, S)),
+        }
+    if cfg.family == "vlm":
+        P = cfg.n_prefix
+        St = S - P
+        return {
+            "patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), emb_dt),
+            "tokens": _tok((B, St)),
+            "labels": _tok((B, St)),
+        }
+    return {"tokens": _tok((B, S)), "labels": _tok((B, S))}
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(cache_specs, tokens, positions) for a serve_step cell."""
+    B, S = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+    cache = model.cache_spec(B, S)
+    return cache, _tok((B, 1)), jax.ShapeDtypeStruct((B,), jnp.int32)
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, rng) -> dict:
+    """Materialize a synthetic batch matching ``input_specs`` (smoke/tests)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, s in specs.items():
+        rng, sub = jax.random.split(rng)
+        if s.dtype == jnp.int32:
+            out[k] = jax.random.randint(sub, s.shape, 0, cfg.vocab,
+                                        dtype=jnp.int32)
+        else:
+            out[k] = jax.random.normal(sub, s.shape, s.dtype) * 0.02
+    return out

@@ -1,0 +1,41 @@
+"""Remat policy knob — §Perf's activation-checkpoint lever.
+
+The paper's guideline trades scratchpad capacity against recompute; on TPU
+the same trade is the activation-checkpoint policy:
+
+  "full"  — per-layer ``jax.checkpoint``: minimal activation memory,
+            recomputes the whole layer forward in the backward pass
+            (the paper-faithful default for the big configs)
+  "dots"  — ``checkpoint_dots_with_no_batch_dims``: saves matmul outputs
+            (cheap to store, expensive to recompute), recomputes only
+            elementwise chains — most of full-remat's memory saving at a
+            fraction of its recompute flops/bytes
+  "none"  — no outer checkpoint (the attention module still remats its
+            score blocks per q-chunk, so peak stays bounded in S)
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def wrap_layer_body(body, policy):
+    """Apply the configured checkpoint policy to a scan body."""
+    if policy in (False, None, "none"):
+        return body
+    if policy in (True, "full"):
+        return jax.checkpoint(body)
+    if policy == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+def resolve_policy(cfg):
+    """ArchConfig -> policy value (remat_policy overrides legacy remat)."""
+    pol = getattr(cfg, "remat_policy", "")
+    if pol:
+        return pol
+    return "full" if cfg.remat else "none"

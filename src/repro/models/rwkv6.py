@@ -1,0 +1,197 @@
+"""RWKV-6 ("Finch"): data-dependent-decay linear attention, attention-free.
+
+Time-mix uses the RWKV-6 ddlerp (token-shift mixed by a low-rank,
+data-dependent amount) and a per-channel data-dependent decay
+``w = exp(-exp(ww))``; the WKV recurrence
+
+    y_t = r_t . (S_{t-1} + u (x) k_t v_t),   S_t = diag(w_t) S_{t-1} + k_t v_t
+
+is evaluated in *chunked* form for training (the load-compute-store ladder
+applied to a recurrence; mirrored by ``repro/kernels/rwkv6_wkv.py``) and as
+a single-step update for decode.
+
+Numerics: within-chunk decay products are computed as exp(cum_i - cum_j)
+with log-decay clamped to [-LW_CLAMP, 0] so chunk-local exponents stay in
+f32 range (documented in DESIGN.md; the sequential oracle uses the same
+clamp, so chunked == sequential holds exactly).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PDef, rms_norm
+from repro.parallel.sharding import constrain
+
+LORA_MIX = 32       # ddlerp low-rank width
+LORA_DECAY = 64     # decay low-rank width
+LW_CLAMP = 0.35     # max |log w| per step (see module docstring)
+
+
+def rwkv6_time_mix_defs(d: int, head_dim: int = 64) -> dict:
+    H = d // head_dim
+    return {
+        "ln": PDef((d,), (None,), "ones"),
+        "mu_base": PDef((d,), (None,), "small"),
+        "mix_w1": PDef((d, 5 * LORA_MIX), ("embed", None), "small"),
+        "mix_w2": PDef((5, LORA_MIX, d), (None, None, "embed"), "small"),
+        "mu5": PDef((5, d), (None, None), "small"),
+        "decay_w0": PDef((d,), (None,), "small"),
+        "decay_w1": PDef((d, LORA_DECAY), ("embed", None), "small"),
+        "decay_w2": PDef((LORA_DECAY, d), (None, "embed"), "small"),
+        "wr": PDef((d, d), ("embed", "heads")),
+        "wk": PDef((d, d), ("embed", "heads")),
+        "wv": PDef((d, d), ("embed", "heads")),
+        "wg": PDef((d, d), ("embed", "heads")),
+        "bonus_u": PDef((H, head_dim), ("heads", None), "small"),
+        "wo": PDef((d, d), ("heads", "embed")),
+        "out_gn": PDef((d,), (None,), "ones"),
+    }
+
+
+def rwkv6_channel_mix_defs(d: int, d_ff: int) -> dict:
+    return {
+        "ln": PDef((d,), (None,), "ones"),
+        "mu_k": PDef((d,), (None,), "small"),
+        "mu_r": PDef((d,), (None,), "small"),
+        "wk": PDef((d, d_ff), ("embed", "mlp")),
+        "wv": PDef((d_ff, d), ("mlp", "embed")),
+        "wr": PDef((d, d), ("embed", "embed2")),
+    }
+
+
+def _token_shift(x, x_prev_token=None):
+    """Shift right by one along seq; first slot filled by x_prev_token."""
+    first = (jnp.zeros_like(x[:, :1]) if x_prev_token is None
+             else x_prev_token[:, None])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x, xx):
+    """RWKV6 data-dependent lerp -> the 5 mixed inputs (w,k,v,r,g)."""
+    base = x + xx * params["mu_base"].astype(x.dtype)
+    lora = jnp.tanh(base @ params["mix_w1"].astype(x.dtype))
+    B, S, _ = lora.shape
+    lora = lora.reshape(B, S, 5, LORA_MIX)
+    dyn = jnp.einsum("bsfl,fld->bsfd", lora,
+                     params["mix_w2"].astype(x.dtype))
+    mixed = (x[:, :, None]
+             + xx[:, :, None] * (params["mu5"].astype(x.dtype) + dyn))
+    return [mixed[:, :, i] for i in range(5)]
+
+
+def wkv_chunked(r, k, v, lw, u, *, chunk: int, init_state=None,
+                unroll: bool = False):
+    """Chunked WKV. r,k,v: (B,S,H,N); lw: (B,S,H,N) log-decay in [-c,0];
+    u: (H,N).  Returns (y (B,S,H,N), final_state (B,H,N,N))."""
+    B, S, H, N = r.shape
+    nc = S // chunk
+    assert S % chunk == 0
+
+    cm = lambda t: jnp.moveaxis(t.reshape(B, nc, chunk, H, N), 1, 0)
+    rc, kc, vc, lwc = cm(r), cm(k), cm(v), cm(lw)
+    ii = jnp.arange(chunk)
+    strict = (ii[:, None] > ii[None, :])[None, :, :, None]   # j < i
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, N, N), jnp.float32))
+
+    def body(state, inp):
+        r_c, k_c, v_c, lw_c = inp                 # (B,Q,H,N)
+        cum = jnp.cumsum(lw_c, axis=1)            # (B,Q,H,N)
+        # A[i,j] = sum_c r_i[c] k_j[c] exp(cum_{i-1,c} - cum_{j,c})  (j<i)
+        ri = r_c * jnp.exp(cum - lw_c)            # r_i * exp(cum_{i-1})
+        kj = k_c * jnp.exp(-cum)
+        A = jnp.einsum("bihc,bjhc->bhij", ri, kj)
+        A = jnp.where(jnp.moveaxis(strict, -1, 1), A, 0.0)
+        diag = jnp.einsum("bihc,hc,bihc->bih", r_c, u, k_c)
+        y = jnp.einsum("bhij,bjhn->bihn", A, v_c) \
+            + diag[..., None] * v_c
+        # State read: y_i += r_i exp(cum_{i-1}) . S_0
+        y = y + jnp.einsum("bihc,bhcn->bihn", ri, state.astype(ri.dtype))
+        # State update to end of chunk.
+        decay_k = jnp.exp(cum[:, -1:] - cum)      # (B,Q,H,N)
+        st_c = jnp.einsum("bjhc,bjhn->bhcn", k_c * decay_k, v_c)
+        total_decay = jnp.exp(cum[:, -1])         # (B,H,N)
+        new_state = (state * total_decay[..., None].astype(jnp.float32)
+                     + st_c.astype(jnp.float32))
+        return new_state, y
+
+    from repro.models.loops import scan_or_unroll
+    final, ys = scan_or_unroll(body, s0, (rc, kc, vc, lwc), unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, N)
+    return y, final
+
+
+def wkv_sequential(r, k, v, lw, u, *, init_state=None):
+    """Step-by-step oracle for the chunked form (tests/property checks)."""
+    B, S, H, N = r.shape
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, N, N), jnp.float32))
+
+    def step(state, inp):
+        r_t, k_t, v_t, lw_t = inp                 # (B,H,N)
+        kv = jnp.einsum("bhc,bhn->bhcn", k_t, v_t).astype(jnp.float32)
+        kv = constrain(kv, "batch", "heads", None, None)
+        y = jnp.einsum("bhc,bhcn->bhn", r_t.astype(jnp.float32),
+                       state + u[..., None] * kv)
+        state = state * jnp.exp(lw_t.astype(jnp.float32))[..., None] + kv
+        state = constrain(state, "batch", "heads", None, None)
+        return state, y
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0)
+    final, ys = jax.lax.scan(step, s0, (tm(r), tm(k), tm(v), tm(lw)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final
+
+
+def time_mix_apply(params, x, *, head_dim=64, chunk=128, state=None,
+                   x_prev=None, decode=False, unroll=False):
+    """x: (B, S, d).  Returns (out, (final_wkv_state, last_token))."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    H = d // head_dim
+
+    h = rms_norm(x, params["ln"])
+    xx = _token_shift(h, x_prev) - h
+    xw, xk, xv, xr, xg = _ddlerp(params, h, xx)
+
+    ww = params["decay_w0"].astype(dt_) + jnp.tanh(
+        xw @ params["decay_w1"].astype(dt_)
+    ) @ params["decay_w2"].astype(dt_)
+    lw = -jnp.clip(jnp.exp(ww.astype(jnp.float32)), 0.0, LW_CLAMP)  # (B,S,d)
+
+    r = (xr @ params["wr"].astype(dt_)).reshape(B, S, H, head_dim)
+    k = (xk @ params["wk"].astype(dt_)).reshape(B, S, H, head_dim)
+    v = (xv @ params["wv"].astype(dt_)).reshape(B, S, H, head_dim)
+    g = jax.nn.silu(xg @ params["wg"].astype(dt_))
+    lwh = lw.reshape(B, S, H, head_dim).astype(dt_)
+    r = constrain(r, "batch", None, "heads", None)
+    u = params["bonus_u"].astype(dt_)
+
+    if decode:
+        y, new_state = wkv_sequential(r, k, v, lwh, u, init_state=state)
+    else:
+        ck = min(chunk, S)
+        if S % ck != 0:
+            y, new_state = wkv_sequential(r, k, v, lwh, u, init_state=state)
+        else:
+            y, new_state = wkv_chunked(r, k, v, lwh, u, chunk=ck,
+                                       init_state=state, unroll=unroll)
+
+    y = y.reshape(B, S, d)
+    y = rms_norm(y, params["out_gn"]) * g
+    out = y @ params["wo"].astype(dt_)
+    return out, (new_state, h[:, -1])
+
+
+def channel_mix_apply(params, x, *, x_prev=None):
+    """x: (B, S, d) -> (out, last_token)."""
+    dt_ = x.dtype
+    h = rms_norm(x, params["ln"])
+    xx = _token_shift(h, x_prev) - h
+    xk = h + xx * params["mu_k"].astype(dt_)
+    xr = h + xx * params["mu_r"].astype(dt_)
+    k = jnp.maximum(xk @ params["wk"].astype(dt_), 0.0)
+    kv = (k * k) @ params["wv"].astype(dt_)
+    rgate = jax.nn.sigmoid(xr @ params["wr"].astype(dt_))
+    return rgate * kv, h[:, -1]

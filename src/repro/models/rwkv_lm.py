@@ -1,0 +1,126 @@
+"""RWKV-6 language model: attention-free stack of time-mix + channel-mix."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import rwkv6
+from repro.models.layers import (
+    PDef, chunked_cross_entropy, init_params, param_axes, rms_norm,
+    rms_norm_defs, stack_defs,
+)
+from repro.models.transformer import padded_vocab
+from repro.parallel.sharding import constrain
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    vp = padded_vocab(cfg.vocab)
+    block = {
+        "tm": rwkv6.rwkv6_time_mix_defs(d, cfg.rwkv_head_dim),
+        "cm": rwkv6.rwkv6_channel_mix_defs(d, cfg.d_ff),
+    }
+    return {
+        "embedding": PDef((vp, d), ("vocab", "embed"), "small"),
+        "lm_head": PDef((d, vp), ("embed", "vocab")),
+        "final_norm": rms_norm_defs(d),
+        "layers": stack_defs(block, cfg.n_layers),
+    }
+
+
+def forward(cfg: ArchConfig, params, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embedding"].astype(dt)[tokens]
+    h = constrain(h, "batch", None, None)
+
+    def body(h, layer_params):
+        out, _ = rwkv6.time_mix_apply(layer_params["tm"], h,
+                                      head_dim=cfg.rwkv_head_dim,
+                                      unroll=cfg.unroll_layers)
+        h = h + out
+        out, _ = rwkv6.channel_mix_apply(layer_params["cm"], h)
+        return h + out, None
+
+    from repro.models.remat import resolve_policy, wrap_layer_body
+    body_fn = wrap_layer_body(body, resolve_policy(cfg))
+    from repro.models.loops import scan_or_unroll
+    h, _ = scan_or_unroll(body_fn, h, params["layers"],
+                          unroll=cfg.unroll_layers)
+    return rms_norm(h, params["final_norm"])
+
+
+def lm_loss(cfg: ArchConfig, params, batch):
+    h = forward(cfg, params, batch["tokens"])
+    return chunked_cross_entropy(
+        h, params, batch["labels"],
+        chunk=min(cfg.loss_chunk, batch["labels"].shape[1]),
+        compute_dtype=jnp.dtype(cfg.compute_dtype),
+        unroll=cfg.unroll_layers,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode (state: wkv matrix + the two token-shift slots per layer)
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    d, N = cfg.d_model, cfg.rwkv_head_dim
+    H = d // N
+    L = cfg.n_layers
+    return {
+        "wkv": jax.ShapeDtypeStruct((L, batch, H, N, N), jnp.float32),
+        "tm_prev": jax.ShapeDtypeStruct((L, batch, d), dtype),
+        "cm_prev": jax.ShapeDtypeStruct((L, batch, d), dtype),
+    }
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq, dtype))
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, positions):
+    """positions unused (state carries history) but kept for API parity."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embedding"].astype(dt)[tokens]           # (B,1,d)
+
+    def body(h, xs):
+        layer_params, wkv, tm_prev, cm_prev = xs
+        out, (new_wkv, tm_last) = rwkv6.time_mix_apply(
+            layer_params["tm"], h, head_dim=cfg.rwkv_head_dim,
+            state=wkv, x_prev=tm_prev, decode=True,
+        )
+        h = h + out
+        out, cm_last = rwkv6.channel_mix_apply(
+            layer_params["cm"], h, x_prev=cm_prev,
+        )
+        return h + out, (new_wkv, tm_last.astype(tm_prev.dtype),
+                         cm_last.astype(cm_prev.dtype))
+
+    from repro.models.loops import scan_or_unroll
+    h, (wkv, tm_p, cm_p) = scan_or_unroll(
+        body, h,
+        (params["layers"], cache["wkv"], cache["tm_prev"], cache["cm_prev"]),
+        unroll=cfg.unroll_layers)
+    h = rms_norm(h, params["final_norm"])
+    logits = (h[:, 0] @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    return logits, {"wkv": wkv, "tm_prev": tm_p, "cm_prev": cm_p}
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    return {
+        "wkv": ("layers", "batch", "heads", None, None),
+        "tm_prev": ("layers", "batch", None),
+        "cm_prev": ("layers", "batch", None),
+    }
+
+
+def init(cfg: ArchConfig, rng):
+    return init_params(rng, model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def axes(cfg: ArchConfig):
+    return param_axes(model_defs(cfg))

@@ -1,0 +1,204 @@
+"""Decoder-only transformer (dense + MoE): train forward, loss, decode.
+
+Structure notes (scale posture):
+  * Layers are scan-stacked (``jax.lax.scan`` over a (L, ...) param tree) —
+    compile time and HLO size are O(1) in depth (88/96-layer configs).
+  * Per-layer remat (``jax.checkpoint``) bounds activation memory to one
+    layer's inputs; policy from ``ArchConfig.remat``.
+  * Vocab is padded to a multiple of 256 so the TP axis always divides it.
+  * Loss uses chunked cross-entropy (no full (B, S, V) f32 logits tensor).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    PDef, chunked_cross_entropy, init_params, mlp_apply, mlp_defs,
+    param_axes, rms_norm, rms_norm_defs, stack_defs,
+)
+from repro.parallel.sharding import constrain
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return (v + VOCAB_PAD - 1) // VOCAB_PAD * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def block_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    defs = {
+        "attn_norm": rms_norm_defs(d),
+        "attn": attn.attn_defs(d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, cfg.qk_norm),
+        "mlp_norm": rms_norm_defs(d),
+    }
+    if cfg.n_experts:
+        defs["moe"] = moe_mod.moe_defs(
+            d, cfg.n_experts, cfg.expert_d_ff,
+            shared_d_ff=cfg.d_ff if cfg.shared_expert else 0,
+        )
+    else:
+        defs["mlp"] = mlp_defs(d, cfg.d_ff, cfg.mlp_kind)
+    return defs
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    vp = padded_vocab(cfg.vocab)
+    return {
+        "embedding": PDef((vp, cfg.d_model), ("vocab", "embed"), "small"),
+        "lm_head": PDef((cfg.d_model, vp), ("embed", "vocab")),
+        "final_norm": rms_norm_defs(cfg.d_model),
+        "layers": stack_defs(block_defs(cfg), cfg.n_layers),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def block_apply(cfg: ArchConfig, params, h, positions):
+    """One decoder block. h: (B, S, d)."""
+    a = attn.attention(
+        params["attn"], rms_norm(h, params["attn_norm"]), positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        causal=True, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        q_chunk=cfg.q_chunk, unroll=cfg.unroll_layers,
+        scores_dtype=jnp.dtype(cfg.scores_dtype),
+    )
+    h = h + a
+    hn = rms_norm(h, params["mlp_norm"])
+    if cfg.n_experts:
+        moe_fn = (moe_mod.moe_apply_grouped if cfg.moe_local_dispatch
+                  else moe_mod.moe_apply)
+        m, aux = moe_fn(
+            params["moe"], hn, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        m, aux = mlp_apply(params["mlp"], hn, cfg.mlp_kind), 0.0
+    return h + m, aux
+
+
+def forward(cfg: ArchConfig, params, tokens, *, extra_embeds=None):
+    """tokens (B, S) -> (hidden (B, S, d), aux).  ``extra_embeds``
+    (B, P, d) is prepended (VLM patches / audio frames)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    emb = params["embedding"].astype(dt)
+    h = emb[tokens]
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(dt), h], axis=1)
+    B, S, _ = h.shape
+    h = constrain(h, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a = block_apply(cfg, layer_params, h, positions)
+        return (h, aux + a), None
+
+    from repro.models.remat import resolve_policy, wrap_layer_body
+    body_fn = wrap_layer_body(body, resolve_policy(cfg))
+    from repro.models.loops import scan_or_unroll
+    (h, aux), _ = scan_or_unroll(body_fn, (h, jnp.zeros((), jnp.float32)),
+                                 params["layers"], unroll=cfg.unroll_layers)
+    h = rms_norm(h, params["final_norm"])
+    return h, aux
+
+
+def lm_loss(cfg: ArchConfig, params, batch):
+    """batch: {"tokens": (B,S), "labels": (B,S)} (+ optional "frames" /
+    "patches" (B,P,d) prepended; loss is over the text positions only)."""
+    extra = batch.get("frames", batch.get("patches"))
+    h, aux = forward(cfg, params, batch["tokens"], extra_embeds=extra)
+    if extra is not None:
+        h = h[:, extra.shape[1]:]
+    loss = chunked_cross_entropy(
+        h, params, batch["labels"],
+        chunk=min(cfg.loss_chunk, batch["labels"].shape[1]),
+        compute_dtype=jnp.dtype(cfg.compute_dtype),
+        unroll=cfg.unroll_layers,
+    )
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    per = attn.kv_cache_spec(batch, max_seq, cfg.n_kv_heads, cfg.head_dim,
+                             dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        per,
+    )
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq, dtype))
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, positions):
+    """One decode step. tokens (B, 1) int32; positions (B,) int32.
+    Returns (logits (B, vocab_padded), new_cache)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embedding"].astype(dt)[tokens]           # (B, 1, d)
+
+    def body(h, xs):
+        layer_params, ck, cv = xs
+        a, new_c = attn.decode_attention(
+            layer_params["attn"], rms_norm(h, layer_params["attn_norm"]),
+            {"k": ck, "v": cv}, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        )
+        h = h + a
+        hn = rms_norm(h, layer_params["mlp_norm"])
+        if cfg.n_experts:
+            m, _ = moe_mod.moe_apply(
+                layer_params["moe"], hn, n_experts=cfg.n_experts,
+                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            )
+        else:
+            m = mlp_apply(layer_params["mlp"], hn, cfg.mlp_kind)
+        return h + m, (new_c["k"], new_c["v"])
+
+    from repro.models.loops import scan_or_unroll
+    h, (nk, nv) = scan_or_unroll(body, h,
+                                 (params["layers"], cache["k"], cache["v"]),
+                                 unroll=cfg.unroll_layers)
+    h = rms_norm(h, params["final_norm"])
+    logits = (h[:, 0] @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    return logits, {"k": nk, "v": nv}
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    ax = ("layers", "batch", "kv_seq", "kv", None)
+    return {"k": ax, "v": ax}
+
+
+def init(cfg: ArchConfig, rng) -> dict:
+    return init_params(rng, model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def axes(cfg: ArchConfig):
+    return param_axes(model_defs(cfg))

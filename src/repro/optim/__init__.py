@@ -1,0 +1,10 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    clip_by_global_norm,
+    global_norm,
+    init_state,
+    schedule,
+    state_axes,
+    state_spec,
+    update,
+)

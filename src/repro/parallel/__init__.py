@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (
+    Sharder,
+    constrain,
+    get_sharder,
+    make_rules,
+    set_sharder,
+    use_sharder,
+)

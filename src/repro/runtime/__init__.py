@@ -1,0 +1,5 @@
+from repro.runtime.compression import (int8_compress,  # noqa: F401
+                                       int8_decompress, CompressedReducer)
+from repro.runtime.fault_tolerance import (Heartbeat,  # noqa: F401
+                                           ResilientRunner, FaultInjector)
+from repro.runtime.overlap import DelayedGradSync  # noqa: F401

@@ -1,0 +1,172 @@
+"""Slot-based continuous-batching decode engine.
+
+The serving counterpart of the paper's ladder: a fixed pool of B slots (the
+"PE duplication" — B sequences decode in lockstep on the sharded
+serve_step), per-slot state caches staged on device (explicit data
+caching), admission/retirement pipelined with compute (double buffering:
+the host prepares next tokens while the device runs the step).
+
+Unified prefill/decode: every step feeds one token per active slot — a
+slot still consuming its prompt feeds the next prompt token (its logits
+are discarded), a generating slot feeds its last sampled token.  This
+keeps one jitted step for all families (KV-cache transformers, RWKV/SSM
+state models, enc-dec) and is exactly how slot-based TPU serving engines
+handle heterogeneous request phases.
+
+Slot hygiene: on admission the slot's cache slice is zeroed (SSM/RWKV
+states accumulate; KV caches are masked by position but zeroing keeps the
+invariant uniform).  The batch axis of every cache leaf is located via the
+model's ``cache_axes()`` logical names — no layout guessing.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    rid: int = -1
+    # filled by the engine:
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def n_prompt(self):
+        return len(self.prompt)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0              # tokens consumed (prompt + generated)
+
+    @property
+    def active(self):
+        return self.req is not None and not self.req.done
+
+    def next_token(self) -> int:
+        r = self.req
+        if self.pos < r.n_prompt:
+            return r.prompt[self.pos]
+        return r.generated[-1]
+
+    @property
+    def prefilling(self) -> bool:
+        # the step that consumes prompt token n_prompt-1 emits the first
+        # generated token, so "prefilling" = pos < n_prompt - 1
+        return self.pos < self.req.n_prompt - 1
+
+
+class DecodeEngine:
+    def __init__(self, model, params, *, batch_size: int, max_seq: int,
+                 pad_id: int = 0, step_fn=None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.pad_id = pad_id
+        self.cache = model.init_cache(batch_size, max_seq)
+        self._batch_axis = self._find_batch_axes()
+        self.slots = [_Slot() for _ in range(batch_size)]
+        self.queue: collections.deque = collections.deque()
+        self.finished: list = []
+        self._rid = itertools.count()
+        self.n_steps = 0
+
+        if step_fn is None:
+            def _step(params, cache, tokens, positions):
+                logits, new_cache = model.decode_step(
+                    params, cache, tokens, positions)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return nxt, new_cache
+            step_fn = jax.jit(_step, donate_argnums=(1,))
+        self.step_fn = step_fn
+
+    # -- slot/cache bookkeeping ----------------------------------------------
+    def _find_batch_axes(self):
+        axes_tree = self.model.cache_axes()
+        leaves_axes = jax.tree.leaves(
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+        leaves_cache = jax.tree.leaves(self.cache)
+        assert len(leaves_axes) == len(leaves_cache), "cache axes drift"
+        return [ax.index("batch") for ax in leaves_axes]
+
+    def _zero_slot(self, i: int):
+        leaves, treedef = jax.tree.flatten(self.cache)
+        out = []
+        for leaf, bax in zip(leaves, self._batch_axis):
+            idx = [slice(None)] * leaf.ndim
+            idx[bax] = i
+            out.append(leaf.at[tuple(idx)].set(0))
+        self.cache = jax.tree.unflatten(treedef, out)
+
+    # -- public API ------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        req.rid = next(self._rid)
+        self.queue.append(req)
+        return req.rid
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            req = self.queue.popleft()
+            assert req.n_prompt >= 1, "empty prompt"
+            assert req.n_prompt + req.max_new_tokens <= self.max_seq, (
+                "request exceeds engine max_seq")
+            self.slots[i] = _Slot(req=req, pos=0)
+            self._zero_slot(i)
+
+    def step(self):
+        """One engine tick: admit, run the batched decode step, retire."""
+        self._admit()
+        if not any(s.active for s in self.slots):
+            return False
+
+        tokens = np.full((self.B, 1), self.pad_id, np.int32)
+        positions = np.zeros((self.B,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                tokens[i, 0] = s.next_token()
+                positions[i] = s.pos
+
+        nxt, self.cache = self.step_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions))
+        nxt = np.asarray(nxt).reshape(self.B, -1)[:, -1]
+        self.n_steps += 1
+
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            emitted = not s.prefilling
+            s.pos += 1
+            if emitted:
+                r = s.req
+                tok = int(nxt[i])
+                r.generated.append(tok)
+                hit_eos = r.eos_id is not None and tok == r.eos_id
+                if (len(r.generated) >= r.max_new_tokens or hit_eos
+                        or s.pos + 1 >= self.max_seq):
+                    r.done = True
+                    self.finished.append(r)
+                    self.slots[i] = _Slot()
+        return True
+
+    def run(self, *, max_ticks: int = 10_000) -> list:
+        """Drain queue + slots; returns finished requests."""
+        for _ in range(max_ticks):
+            if not self.step() and not self.queue:
+                break
+        return self.finished

@@ -1,0 +1,100 @@
+"""Checkpointing: roundtrip, atomicity, rotation, async, manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, load_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.sharded import load_manifest
+
+
+@pytest.fixture
+def tree():
+    return {
+        "layers": {"w": jnp.arange(24.0).reshape(4, 6),
+                   "b": jnp.ones((6,), jnp.bfloat16)},
+        "step_scale": jnp.float32(0.5),
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    path = save_checkpoint(str(tmp_path / "ck"), tree, step=7,
+                           extra={"note": "hi"})
+    restored, step, extra = load_checkpoint(path, tree)
+    assert step == 7 and extra == {"note": "hi"}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_shape_mismatch_rejected(tmp_path, tree):
+    path = save_checkpoint(str(tmp_path / "ck"), tree, step=0)
+    bad = dict(tree)
+    bad["step_scale"] = jnp.zeros((3,))
+    with pytest.raises(ValueError):
+        load_checkpoint(path, bad)
+
+
+def test_missing_leaf_rejected(tmp_path, tree):
+    path = save_checkpoint(str(tmp_path / "ck"), tree, step=0)
+    bigger = dict(tree)
+    bigger["extra_leaf"] = jnp.zeros((2,))
+    with pytest.raises(KeyError):
+        load_checkpoint(path, bigger)
+
+
+def test_atomicity_no_tmp_left(tmp_path, tree):
+    path = save_checkpoint(str(tmp_path / "ck"), tree, step=1)
+    assert os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+    # re-save over the same path works (tmp+rename)
+    save_checkpoint(path, tree, step=2)
+    _, step, _ = load_checkpoint(path, tree)
+    assert step == 2
+
+
+def test_manifest_is_json_with_shards(tmp_path, tree):
+    path = save_checkpoint(str(tmp_path / "ck"), tree, step=3)
+    man = load_manifest(path)
+    assert man["step"] == 3
+    assert "layers.w" in man["leaves"]
+    rec = man["leaves"]["layers.w"]
+    assert rec["shape"] == [4, 6]
+    for sh in rec["shards"]:
+        assert os.path.exists(os.path.join(path, sh["file"]))
+
+
+def test_manager_rotation_and_latest(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path / "root"), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(tree, step=s)
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+    restored, step, _ = mgr.restore_latest(tree)
+    assert step == 4
+    mgr.close()
+
+
+def test_manager_async_snapshot_isolation(tmp_path):
+    """Mutating (donating) the live tree after save_async must not corrupt
+    the checkpoint — the save took a host snapshot."""
+    mgr = CheckpointManager(str(tmp_path / "root"), keep=2)
+    arr = jnp.arange(8.0)
+    mgr.save_async({"a": arr}, step=1)
+    arr = arr * 0 - 5.0    # simulate buffer reuse
+    mgr.wait()
+    restored, _, _ = mgr.restore_latest({"a": arr})
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(8.0))
+    mgr.close()
+
+
+def test_restore_empty_returns_none(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path / "empty"))
+    assert mgr.restore_latest(tree) is None
+    mgr.close()

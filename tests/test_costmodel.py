@@ -1,0 +1,122 @@
+"""Faithful-reproduction checks: the analytic FPGA model against every
+number range the paper prints (abstract, Tables 4/5, Figures 1/6/9/12)."""
+
+import math
+
+import pytest
+
+from repro.core import costmodel
+from repro.core.costmodel import (MACHSUITE_PROFILES, kernel_time,
+                                  paper_validation_table, refinement_curve)
+from repro.core.optlevel import OptLevel
+
+# Paper Table 5 (PCIe transfer time / CPU runtime)
+TABLE5 = {
+    "aes": 2.2e-3, "bfs": 0.8, "gemm": 6.0e-4, "kmp": 5.9e-2,
+    "nw": 1.5e-3, "sort": 4.9e-3, "spmv": 1.3, "viterbi": 1.4e-2,
+}
+
+# Paper Table 4 (pipelining speedup on computation)
+TABLE4 = {
+    "aes": 1.4, "bfs": 1.4, "gemm": 10.5, "kmp": 7.0,
+    "nw": 8.8, "sort": 1.8, "spmv": 10.9, "viterbi": 3.2,
+}
+
+
+def test_pcie_ratios_match_table5():
+    for name, prof in MACHSUITE_PROFILES.items():
+        t = kernel_time(prof, OptLevel.O0)
+        ratio = t["pcie_s"] / prof.cpu_time_s
+        assert ratio == pytest.approx(TABLE5[name], rel=0.55), name
+
+
+def test_comm_bound_kernels_rejected_like_paper():
+    """BFS and SPMV (and only they) fail the Table 5 filter."""
+    from repro.core.guideline import COMM_BOUND_THRESHOLD
+    for name, prof in MACHSUITE_PROFILES.items():
+        t = kernel_time(prof, OptLevel.O0)
+        ratio = t["pcie_s"] / prof.cpu_time_s
+        assert (ratio > COMM_BOUND_THRESHOLD) == (name in ("bfs", "spmv")), \
+            name
+
+
+def test_pipelining_speedups_match_table4():
+    """O1 -> O2 computation speedup reproduces Table 4 (the II/latency
+    parameters are independent inputs; the N*L -> N*ii + L formula does
+    the rest)."""
+    for name, prof in MACHSUITE_PROFILES.items():
+        t1 = kernel_time(prof, OptLevel.O1)
+        t2 = kernel_time(prof, OptLevel.O2)
+        speedup = t1["compute_s"] / t2["compute_s"]
+        assert speedup == pytest.approx(TABLE4[name], rel=0.30), (
+            name, speedup)
+
+
+def test_headline_numbers_in_paper_ranges():
+    t = paper_validation_table()
+    agg = t.pop("_aggregate")
+    # abstract: naive accelerators average ~292.5x slowdown
+    assert 150 <= agg["gmean_naive_slowdown"] <= 500
+    # abstract: improvement 42x..29030x per kernel
+    for name, row in t.items():
+        assert 30 <= row["improvement"] <= 40_000, (name, row)
+    # abstract: ~34.4x average speedup over the Xeon core
+    mean_speedup = sum(r["final_speedup"] for r in t.values()) / len(t)
+    assert 15 <= mean_speedup <= 70, mean_speedup
+    # Fig. 12: except BFS/SPMV every kernel beats the CPU by >= 4.7x
+    for name, row in t.items():
+        if name not in ("bfs", "spmv"):
+            assert row["final_speedup"] >= 4.0, (name, row)
+    # paper conclusion: best kernel up to ~112.8x
+    assert 40 <= max(r["final_speedup"] for r in t.values()) <= 250
+
+
+def test_caching_size_insensitivity_fig6():
+    """Fig. 6: 64KB / 1MB / infinite caching sizes perform alike; 2KB may
+    differ but stays within ~2x (the burst-init amortization curve)."""
+    for name, prof in MACHSUITE_PROFILES.items():
+        t64k = kernel_time(prof, OptLevel.O5, cache_bytes=64 * 1024)
+        t1m = kernel_time(prof, OptLevel.O5, cache_bytes=1024 * 1024)
+        assert t1m["system_s"] == pytest.approx(t64k["system_s"], rel=0.10)
+        t2k = kernel_time(prof, OptLevel.O5, cache_bytes=2 * 1024)
+        assert t2k["system_s"] <= 2.5 * t64k["system_s"], name
+
+
+def test_pe_scaling_fig9():
+    """Near-linear compute scaling for fully-parallel kernels; sub-linear
+    for SORT (tree reduce); inapplicable for BFS."""
+    prof = MACHSUITE_PROFILES["nw"]
+    c1 = kernel_time(prof, OptLevel.O3, pe=1)["compute_s"]
+    c64 = kernel_time(prof, OptLevel.O3, pe=64)["compute_s"]
+    assert c1 / c64 == pytest.approx(64, rel=0.05)
+
+    sort_p = MACHSUITE_PROFILES["sort"]
+    s1 = kernel_time(sort_p, OptLevel.O3, pe=1)["compute_s"]
+    s64 = kernel_time(sort_p, OptLevel.O3, pe=64)["compute_s"]
+    assert 2 < s1 / s64 < 40   # tree-reduce: much less than 64x
+
+    bfs_p = MACHSUITE_PROFILES["bfs"]
+    b1 = kernel_time(bfs_p, OptLevel.O3, pe=1)["compute_s"]
+    b64 = kernel_time(bfs_p, OptLevel.O3, pe=64)["compute_s"]
+    assert b1 == b64   # no parallel jobs
+
+
+def test_refinement_curve_monotone_for_accelerable():
+    """Walking O0 -> O5 never slows an accelerable kernel down much; total
+    improvement matches Fig. 12's orders of magnitude."""
+    for name, prof in MACHSUITE_PROFILES.items():
+        curve = refinement_curve(prof)
+        times = [curve[i]["system_s"] for i in range(6)]
+        for a, b in zip(times, times[1:]):
+            assert b <= a * 1.35, (name, times)   # small regressions only
+        if name not in ("bfs", "spmv"):
+            assert times[0] / times[-1] > 30, (name, times)
+
+
+def test_double_buffer_bounded_gain():
+    """Fig. 12: double buffering contributes <= ~2.1x."""
+    for name, prof in MACHSUITE_PROFILES.items():
+        t3 = kernel_time(prof, OptLevel.O3)
+        t4 = kernel_time(prof, OptLevel.O4)
+        gain = t3["kernel_s"] / t4["kernel_s"]
+        assert 0.95 <= gain <= 2.3, (name, gain)

@@ -1,0 +1,85 @@
+"""The best-effort guideline engine: bottleneck -> next step decisions,
+the communication filter, and the modelled refinement walk."""
+
+import pytest
+
+from repro.core import costmodel
+from repro.core.guideline import (COMM_BOUND_THRESHOLD, comm_bound_filter,
+                                  recommend)
+from repro.core.optlevel import (ALL_LEVELS, BestEffortConfig, OptLevel,
+                                 Step, STEP_ORDER)
+from repro.core.refine import refine_modelled
+
+
+def test_ladder_cumulative_semantics():
+    assert OptLevel.O0.steps == ()
+    assert OptLevel.O3.steps == STEP_ORDER[:3]
+    assert OptLevel.O5.has(Step.SCRATCHPAD_REORG)
+    assert not OptLevel.O2.has(Step.PE_DUPLICATION)
+    assert OptLevel.O2.next_step == Step.PE_DUPLICATION
+    assert OptLevel.O5.next_step is None
+
+
+def test_best_effort_config_gates():
+    c = BestEffortConfig(level=OptLevel.O2, pe=16, n_buffers=3,
+                         word_bits=512)
+    assert c.effective_pe == 1          # PE dup not yet applied
+    assert c.effective_buffers == 1
+    c5 = c.with_level(OptLevel.O5)
+    assert c5.effective_pe == 16
+    assert c5.effective_buffers == 3
+    assert c5.effective_word_bits == 512
+
+
+def test_memory_bound_recommends_caching_first():
+    rec = recommend(level=OptLevel.O0, compute_s=1.0, memory_s=5.0)
+    assert rec.step == Step.DATA_CACHING
+
+
+def test_memory_bound_after_caching_recommends_double_buffer():
+    rec = recommend(level=OptLevel.O3, compute_s=1.0, memory_s=5.0)
+    assert rec.step == Step.DOUBLE_BUFFERING
+    rec = recommend(level=OptLevel.O4, compute_s=1.0, memory_s=5.0)
+    assert rec.step == Step.SCRATCHPAD_REORG
+
+
+def test_compute_bound_recommends_pipeline_then_pe():
+    rec = recommend(level=OptLevel.O1, compute_s=9.0, memory_s=1.0)
+    assert rec.step == Step.PIPELINING
+    rec = recommend(level=OptLevel.O2, compute_s=9.0, memory_s=1.0)
+    assert rec.step == Step.PE_DUPLICATION
+
+
+def test_collective_bound_recommends_overlap_then_packing():
+    rec = recommend(level=OptLevel.O3, compute_s=1.0, memory_s=1.0,
+                    collective_s=9.0)
+    assert rec.step == Step.DOUBLE_BUFFERING
+    rec = recommend(level=OptLevel.O4, compute_s=1.0, memory_s=1.0,
+                    collective_s=9.0)
+    assert rec.step == Step.SCRATCHPAD_REORG
+
+
+def test_all_applied_stops():
+    rec = recommend(level=OptLevel.O5, compute_s=2.0, memory_s=1.0)
+    assert rec.stop and rec.step is None
+
+
+def test_comm_filter_matches_paper():
+    assert comm_bound_filter(0.8, 1.0) is not None      # BFS
+    assert comm_bound_filter(1.3, 1.0) is not None      # SPMV
+    assert comm_bound_filter(0.059, 1.0) is None        # KMP
+    assert comm_bound_filter(0.0022, 1.0) is None       # AES
+
+
+def test_refine_walk_terminates_and_improves():
+    for name in ("aes", "gemm", "nw"):
+        records = refine_modelled(costmodel.MACHSUITE_PROFILES[name])
+        assert records[-1].level == OptLevel.O5 or \
+            "STOP" in records[-1].recommendation
+        assert records[-1].speedup_vs_baseline > 30
+
+
+def test_refine_walk_rejects_comm_bound():
+    records = refine_modelled(costmodel.MACHSUITE_PROFILES["bfs"])
+    assert "communication-bound" in records[0].recommendation
+    assert len(records) == 1    # stopped before any step, like the paper

@@ -1,0 +1,81 @@
+"""HLO collective parser against programs with known collectives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hlo_stats
+
+
+def _compile_with_mesh(fn, specs_in, spec_out, mesh_shape=(1,),
+                       axes=("data",)):
+    devs = np.array(jax.devices()[:1] * int(np.prod(mesh_shape)))
+    mesh = jax.sharding.Mesh(devs.reshape(mesh_shape), axes)
+    from jax.sharding import NamedSharding
+    in_sh = tuple(NamedSharding(mesh, s) for s in specs_in)
+    out_sh = NamedSharding(mesh, spec_out)
+    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+
+def test_psum_produces_allreduce():
+    from jax.sharding import PartitionSpec as P
+
+    def fn(x):
+        return jnp.sum(x * 2.0)
+
+    jitted = _compile_with_mesh(fn, [P("data")], P())
+    txt = jax.jit(fn).lower(jnp.zeros((8,))).compile().as_text()
+    # single-device program has no collectives
+    stats = hlo_stats.parse_hlo(txt)
+    assert stats.collective_bytes == 0
+
+
+def test_parse_synthetic_hlo_text():
+    """Parser unit check against a handcrafted HLO snippet."""
+    txt = """
+HloModule test
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[512,256]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[512,256]{1,0} all-reduce(%ag), to_apply=add
+  %rs = f32[128,256]{1,0} reduce-scatter(%ar), dimensions={0}
+  %cp = f32[128,256]{1,0} collective-permute(%rs), source_target_pairs={{0,1}}
+  %a2a = f32[128,256]{1,0} all-to-all(%cp), dimensions={0}
+  ROOT t = (f32[128,256]) tuple(a2a)
+}
+"""
+    stats = hlo_stats.parse_hlo(txt)
+    kinds = set(stats.collectives)
+    assert {"all-gather", "all-reduce", "reduce-scatter",
+            "collective-permute", "all-to-all"} <= kinds
+    # operand bytes: all-gather reads 128*256*4
+    assert stats.collectives["all-gather"].operand_bytes == 128 * 256 * 4
+    assert stats.collectives["all-reduce"].operand_bytes == 512 * 256 * 4
+    assert stats.collective_bytes > 0
+
+
+def test_bf16_and_multi_operand():
+    txt = """
+ENTRY main {
+  %p0 = bf16[64]{0} parameter(0)
+  %p1 = bf16[64]{0} parameter(1)
+  %ar = (bf16[64], bf16[64]) all-reduce(%p0, %p1), to_apply=add
+  ROOT r = bf16[64] get-tuple-element(ar), index=0
+}
+"""
+    stats = hlo_stats.parse_hlo(txt)
+    assert stats.collectives["all-reduce"].operand_bytes == 2 * 64 * 2
+
+
+def test_op_census_counts_fusions():
+    txt = """
+ENTRY main {
+  a = f32[4] add(x, y)
+  b = f32[4] add(a, y)
+  c = f32[4] multiply(b, b)
+}
+"""
+    stats = hlo_stats.parse_hlo(txt)
+    assert stats.op_census.get("add", 0) == 2
+    assert stats.op_census.get("multiply", 0) == 1

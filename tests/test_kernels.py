@@ -1,0 +1,220 @@
+"""Pallas kernel sweeps: shapes x dtypes vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optlevel import OptLevel
+from repro.kernels.tiled_matmul.ops import matmul, pick_blocks
+from repro.kernels.tiled_matmul.ref import matmul_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6_wkv.ops import wkv
+from repro.kernels.rwkv6_wkv.ref import wkv_ref
+from repro.kernels.mamba2_ssd.ops import ssd
+from repro.kernels.mamba2_ssd.ref import ssd_ref
+
+KEYS = jax.random.split(jax.random.PRNGKey(42), 8)
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(32, 32, 32), (64, 96, 128),
+                                   (128, 64, 32), (48, 80, 112)])
+@pytest.mark.parametrize("lvl", range(6))
+def test_matmul_levels(shape, lvl):
+    M, K, N = shape
+    a = jax.random.normal(KEYS[0], (M, K), jnp.float32)
+    b = jax.random.normal(KEYS[1], (K, N), jnp.float32)
+    ref = matmul_ref(a, b)
+    out = matmul(a, b, OptLevel(lvl))
+    tol = 3e-2 if lvl >= 5 else 1e-5   # bf16 packing at O5
+    rel = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < tol, (shape, lvl, rel)
+
+
+def test_matmul_explicit_blocks():
+    a = jax.random.normal(KEYS[2], (64, 64), jnp.float32)
+    b = jax.random.normal(KEYS[3], (64, 64), jnp.float32)
+    ref = matmul_ref(a, b)
+    for blocks in [(16, 16, 16), (32, 64, 16), (64, 64, 64)]:
+        out = matmul(a, b, OptLevel.O3, blocks=blocks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_pick_blocks_vmem_budget():
+    from repro.kernels.tiled_matmul.ops import VMEM_BUDGET
+    for level in (OptLevel.O2, OptLevel.O4):
+        bm, bn, bk = pick_blocks(4096, 4096, 4096, level=level)
+        n_buf = 2 if level >= OptLevel.O4 else 1
+        assert n_buf * 4 * (bm * bk + bk * bn + bm * bn) <= VMEM_BUDGET
+    # O4 blocks never exceed O2 blocks (double buffering halves the budget)
+    o2 = pick_blocks(4096, 4096, 4096, level=OptLevel.O2)
+    o4 = pick_blocks(4096, 4096, 4096, level=OptLevel.O4)
+    assert all(x4 <= x2 for x4, x2 in zip(o4, o2))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _attn_ref_gqa(q, k, v, causal):
+    B, S, H, D = q.shape
+    rep = H // k.shape[2]
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    tf = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    out = attention_ref(tf(q), tf(kr), tf(vr), causal=causal)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dims", [(1, 64, 2, 2, 16), (2, 128, 4, 2, 32),
+                                  (1, 128, 3, 1, 64)])
+def test_flash_attention(dims, causal):
+    B, S, H, Hkv, D = dims
+    q = jax.random.normal(KEYS[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(KEYS[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(KEYS[2], (B, S, Hkv, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = _attn_ref_gqa(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(16, 64), (64, 16), (128, 128)])
+def test_flash_attention_block_invariance(blocks):
+    bq, bk = blocks
+    B, S, H, D = 1, 128, 2, 16
+    q = jax.random.normal(KEYS[3], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(KEYS[4], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(KEYS[5], (B, S, H, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    ref = _attn_ref_gqa(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, S, H, D = 1, 64, 2, 32
+    q = jax.random.normal(KEYS[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(KEYS[1], (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(KEYS[2], (B, S, H, D), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    ref = _attn_ref_gqa(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), rtol=0.06, atol=0.03)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+def _wkv_case(B, S, H, N, chunk, with_state, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + H + N), 6)
+    r = (jax.random.normal(ks[0], (B, S, H, N)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, N)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, H, N)) * 0.5).astype(dtype)
+    lw = (-jnp.abs(jax.random.normal(ks[3], (B, S, H, N))) * 0.3).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, N)) * 0.1).astype(dtype)
+    s0 = (jax.random.normal(ks[5], (B, H, N, N)) * 0.2
+          if with_state else jnp.zeros((B, H, N, N))).astype(jnp.float32)
+
+    y, sf = wkv(r, k, v, lw, u, init_state=s0, chunk=chunk)
+    flat = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    u_f = jnp.broadcast_to(u, (B, H, N)).reshape(B * H, N)
+    yr, sr = wkv_ref(flat(r), flat(k), flat(v), flat(lw), u_f,
+                     s0.reshape(B * H, N, N))
+    yr = yr.reshape(B, H, S, N).transpose(0, 2, 1, 3)
+    sr = sr.reshape(B, H, N, N)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("case", [
+    (1, 32, 1, 8, 8, False), (2, 64, 3, 16, 16, True),
+    (1, 64, 2, 16, 64, False),    # chunk == S
+    (2, 48, 2, 8, 16, True),      # S % 32 != 0 path
+])
+def test_wkv_sweep(case):
+    _wkv_case(*case)
+
+
+def test_wkv_bf16():
+    _wkv_case(1, 32, 2, 8, 8, False, dtype=jnp.bfloat16)
+
+
+def test_wkv_matches_model_chunked():
+    """Kernel == the model's chunked implementation (not just the oracle)."""
+    from repro.models.rwkv6 import wkv_chunked
+    B, S, H, N = 2, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    r = jax.random.normal(ks[0], (B, S, H, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, N)) * 0.5
+    lw = -jnp.abs(jax.random.normal(ks[3], (B, S, H, N))) * 0.3
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    y1, s1 = wkv(r, k, v, lw, u, chunk=16)
+    y2, s2 = wkv_chunked(r, k, v, lw, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd
+# ---------------------------------------------------------------------------
+
+def _ssd_case(B, S, H, P, N, chunk, with_state):
+    ks = jax.random.split(jax.random.PRNGKey(B + S + H + P + N), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bs = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cs = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    s0 = (jax.random.normal(ks[5], (B, H, P, N)) * 0.2
+          if with_state else jnp.zeros((B, H, P, N))).astype(jnp.float32)
+    y, sf = ssd(x, dt, A, Bs, Cs, init_state=s0, chunk=chunk)
+    yr, sr = ssd_ref(x, dt, A, Bs, Cs, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr),
+                               rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("case", [
+    (1, 32, 2, 8, 8, 8, False), (2, 64, 4, 16, 8, 16, True),
+    (1, 64, 1, 8, 16, 64, False),   # chunk == S
+    (2, 40, 2, 8, 8, 8, True),      # odd chunk count
+])
+def test_ssd_sweep(case):
+    _ssd_case(*case)
+
+
+def test_ssd_matches_model_chunked():
+    from repro.models.mamba2 import ssd_chunked
+    B, S, H, P, N = 2, 64, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bs = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cs = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    y1, s1 = ssd(x, dt, A, Bs, Cs, chunk=16)
+    y2, s2 = ssd_chunked(x, dt, A, Bs, Cs, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,111 @@
+"""§Perf knobs are semantics-preserving: microbatch accumulation, remat
+policies, cast_params_once, scores_dtype, and the merged-heads attention
+layout all compute the same function."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ShapeConfig
+from repro.core import hlo_stats
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+from repro.models import get_model, make_batch
+from repro.optim import adamw
+from repro.parallel.sharding import use_sharder
+
+RNG = jax.random.PRNGKey(0)
+SHAPE = ShapeConfig("t", 64, 8, "train")
+
+
+def _one_step(cfg, params, opt, batch):
+    art = steps.build_train(cfg, SHAPE, make_host_mesh())
+    with art.sharder.mesh, use_sharder(art.sharder):
+        copy = lambda t: jax.tree.map(lambda x: x + 0, t)
+        return art.jit()(copy(params), copy(opt), batch)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("qwen3-8b")
+    model = get_model(cfg)
+    params = model.init(RNG)
+    opt = adamw.init_state(adamw.AdamWConfig(), params)
+    batch = make_batch(cfg, SHAPE, RNG)
+    p0, o0, m0 = _one_step(cfg, params, opt, batch)
+    return cfg, params, opt, batch, p0, float(m0["loss"])
+
+
+@pytest.mark.parametrize("overrides", [
+    {"microbatch": 2}, {"microbatch": 4},
+    {"remat_policy": "dots"}, {"remat_policy": "none"},
+    {"cast_params_once": True},
+    {"microbatch": 4, "remat_policy": "dots", "cast_params_once": True},
+])
+def test_knob_equivalence(setup, overrides):
+    cfg, params, opt, batch, p0, loss0 = setup
+    cfg2 = dataclasses.replace(cfg, **overrides)
+    p2, o2, m2 = _one_step(cfg2, params, opt, batch)
+    assert abs(float(m2["loss"]) - loss0) < 5e-3, overrides
+    delta = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        p0, p2)))
+    assert delta < 5e-2, (overrides, delta)
+
+
+def test_scores_dtype_close(setup):
+    cfg, params, opt, batch, p0, loss0 = setup
+    cfg2 = dataclasses.replace(cfg, scores_dtype="bfloat16")
+    _, _, m2 = _one_step(cfg2, params, opt, batch)
+    assert abs(float(m2["loss"]) - loss0) < 2e-2
+
+
+def test_ce_loss_handles_unaligned_seq():
+    """The internvl 32768-256 prefill regression: S not divisible by
+    loss_chunk must still evaluate."""
+    from repro.models.layers import chunked_cross_entropy, PDef, init_params
+    B, S, d, V = 2, 28, 16, 64     # 28 % 8 != 0
+    params = {"lm_head": jnp.ones((d, V), jnp.bfloat16) * 0.01}
+    h = jnp.ones((B, S, d), jnp.bfloat16)
+    labels = jnp.zeros((B, S), jnp.int32)
+    loss = chunked_cross_entropy(h, params, labels, chunk=8)
+    assert np.isfinite(float(loss))
+
+
+# ---------------------------------------------------------------------------
+# measurement infrastructure
+# ---------------------------------------------------------------------------
+
+def test_fused_bytes_counts_boundaries_only():
+    txt = """
+ENTRY main {
+  %p0 = f32[128,128]{1,0} parameter(0)
+  %c0 = bf16[128,128]{1,0} convert(%p0)
+  %d = bf16[128,128]{1,0} dot(%c0, %c0), lhs_contracting_dims={1}
+  %a = bf16[128,128]{1,0} add(%d, %d)
+  %f = bf16[128,128]{1,0} fusion(%a), kind=kLoop, calls=%fc
+}
+"""
+    fb = hlo_stats.fused_bytes(txt)
+    n = 128 * 128
+    # dot: 2 operands bf16 + result; fusion: operand + result.
+    # convert/add are elementwise (fused on the TPU target) -> excluded.
+    assert fb == (3 * 2 * n) + (2 * 2 * n)
+
+
+def test_promoted_allreduce_counted_at_bf16_width():
+    base = """
+ENTRY main {{
+  %p0 = f32[256]{{0}} parameter(0)
+  %ar = f32[256]{{0}} all-reduce(%p0), to_apply=%add{suffix}
+}}
+"""
+    plain = hlo_stats.parse_hlo(base.format(suffix=""))
+    promoted = hlo_stats.parse_hlo(base.format(suffix=".clone_promoted"))
+    assert plain.collective_bytes == 256 * 4
+    assert promoted.collective_bytes == 256 * 2   # counted at bf16 width

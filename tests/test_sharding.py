@@ -1,0 +1,83 @@
+"""Sharder unit tests (single device — spec construction is pure logic)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import Sharder, make_rules
+
+
+def _mesh(shape, axes):
+    return jax.sharding.Mesh(
+        __import__("numpy").array(jax.devices() * int(
+            __import__("numpy").prod(shape))).reshape(shape)[
+                tuple(slice(0, s) for s in shape)], axes)
+
+
+@pytest.fixture
+def mesh44():
+    import numpy as np
+    devs = np.tile(np.array(jax.devices()[:1]), 16).reshape(4, 4)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+@pytest.fixture
+def mesh_pod():
+    import numpy as np
+    devs = np.tile(np.array(jax.devices()[:1]), 16).reshape(2, 2, 4)
+    return jax.sharding.Mesh(devs, ("pod", "data", "model"))
+
+
+def test_basic_specs(mesh44):
+    s = Sharder(mesh44, make_rules(mesh44))
+    assert s.spec(("batch", None), (8, 128)) == P("data", None)
+    assert s.spec(("embed", "mlp"), (64, 128)) == P("data", "model")
+    assert s.spec((None, None), (3, 5)) == P(None, None)
+
+
+def test_divisibility_degradation_recorded(mesh44):
+    s = Sharder(mesh44, make_rules(mesh44))
+    # 15 heads not divisible by model=4 -> degrades to replicated
+    assert s.spec(("heads",), (15,)) == P(None)
+    assert any(d[0] == "heads" for d in s.degradations)
+    # 16 heads fine
+    assert s.spec(("heads",), (16,)) == P("model")
+
+
+def test_pod_batch_mapping(mesh_pod):
+    s = Sharder(mesh_pod, make_rules(mesh_pod))
+    assert s.spec(("batch", None), (8, 16)) == P(("pod", "data"), None)
+
+
+def test_fsdp_over_pod(mesh_pod):
+    s = Sharder(mesh_pod, make_rules(mesh_pod, fsdp_over_pod=True))
+    assert s.spec(("embed", "mlp"), (64, 64)) == P(("pod", "data"), "model")
+    s2 = Sharder(mesh_pod, make_rules(mesh_pod, fsdp_over_pod=False))
+    assert s2.spec(("embed", "mlp"), (64, 64)) == P("data", "model")
+
+
+def test_no_axis_reuse_within_spec(mesh44):
+    """A mesh axis may shard at most one tensor dim."""
+    s = Sharder(mesh44, make_rules(mesh44))
+    spec = s.spec(("embed", "embed"), (64, 64))
+    flat = []
+    for e in spec:
+        if isinstance(e, tuple):
+            flat += list(e)
+        elif e is not None:
+            flat.append(e)
+    assert len(flat) == len(set(flat))
+
+
+def test_partial_prefix_degradation(mesh_pod):
+    """batch -> (pod, data) degrades to (pod,) when divisible by pod only."""
+    s = Sharder(mesh_pod, make_rules(mesh_pod))
+    # dim 2: divisible by pod=2, not by pod*data=4
+    assert s.spec(("batch",), (2,)) == P("pod")
+
+
+def test_constrain_rank_mismatch(mesh44):
+    import jax.numpy as jnp
+    s = Sharder(mesh44, make_rules(mesh44))
+    with pytest.raises(ValueError):
+        s.constrain(jnp.zeros((4, 4)), "batch")
