@@ -8,9 +8,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (breakdowns, caching_size, comm_filter,
-                        machsuite_steps, pe_scaling, pipelining_table,
-                        resources, roofline_table)
+from benchmarks import (autotune_table, breakdowns, caching_size,
+                        comm_filter, machsuite_steps, pe_scaling,
+                        pipelining_table, resources, roofline_table)
 
 SECTIONS = [
     ("machsuite_steps (Fig.1/12)", machsuite_steps),
@@ -20,6 +20,7 @@ SECTIONS = [
     ("comm_filter (Table 5)", comm_filter),
     ("breakdowns (Fig.3/7/11)", breakdowns),
     ("resources (Table 6)", resources),
+    ("autotune (closed-loop Table 4)", autotune_table),
     ("roofline (EXPERIMENTS §Roofline)", roofline_table),
 ]
 

@@ -1,27 +1,30 @@
-"""Full MachSuite refinement demo: every kernel, every level — the
-paper's Fig. 12 as a table, plus the communication-bound filter verdicts
-(Table 5) and the final paper-vs-model comparison.
+"""Full MachSuite refinement demo, driven by the closed-loop autotuner:
+every kernel tuned unattended (the paper's Fig. 12 as a table), the
+communication-bound filter verdicts (Table 5), and the final
+paper-vs-model comparison.
 
   PYTHONPATH=src python examples/machsuite_refine.py
 """
 
+from repro.autotune import (KernelModelBackend, autotune, render_rounds,
+                            render_summary)
 from repro.core import costmodel
-from repro.core.guideline import comm_bound_filter
 from repro.core.optlevel import OptLevel
-from repro.core.refine import refine_modelled
 
 
 def main():
     profiles = costmodel.MACHSUITE_PROFILES
 
+    # The closed loop, per kernel: measure -> guideline -> apply -> repeat.
+    results = {name: autotune(KernelModelBackend(prof))
+               for name, prof in sorted(profiles.items())}
+
     print(f"{'kernel':10s} {'filter':8s} " +
           " ".join(f"{'O' + str(i):>10s}" for i in range(6)) +
           "   final vs CPU")
     print("-" * 92)
-    for name, prof in profiles.items():
-        t0 = costmodel.kernel_time(prof, OptLevel.O0)
-        verdict = comm_bound_filter(t0["pcie_s"], prof.cpu_time_s)
-        filt = "REJECT" if verdict else "accept"
+    for name, prof in sorted(profiles.items()):
+        filt = "REJECT" if results[name].rejected else "accept"
         curve = costmodel.refinement_curve(prof)
         base = curve[0]["system_s"]
         cells = " ".join(
@@ -39,9 +42,11 @@ def main():
     print(f"  improvement      paper 42~29030x | model "
           f"{agg['min_improvement']:.0f}~{agg['max_improvement']:.0f}x")
 
-    print("\nthe refinement *process* on NW (guideline-driven):")
-    for r in refine_modelled(profiles["nw"]):
-        print(f"  O{int(r.level)} -> {r.recommendation}")
+    print("\nclosed-loop verdicts (autotuner, paper Table 4/5 analog):")
+    print(render_summary(list(results.values())))
+
+    print("\nthe refinement *process* on NW (autotuned, round by round):")
+    print(render_rounds(results["nw"].to_records()))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""Closed-loop best-effort autotuner.
+
+Automates the paper's measure -> guideline -> transform -> re-measure cycle
+end-to-end (``python -m repro.autotune --kernel gemm``), over either the
+analytic MachSuite cost model or the lowered-HLO cost twin of an LM config.
+See ``autotune.measurement`` for the shared measurement API and
+``autotune.tuner`` for the loop itself.
+"""
+
+from repro.autotune.measurement import (
+    CostTwinBackend,
+    KernelModelBackend,
+    LM_STEP_OVERRIDES,
+    Measurement,
+    roofline_terms,
+)
+from repro.autotune.trajectory import (
+    read_trajectory,
+    render_rounds,
+    render_summary,
+    trajectory_path,
+    write_trajectory,
+)
+from repro.autotune.tuner import TuneResult, TuneRound, autotune
+
+__all__ = [
+    "CostTwinBackend",
+    "KernelModelBackend",
+    "LM_STEP_OVERRIDES",
+    "Measurement",
+    "TuneResult",
+    "TuneRound",
+    "autotune",
+    "read_trajectory",
+    "render_rounds",
+    "render_summary",
+    "roofline_terms",
+    "trajectory_path",
+    "write_trajectory",
+]

@@ -1,0 +1,95 @@
+"""CLI for the closed-loop autotuner.
+
+MachSuite kernels (analytic model, instant):
+
+  PYTHONPATH=src python -m repro.autotune --kernel gemm
+  PYTHONPATH=src python -m repro.autotune --kernel all --frontier
+
+LM configs (lowered-HLO cost twin on the production mesh; compile-heavy):
+
+  PYTHONPATH=src python -m repro.autotune --arch qwen3-8b --shape train_4k
+
+Each run prints the per-round walk and writes a JSONL trajectory under
+``experiments/autotune/`` (render with ``python -m benchmarks.autotune_table``).
+"""
+
+import argparse
+import os
+import sys
+
+
+def _run_one(backend, args):
+    from repro.autotune.trajectory import render_rounds, write_trajectory
+    from repro.autotune.tuner import autotune
+
+    result = autotune(backend, frontier=args.frontier,
+                      max_rounds=args.max_rounds)
+    path = write_trajectory(result, out_dir=args.out)
+    print(f"== {result.target} ({result.mode}) ==")
+    print(render_rounds(result.to_records()))
+    if result.rejected:
+        print(f"VERDICT: REJECT — {result.target} is communication-bound "
+              "(paper Table 5); no refinement attempted")
+    else:
+        print(f"VERDICT: {result.final_label} via "
+              f"{' -> '.join(result.steps_taken) or 'no steps'} "
+              f"({result.final_speedup:.1f}x vs start)")
+    print(f"trajectory: {os.path.relpath(path)}")
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.autotune")
+    target = ap.add_mutually_exclusive_group(required=True)
+    target.add_argument("--kernel",
+                        help="MachSuite kernel name, or 'all'")
+    target.add_argument("--arch", help="LM architecture (repro.configs)")
+    ap.add_argument("--shape", help="LM shape cell (e.g. train_4k)")
+    ap.add_argument("--frontier", action="store_true",
+                    help="AutoDSE-style mode: measure every remaining "
+                         "candidate step per round, keep the best")
+    ap.add_argument("--max-rounds", type=int, default=12)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="trajectory dir (default experiments/autotune)")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="key=value",
+                    help="base ArchConfig overrides (LM mode)")
+    args = ap.parse_args(argv)
+
+    if args.kernel:
+        from repro.autotune.measurement import KernelModelBackend
+        from repro.core.costmodel import MACHSUITE_PROFILES
+
+        names = (sorted(MACHSUITE_PROFILES) if args.kernel == "all"
+                 else [args.kernel])
+        for name in names:
+            if name not in MACHSUITE_PROFILES:
+                ap.error(f"unknown kernel {name!r}; "
+                         f"choices: {', '.join(sorted(MACHSUITE_PROFILES))}")
+            _run_one(KernelModelBackend(MACHSUITE_PROFILES[name]), args)
+        return 0
+
+    if not args.shape:
+        ap.error("--arch needs --shape (e.g. --shape train_4k)")
+    # The cost twin lowers on the 512-host-device production mesh; the flag
+    # must be in place before jax touches the backend (hillclimb sets it too,
+    # via setdefault, but only at its own import time).
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+    from repro.autotune.measurement import CostTwinBackend
+    from repro.launch.hillclimb import parse_value
+
+    overrides = {}
+    for kv in getattr(args, "set"):
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    _run_one(CostTwinBackend(args.arch, args.shape,
+                             multi_pod=args.multi_pod,
+                             base_overrides=overrides), args)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,7 +58,8 @@ def comm_bound_filter(offload_s: float, baseline_s: float) -> Recommendation | N
 
 def recommend(
     *,
-    level: OptLevel,
+    level: OptLevel = None,
+    applied=None,
     compute_s: float,
     memory_s: float,
     collective_s: float = 0.0,
@@ -66,6 +67,10 @@ def recommend(
     baseline_s: float = 0.0,
 ) -> Recommendation:
     """Given the current breakdown, pick the paper's next step.
+
+    The applied-step set comes from ``level`` (the cumulative FPGA ladder)
+    or, for surfaces whose steps are independent knobs (the LM cost-twin
+    backend in ``repro.autotune``), from ``applied`` directly.
 
     ``collective_s`` generalizes the paper's PCIe term to the TPU mesh: a
     dominant collective term is attacked with the O4/O5 analogs (overlap,
@@ -75,8 +80,12 @@ def recommend(
     if comm is not None:
         return comm
 
-    remaining = [s for s in level.steps]  # applied steps
-    applied = set(remaining)
+    if applied is None:
+        if level is None:
+            raise TypeError("recommend() needs `level` or `applied`")
+        applied = set(level.steps)
+    else:
+        applied = set(applied)
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     dominant = max(terms, key=terms.get)
 

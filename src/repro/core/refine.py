@@ -39,38 +39,28 @@ def refine_modelled(
     cache_bytes: float = 64 * 1024,
     pe: int = 128,
 ) -> list:
-    """Walk the ladder, logging breakdown + recommendation per level."""
-    hw = hw or costmodel.FPGA_2012
-    records = []
-    t0 = None
-    level = OptLevel.O0
-    while True:
-        t = costmodel.kernel_time(
-            profile, level, hw, cache_bytes=cache_bytes, pe=pe
+    """Walk the ladder, logging breakdown + recommendation per level.
+
+    Thin compatibility wrapper over the closed-loop tuner
+    (``repro.autotune``): one greedy guideline-driven walk of the analytic
+    model, reshaped into the original ``RefineRecord`` stream.
+    """
+    from repro.autotune import KernelModelBackend, autotune
+
+    backend = KernelModelBackend(
+        profile, hw=hw, cache_bytes=cache_bytes, pe=pe)
+    result = autotune(backend)
+    return [
+        RefineRecord(
+            level=OptLevel(r.measurement.meta["level"]),
+            breakdown={k: r.measurement.breakdown[k]
+                       for k in ("dram_s", "compute_s", "pcie_s",
+                                 "kernel_s", "system_s")},
+            recommendation=r.recommendation,
+            speedup_vs_baseline=r.speedup_vs_start,
         )
-        if t0 is None:
-            t0 = t["system_s"]
-        rec = recommend(
-            level=level,
-            compute_s=t["compute_s"],
-            memory_s=t["dram_s"],
-            offload_s=t["pcie_s"],
-            baseline_s=profile.cpu_time_s,
-        )
-        records.append(
-            RefineRecord(
-                level=level,
-                breakdown={k: t[k] for k in ("dram_s", "compute_s", "pcie_s",
-                                             "kernel_s", "system_s")},
-                recommendation=str(rec),
-                speedup_vs_baseline=t0 / t["system_s"],
-            )
-        )
-        if rec.stop or rec.step is None or level == OptLevel.O5:
-            break
-        # Apply the recommended step = move to the level that includes it.
-        level = OptLevel(STEP_ORDER.index(rec.step) + 1)
-    return records
+        for r in result.rounds
+    ]
 
 
 def refine_compiled(

@@ -143,7 +143,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
     if twin:
         t1 = time.time()
         tw = cost_twin(cfg, shape, mesh)
-        from repro.core.hw import TPU_V5E
+        from repro.autotune.measurement import roofline_terms
         # Floor by the scanned program (while bodies count once, so the
         # scanned values are a strict lower bound — guards tiny-decode
         # cells where the 1->2-unit delta is within CPU fusion noise).
@@ -155,23 +155,13 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
             "fused_bytes_per_device": tw["fused_bytes"],
             "collective_bytes_per_device": sum(tw["coll"].values()),
             "collective_breakdown": tw["coll"],
-            "compute_s": tw["flops"] / TPU_V5E.peak_bf16_flops,
-            "memory_s": tw["bytes"] / TPU_V5E.hbm_bw,
-            "memory_fused_s": tw["fused_bytes"] / TPU_V5E.hbm_bw,
-            "collective_s": sum(tw["coll"].values()) / TPU_V5E.ici_link_bw,
             "twin_units": tw["units"],
             "twin_s": round(time.time() - t1, 1),
         })
-        terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
-                 "collective": rec["collective_s"]}
-        rec["dominant"] = max(terms, key=terms.get)
-        rec["step_time_s"] = max(terms.values())
-        total = rec["flops_per_device"] * chips
-        rec["useful_flops_fraction"] = (rec["model_flops"] / total
-                                        if total else 0.0)
-        useful_s = rec["model_flops"] / (chips * TPU_V5E.peak_bf16_flops)
-        rec["roofline_fraction"] = (useful_s / rec["step_time_s"]
-                                    if rec["step_time_s"] else 0.0)
+        rec.update(roofline_terms(
+            tw["flops"], tw["bytes"], sum(tw["coll"].values()),
+            chips=chips, model_flops=rec["model_flops"],
+            fused_bytes_per_device=tw["fused_bytes"]))
 
     rec.update({
         "status": "ok",

@@ -24,6 +24,7 @@ import time
 
 import jax
 
+from repro.autotune.measurement import roofline_terms
 from repro.configs import SHAPES, get_config, model_flops
 from repro.core import hlo_stats
 from repro.core.analyzer import extract_cost
@@ -65,7 +66,7 @@ def measure(arch: str, shape_name: str, overrides: dict, *,
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
 
-    # twin terms (true trip counts)
+    # twin terms (true trip counts), derived via the shared measurement API
     tw = dryrun.cost_twin(cfg, shape, mesh)
     coll_total = sum(tw["coll"].values())
     rec = {
@@ -76,27 +77,15 @@ def measure(arch: str, shape_name: str, overrides: dict, *,
         "fused_bytes_per_device": tw["fused_bytes"],
         "collective_bytes_per_device": coll_total,
         "collective_breakdown": tw["coll"],
-        "compute_s": tw["flops"] / TPU_V5E.peak_bf16_flops,
-        "memory_s": tw["bytes"] / TPU_V5E.hbm_bw,
-        "memory_fused_s": tw["fused_bytes"] / TPU_V5E.hbm_bw,
-        "collective_s": coll_total / TPU_V5E.ici_link_bw,
         "model_flops": model_flops(cfg, shape),
         "peak_temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
         "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
         "wall_s": round(time.time() - t0, 1),
     }
-    terms = {k: rec[k + "_s"] for k in ("compute", "memory", "collective")}
-    rec["dominant"] = max(terms, key=terms.get)
-    rec["step_time_s"] = max(terms.values())
-    useful_s = rec["model_flops"] / (chips * TPU_V5E.peak_bf16_flops)
-    rec["roofline_fraction"] = useful_s / rec["step_time_s"]
-    # TPU-fusion-adjusted view (same formula, fused memory term)
-    fterms = dict(terms, memory=rec["memory_fused_s"])
-    rec["dominant_fused"] = max(fterms, key=fterms.get)
-    rec["step_time_fused_s"] = max(fterms.values())
-    rec["roofline_fraction_fused"] = useful_s / rec["step_time_fused_s"]
-    rec["useful_flops_fraction"] = (
-        rec["model_flops"] / (tw["flops"] * chips) if tw["flops"] else 0)
+    rec.update(roofline_terms(
+        tw["flops"], tw["bytes"], coll_total,
+        chips=chips, model_flops=rec["model_flops"],
+        fused_bytes_per_device=tw["fused_bytes"], spec=TPU_V5E))
 
     if forensics:
         # forensics on the 2-unit unrolled twin (true per-layer picture)

@@ -47,8 +47,12 @@ def pipeline_apply(stage_params, x_micro, *, stage_fn, mesh: Mesh,
         # only consumer — the others overwrite their buffer via ppermute).
         sidx = jax.lax.axis_index(axis)
         p = jax.tree.map(lambda t: t[0], params)
-        # mark the carries as stage-varying (each stage holds different data)
-        var = lambda t: jax.lax.pcast(t, (axis,), to="varying")
+        # mark the carries as stage-varying (each stage holds different
+        # data); on older JAX (no jax.lax.pcast) shard_map values are
+        # unconditionally varying, so the cast is a no-op
+        pcast = getattr(jax.lax, "pcast", None)
+        var = ((lambda t: pcast(t, (axis,), to="varying")) if pcast
+               else (lambda t: t))
         buf = var(jnp.zeros_like(xs[0]))               # resident activation
         outs = var(jnp.zeros_like(xs))
 

@@ -12,4 +12,11 @@ def rng():
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running test")
+    # Also registered in pyproject.toml; kept here so ad-hoc invocations
+    # with an alternate rootdir still know the tiers.
+    config.addinivalue_line(
+        "markers", "slow: compile-heavy / long-running test "
+        "(deselected by default; run with -m slow)")
+    config.addinivalue_line(
+        "markers", "dist: multi-device subprocess integration test "
+        "(deselected by default; run with -m dist)")

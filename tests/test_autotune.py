@@ -1,0 +1,228 @@
+"""Closed-loop autotuner: convergence, filter verdicts, trajectories, and
+the shared measurement API (see also tests/test_machsuite.py for the full
+O0..O5 output-equivalence matrix the tuner's candidates rely on)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.autotune import (CostTwinBackend, KernelModelBackend,
+                            LM_STEP_OVERRIDES, autotune, read_trajectory,
+                            render_rounds, render_summary, roofline_terms,
+                            write_trajectory)
+from repro.autotune.trajectory import trajectory_path
+from repro.core import costmodel
+from repro.core.guideline import recommend
+from repro.core.optlevel import STEP_ORDER, OptLevel, Step
+from repro.core.refine import refine_modelled
+from repro.machsuite import KERNELS
+
+ACCEPTED = ("aes", "gemm", "kmp", "nw", "sort", "viterbi")
+REJECTED = ("bfs", "spmv")   # paper Table 5: communication-bound
+
+
+def tune(name, **kw):
+    return autotune(
+        KernelModelBackend(costmodel.MACHSUITE_PROFILES[name]), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Convergence + stop conditions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ACCEPTED)
+def test_modeled_time_monotone_non_increasing(name):
+    totals = [r.measurement.total_s for r in tune(name).rounds]
+    assert len(totals) >= 2
+    for a, b in zip(totals, totals[1:]):
+        assert b <= a * (1 + 1e-9), (name, totals)
+
+
+@pytest.mark.parametrize("name", ACCEPTED)
+def test_accepted_kernels_reach_o5_and_stop(name):
+    res = tune(name)
+    assert not res.rejected
+    assert res.final_label == "O5"
+    assert res.final.stop
+    assert res.final_speedup > 100          # paper: orders of magnitude
+    assert "all five steps applied" in res.final.recommendation
+
+
+@pytest.mark.parametrize("name", REJECTED)
+def test_comm_bound_kernels_rejected_before_any_step(name):
+    res = tune(name)
+    assert res.rejected
+    assert len(res.rounds) == 1             # stopped at O0, like the paper
+    assert res.steps_taken == []
+    assert "communication-bound" in res.final.recommendation
+
+
+def test_gemm_ladder_order_matches_paper():
+    """Memory-bound start: caching before pipelining before PE duplication."""
+    steps = tune("gemm").steps_taken
+    assert steps[:3] == [Step.DATA_CACHING.value, Step.PIPELINING.value,
+                         Step.PE_DUPLICATION.value]
+
+
+def test_frontier_mode_no_worse_than_greedy():
+    for name in ("gemm", "aes"):
+        greedy = tune(name)
+        frontier = tune(name, frontier=True)
+        assert frontier.mode == "frontier"
+        assert (frontier.final_total_s
+                <= greedy.final_total_s * (1 + 1e-9)), name
+        # every explored round logged its measured candidate frontier
+        explored = [r for r in frontier.rounds if r.candidates]
+        assert explored
+        for r in explored:
+            assert all(t > 0 for _, t in r.candidates)
+        # on the cumulative ladder the frontier's minimal moves are one
+        # level at a time — no O0->O5 jump that bundles five steps
+        labels = [r.label for r in frontier.rounds]
+        assert labels == [f"O{i}" for i in range(len(labels))], name
+
+
+def test_max_rounds_budget_respected():
+    res = tune("gemm", max_rounds=2)
+    assert len(res.rounds) <= 3             # 2 diagnosed + final log round
+    assert res.rounds[-1].stop
+
+
+# ---------------------------------------------------------------------------
+# Semantics: the tuner's chosen level computes the same function
+# ---------------------------------------------------------------------------
+
+SMALL_SCALES = {"aes": 512 / 64e6, "gemm": 32 / 1024, "kmp": 1024 / 128e6,
+                "nw": 0.5 / 4096, "sort": 64 / 262144 / 16,
+                "viterbi": 0.5 / 62500}
+
+
+@pytest.mark.parametrize("name", sorted(SMALL_SCALES))
+def test_autotuned_level_is_output_equivalent(name, rng):
+    res = tune(name)
+    level = OptLevel(res.final.measurement.meta["level"])
+    mod = KERNELS[name]
+    inp = mod.make_inputs(rng, SMALL_SCALES[name])
+    ref = np.asarray(mod.oracle(**inp))
+    out = np.asarray(mod.run(level, **inp))
+    if out.dtype.kind == "f":
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# Guideline: explicit applied-set API (the LM frontier's entry point)
+# ---------------------------------------------------------------------------
+
+def test_recommend_applied_set_matches_level():
+    by_level = recommend(level=OptLevel.O1, compute_s=9.0, memory_s=1.0)
+    by_set = recommend(applied={Step.DATA_CACHING},
+                       compute_s=9.0, memory_s=1.0)
+    assert by_level.step == by_set.step == Step.PIPELINING
+
+
+def test_recommend_applied_set_stop_and_ordering():
+    rec = recommend(applied=set(STEP_ORDER), compute_s=1.0, memory_s=2.0)
+    assert rec.stop and rec.step is None
+    rec = recommend(applied=set(), compute_s=1.0, memory_s=5.0)
+    assert rec.step == Step.DATA_CACHING    # caching strictly first
+    rec = recommend(applied={Step.DATA_CACHING, Step.DOUBLE_BUFFERING},
+                    compute_s=1.0, memory_s=5.0)
+    assert rec.step == Step.SCRATCHPAD_REORG
+
+
+def test_recommend_requires_level_or_applied():
+    with pytest.raises(TypeError):
+        recommend(compute_s=1.0, memory_s=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Trajectories: JSONL round-trip + rendering
+# ---------------------------------------------------------------------------
+
+def test_trajectory_roundtrip_and_render(tmp_path):
+    res = tune("gemm")
+    path = write_trajectory(res, out_dir=str(tmp_path))
+    assert path == trajectory_path("gemm", str(tmp_path))
+    recs = read_trajectory(path)
+    assert len(recs) == len(res.rounds)
+    assert [r["label"] for r in recs] == [f"O{i}" for i in range(6)]
+    for r in recs:
+        assert r["target"] == "gemm" and r["mode"] == "greedy"
+        assert set(r["measurement"]) >= {
+            "compute_s", "memory_s", "total_s", "dominant"}
+        json.dumps(r)                        # every row stays serializable
+    table = render_rounds(recs)
+    assert table.count("\n") == len(recs) + 1
+    summary = render_summary([res, tune("bfs")])
+    assert "REJECT (comm-bound)" in summary and "O5" in summary
+
+
+def test_cli_kernel_mode(tmp_path, capsys):
+    from repro.autotune.__main__ import main
+
+    assert main(["--kernel", "gemm", "--out", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "VERDICT: O5" in out
+    assert (tmp_path / "gemm.jsonl").exists()
+    assert main(["--kernel", "spmv", "--out", str(tmp_path)]) == 0
+    assert "REJECT" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Shared measurement API
+# ---------------------------------------------------------------------------
+
+def test_refine_modelled_compat_matches_tuner():
+    """core.refine's public record stream is now a view of the tuner."""
+    records = refine_modelled(costmodel.MACHSUITE_PROFILES["gemm"])
+    rounds = tune("gemm").rounds
+    assert [int(r.level) for r in records] == \
+        [r.measurement.meta["level"] for r in rounds]
+    assert [r.recommendation for r in records] == \
+        [r.recommendation for r in rounds]
+    np.testing.assert_allclose(
+        [r.speedup_vs_baseline for r in records],
+        [r.speedup_vs_start for r in rounds])
+
+
+def test_roofline_terms_arithmetic():
+    rec = roofline_terms(197e12, 819e9 * 2, 50e9 / 2, chips=4,
+                         model_flops=197e12 * 2)
+    assert rec["compute_s"] == pytest.approx(1.0)
+    assert rec["memory_s"] == pytest.approx(2.0)
+    assert rec["collective_s"] == pytest.approx(0.5)
+    assert rec["dominant"] == "memory"
+    assert rec["step_time_s"] == pytest.approx(2.0)
+    assert rec["roofline_fraction"] == pytest.approx(0.25)  # 2/(4*1)/2
+    assert rec["useful_flops_fraction"] == pytest.approx(0.5)
+    fused = roofline_terms(3 * 197e12, 4 * 819e9, 0.0,
+                           fused_bytes_per_device=819e9)
+    assert fused["dominant"] == "memory"
+    assert fused["memory_fused_s"] == pytest.approx(1.0)
+    assert fused["dominant_fused"] == "compute"   # fusion flips the verdict
+    assert fused["step_time_fused_s"] == pytest.approx(3.0)
+
+
+def test_cost_twin_backend_state_machine():
+    """Override mapping + independent-step state (no compile involved)."""
+    b = CostTwinBackend("qwen3-8b", "train_4k",
+                        base_overrides={"loss_chunk": 64})
+    s0 = b.initial_state()
+    assert b.applied(s0) == set() and b.describe(s0) == "O0"
+    assert b.overrides_for(s0) == {"loss_chunk": 64}
+    s = b.apply(s0, Step.SCRATCHPAD_REORG)     # steps are independent:
+    assert b.applied(s) == {Step.SCRATCHPAD_REORG}   # no ladder jump
+    ov = b.overrides_for(s)
+    assert ov["scores_dtype"] == "bfloat16" and ov["loss_chunk"] == 64
+    s = b.apply(s, Step.DATA_CACHING)
+    assert b.overrides_for(s)["cast_params_once"] is True
+    assert set(b.candidate_steps(s)) == set(STEP_ORDER) - b.applied(s)
+    # every declared step maps to overrides drawn from real ArchConfig fields
+    from repro.configs.base import ArchConfig
+    import dataclasses
+    fields = {f.name for f in dataclasses.fields(ArchConfig)}
+    for step, ov in LM_STEP_OVERRIDES.items():
+        assert set(ov) <= fields, step

@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.dist   # distributed tier: opt in with -m dist
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

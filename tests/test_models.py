@@ -17,6 +17,7 @@ SMOKE_TRAIN = ShapeConfig("smoke_train", 64, 2, "train")
 RNG = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow   # one full fwd+bwd compile per arch (~2 min across all)
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_smoke_train_step(arch):
     cfg = get_smoke(arch)
