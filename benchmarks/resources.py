@@ -1,20 +1,12 @@
 """Paper Table 6: resource consumption per strategy (BRAM block math of
-§5.2/§6 on the Virtex-7: 18 Kb blocks, <=36-bit native width)."""
+§5.2/§6 on the Virtex-7: 18 Kb blocks, <=36-bit native width).
 
-import math
+The block arithmetic lives in ``core.costmodel.bram_blocks`` — the same
+model the tuner's resource feedback (``costmodel.fit_resources``) uses to
+shrink knobs on a conflict instead of stopping the walk."""
 
+from repro.core.costmodel import bram_blocks
 from repro.core.hw import FPGA_2012
-
-
-def bram_blocks(capacity_bytes: int, width_bits: int) -> int:
-    """Blocks to build a ``width_bits``-wide buffer of given capacity.
-
-    A block supplies <=36 bits of width; wider words gang ceil(w/36)
-    blocks; total must also cover capacity."""
-    hw = FPGA_2012
-    by_width = math.ceil(width_bits / hw.bram_block_max_width)
-    by_cap = math.ceil(capacity_bytes * 8 / hw.bram_block_bits)
-    return max(by_width, by_cap)
 
 
 def main():

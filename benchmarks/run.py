@@ -10,7 +10,8 @@ import time
 
 from benchmarks import (autotune_table, breakdowns, caching_size,
                         comm_filter, machsuite_steps, pe_scaling,
-                        pipelining_table, resources, roofline_table)
+                        pipelining_table, resources, roofline_table,
+                        serving_ladder)
 
 SECTIONS = [
     ("machsuite_steps (Fig.1/12)", machsuite_steps),
@@ -21,6 +22,7 @@ SECTIONS = [
     ("breakdowns (Fig.3/7/11)", breakdowns),
     ("resources (Table 6)", resources),
     ("autotune (closed-loop Table 4)", autotune_table),
+    ("serving_ladder (Table 1 analog, measured)", serving_ladder),
     ("roofline (EXPERIMENTS §Roofline)", roofline_table),
 ]
 
@@ -38,6 +40,11 @@ def main() -> None:
         print(f"# --- {title}", flush=True)
         if mod is machsuite_steps:
             rows = mod.main(measure=not args.skip_measured)
+        elif mod is serving_ladder and args.skip_measured:
+            # inherently measured (real decoding, minutes): model-only runs
+            # skip it and keep the checked-in SERVING_LADDER.md untouched
+            print("# serving_ladder skipped (--skip-measured)")
+            continue
         else:
             rows = mod.main()
         for name, us, derived in rows:

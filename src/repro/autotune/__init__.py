@@ -9,9 +9,11 @@ See ``autotune.measurement`` for the shared measurement API and
 
 from repro.autotune.measurement import (
     CostTwinBackend,
+    CumulativeLadderState,
     KernelModelBackend,
     LM_STEP_OVERRIDES,
     Measurement,
+    ServingBackend,
     roofline_terms,
 )
 from repro.autotune.trajectory import (
@@ -25,7 +27,9 @@ from repro.autotune.tuner import TuneResult, TuneRound, autotune
 
 __all__ = [
     "CostTwinBackend",
+    "CumulativeLadderState",
     "KernelModelBackend",
+    "ServingBackend",
     "LM_STEP_OVERRIDES",
     "Measurement",
     "TuneResult",

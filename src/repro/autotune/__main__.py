@@ -9,8 +9,14 @@ LM configs (lowered-HLO cost twin on the production mesh; compile-heavy):
 
   PYTHONPATH=src python -m repro.autotune --arch qwen3-8b --shape train_4k
 
+The serving engine itself (measured tokens/sec, smoke config, full O0->O5
+ladder walk):
+
+  PYTHONPATH=src python -m repro.autotune --serve --arch qwen3-8b
+
 Each run prints the per-round walk and writes a JSONL trajectory under
-``experiments/autotune/`` (render with ``python -m benchmarks.autotune_table``).
+``experiments/autotune/`` (render with ``python -m benchmarks.autotune_table``
+or, for --serve, ``python -m benchmarks.serving_ladder``).
 """
 
 import argparse
@@ -18,11 +24,11 @@ import os
 import sys
 
 
-def _run_one(backend, args):
+def _run_one(backend, args, *, ladder: bool = False):
     from repro.autotune.trajectory import render_rounds, write_trajectory
     from repro.autotune.tuner import autotune
 
-    result = autotune(backend, frontier=args.frontier,
+    result = autotune(backend, frontier=args.frontier, ladder=ladder,
                       max_rounds=args.max_rounds)
     path = write_trajectory(result, out_dir=args.out)
     print(f"== {result.target} ({result.mode}) ==")
@@ -45,6 +51,10 @@ def main(argv=None) -> int:
                         help="MachSuite kernel name, or 'all'")
     target.add_argument("--arch", help="LM architecture (repro.configs)")
     ap.add_argument("--shape", help="LM shape cell (e.g. train_4k)")
+    ap.add_argument("--serve", action="store_true",
+                    help="walk the serving engine itself O0->O5 on "
+                         "measured tokens/sec (requires --arch; smoke "
+                         "config)")
     ap.add_argument("--frontier", action="store_true",
                     help="AutoDSE-style mode: measure every remaining "
                          "candidate step per round, keep the best")
@@ -55,7 +65,30 @@ def main(argv=None) -> int:
     ap.add_argument("--set", action="append", default=[],
                     metavar="key=value",
                     help="base ArchConfig overrides (LM mode)")
+    # serving-walk knobs (--serve):
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=48)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"))
     args = ap.parse_args(argv)
+
+    if args.serve:
+        if not args.arch:
+            ap.error("--serve needs --arch (e.g. --serve --arch qwen3-8b)")
+        from repro.autotune.measurement import ServingBackend
+
+        backend = ServingBackend(
+            args.arch, batch_size=args.batch, max_seq=args.max_seq,
+            n_requests=args.requests, max_new=args.max_new,
+            repeats=args.repeats, policy=args.policy)
+        result = _run_one(backend, args, ladder=True)
+        levels = [r.measurement.meta for r in result.rounds]
+        gens = [m["generated"] for m in levels]
+        same = all(g == gens[0] for g in gens)
+        print(f"generated tokens identical across levels: {same}")
+        return 0 if same else 1
 
     if args.kernel:
         from repro.autotune.measurement import KernelModelBackend

@@ -120,28 +120,16 @@ def roofline_terms(
 
 
 # ---------------------------------------------------------------------------
-# Backend 1: analytic cost model (MachSuite kernels, the paper's platform).
+# Cumulative-ladder state machine, shared by every backend whose steps are
+# the paper's O0..O5 levels rather than independent knobs.
 # ---------------------------------------------------------------------------
 
 
-class KernelModelBackend:
-    """Measure MachSuite kernels on the paper's analytic FPGA model.
-
-    State is an :class:`OptLevel`.  The ladder is cumulative, so "applying"
-    a step means moving to the lowest level that includes it (exactly what
-    the paper's iterations do: Iter #3 lands at O5 having passed O4).
-    """
-
-    def __init__(self, profile: costmodel.KernelProfile, *, hw=None,
-                 cache_bytes: float = 64 * 1024, pe: int = 128):
-        self.profile = profile
-        self.hw = hw or FPGA_2012
-        self.cache_bytes = cache_bytes
-        self.pe = pe
-
-    @property
-    def name(self) -> str:
-        return self.profile.name
+class CumulativeLadderState:
+    """State is an :class:`OptLevel`.  The ladder is cumulative, so
+    "applying" a step means moving to the lowest level that includes it
+    (exactly what the paper's iterations do: Iter #3 lands at O5 having
+    passed O4)."""
 
     def initial_state(self) -> OptLevel:
         return OptLevel.O0
@@ -163,10 +151,42 @@ class KernelModelBackend:
     def describe(self, state: OptLevel) -> str:
         return f"O{int(state)}"
 
+
+# ---------------------------------------------------------------------------
+# Backend 1: analytic cost model (MachSuite kernels, the paper's platform).
+# ---------------------------------------------------------------------------
+
+
+class KernelModelBackend(CumulativeLadderState):
+    """Measure MachSuite kernels on the paper's analytic FPGA model.
+
+    Instant, jax-free, exact reproduction of the paper's platform —
+    including its resource feedback (Table 6): a level whose requested
+    (cache, PE, word-width) configuration over-subscribes the BRAM fabric
+    is not a dead end; ``costmodel.fit_resources`` shrinks the knobs,
+    re-measures the feasible candidates, and the walk continues at the
+    fastest one.  The fit is recorded in ``Measurement.meta['resource']``.
+    """
+
+    def __init__(self, profile: costmodel.KernelProfile, *, hw=None,
+                 cache_bytes: float = 64 * 1024, pe: int = 128):
+        self.profile = profile
+        self.hw = hw or FPGA_2012
+        self.cache_bytes = cache_bytes
+        self.pe = pe
+
+    @property
+    def name(self) -> str:
+        return self.profile.name
+
     def measure(self, state: OptLevel) -> Measurement:
-        t = costmodel.kernel_time(
+        fit = costmodel.fit_resources(
             self.profile, state, self.hw,
             cache_bytes=self.cache_bytes, pe=self.pe)
+        t = costmodel.kernel_time(
+            self.profile, state, self.hw,
+            cache_bytes=fit["cache_bytes"], pe=fit["pe"],
+            word_bits=fit["word_bits"])
         return Measurement(
             target=self.profile.name,
             label=self.describe(state),
@@ -176,7 +196,8 @@ class KernelModelBackend:
             baseline_s=self.profile.cpu_time_s,
             total_s=t["system_s"],
             breakdown=dict(t),
-            meta={"backend": "kernel_model", "level": int(state)},
+            meta={"backend": "kernel_model", "level": int(state),
+                  "resource": fit},
         )
 
 
@@ -278,5 +299,173 @@ class CostTwinBackend:
                 "overrides": self.overrides_for(state),
                 "chips": rec["chips"],
                 "overlapped": overlapped,
+            },
+        )
+
+
+# ---------------------------------------------------------------------------
+# Backend 3: the serving engine itself (measured tokens/sec, not a model).
+# ---------------------------------------------------------------------------
+
+
+def serving_smoke_config(arch: str, vocab: int = 0):
+    """The smoke config, optionally with a production-sized vocabulary.
+
+    ``vocab=0`` keeps the reduced smoke vocab — short ticks, so the
+    host-side mechanics the upper ladder rungs change (overlap, packed
+    resets) are a measurable fraction of a tick.  Passing e.g. 32768
+    restores a serving-realistic lm head, which stresses the naive
+    per-request path's full-logits round trips instead (layers stay
+    smoke-sized either way).
+    """
+    import dataclasses
+
+    from repro.configs import get_smoke
+
+    cfg = get_smoke(arch)
+    if vocab and vocab > cfg.vocab:
+        cfg = dataclasses.replace(cfg, vocab=vocab)
+    return cfg
+
+
+def serving_workload(vocab: int, *, max_seq: int, n_requests: int,
+                     max_new: int, seed: int = 0) -> list:
+    """The fixed mixed-length workload every serving measurement decodes:
+    ``[(prompt, max_new_tokens), ...]``, deterministic from ``seed``.
+    Shared by :class:`ServingBackend` and ``benchmarks/serving_ladder.py``
+    so the tuner and the benchmark can never drift apart."""
+    import numpy as np
+
+    if max_new < 1 or max_seq < 2:
+        raise ValueError(
+            f"serving workload needs max_new >= 1 and max_seq >= 2 "
+            f"(got max_new={max_new}, max_seq={max_seq})")
+    max_new = min(max_new, max_seq - 1)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_requests):
+        plen = int(rng.integers(1, max(2, max_seq // 4)))
+        new = int(rng.integers(min(2, max_new), max_new + 1))
+        # keep every request admissible: prompt + budget within max_seq
+        plen = max(1, min(plen, max_seq - new))
+        reqs.append((rng.integers(1, vocab, plen).tolist(), new))
+    return reqs
+
+
+def run_serving_workload(engine, workload: list):
+    """Submit ``workload`` to ``engine``, drain it, and return
+    ``(wall_s, tokens, generated, ticks)`` for that run only (the engine
+    may be reused across runs)."""
+    import time
+
+    from repro.serving import Request
+
+    done_before = len(engine.finished)
+    steps_before = engine.n_steps
+    rids = [engine.submit(Request(prompt=list(p), max_new_tokens=n))
+            for p, n in workload]
+    t0 = time.perf_counter()
+    engine.run()
+    wall = time.perf_counter() - t0
+    by_rid = {r.rid: r.generated for r in engine.finished[done_before:]}
+    gen = [by_rid[rid] for rid in rids]
+    return wall, sum(len(g) for g in gen), gen, engine.n_steps - steps_before
+
+
+class ServingBackend(CumulativeLadderState):
+    """Measure ``repro.serving.DecodeEngine`` at each ladder level.
+
+    Unlike the other two backends this one runs the *real* hot path: a
+    fixed continuous-batching workload (mixed prompt/generation lengths,
+    deterministic from ``seed``) is decoded to completion on the smoke
+    config and the objective is measured wall-clock seconds (tokens/sec in
+    ``meta``).  One engine is built per level, warmed up once so jit
+    compilation never pollutes the timing, then the workload is re-run
+    ``repeats`` times and the best run wins (best-of-K absorbs scheduler
+    jitter; the workload itself is identical run to run).
+
+    ``meta['generated']`` records every request's token ids so the ladder
+    walk can assert bit-identical generations across levels under greedy
+    sampling — the serving analog of MachSuite's O0..O5 output-equivalence
+    matrix.
+    """
+
+    def __init__(self, arch: str = "qwen3-8b", *, batch_size: int = 4,
+                 max_seq: int = 48, n_requests: int = 12, max_new: int = 8,
+                 repeats: int = 3, policy: str = "fcfs", pe: int = 8,
+                 vocab: int = 0, seed: int = 0):
+        self.arch = arch
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.n_requests = n_requests
+        self.max_new = max_new
+        self.repeats = repeats
+        self.policy = policy
+        self.pe = pe
+        self.vocab = vocab
+        self.seed = seed
+        self._model = None
+        self._params = None
+
+    @property
+    def name(self) -> str:
+        return f"serve/{self.arch}"
+
+    def _ensure_model(self):
+        if self._model is None:
+            import jax
+            from repro.configs import get_smoke
+            from repro.models import get_model
+
+            cfg = serving_smoke_config(self.arch, self.vocab)
+            self._model = get_model(cfg)
+            self._params = self._model.init(jax.random.PRNGKey(self.seed))
+            self._vocab = cfg.vocab
+        return self._model, self._params
+
+    def _workload(self):
+        self._ensure_model()
+        return serving_workload(self._vocab, max_seq=self.max_seq,
+                                n_requests=self.n_requests,
+                                max_new=self.max_new, seed=self.seed)
+
+    def measure(self, state: OptLevel) -> Measurement:
+        from repro.core.optlevel import BestEffortConfig
+        from repro.serving import DecodeEngine
+
+        model, params = self._ensure_model()
+        workload = self._workload()
+        engine = DecodeEngine(
+            model, params, batch_size=self.batch_size, max_seq=self.max_seq,
+            config=BestEffortConfig(level=state, pe=self.pe),
+            policy=self.policy)
+
+        # warmup: jit compiles here
+        _, tokens, generated, ticks = run_serving_workload(engine, workload)
+        best_wall = None
+        for _ in range(max(1, self.repeats)):
+            wall, _, gen, _ = run_serving_workload(engine, workload)
+            assert gen == generated, "serving workload must be deterministic"
+            if best_wall is None or wall < best_wall:
+                best_wall = wall
+
+        tok_per_s = tokens / best_wall if best_wall > 0 else 0.0
+        return Measurement(
+            target=self.name,
+            label=self.describe(state),
+            compute_s=best_wall,
+            memory_s=0.0,
+            total_s=best_wall,
+            breakdown={"wall_s": best_wall, "tok_per_s": tok_per_s},
+            meta={
+                "backend": "serving",
+                "level": int(state),
+                "tok_per_s": tok_per_s,
+                "tokens": tokens,
+                "ticks": ticks,
+                "batch_size": self.batch_size,
+                "requests": self.n_requests,
+                "policy": self.policy,
+                "generated": [[int(t) for t in g] for g in generated],
             },
         )

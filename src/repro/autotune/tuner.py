@@ -97,7 +97,7 @@ def _diagnose(backend, state, m: Measurement) -> Recommendation:
     )
 
 
-def autotune(backend, *, frontier: bool = False,
+def autotune(backend, *, frontier: bool = False, ladder: bool = False,
              max_rounds: int = 12) -> TuneResult:
     """Run the closed loop to completion.
 
@@ -105,6 +105,12 @@ def autotune(backend, *, frontier: bool = False,
     when ``max_rounds`` is exhausted, or — in frontier mode — when no
     remaining candidate improves ``total_s`` (AutoDSE's bottleneck-guided
     pruning: exploring past a non-improving frontier is wasted synthesis).
+
+    ``ladder=True`` walks the backend's cumulative ladder one minimal move
+    at a time, measuring *every* rung to the top — the paper's full-walk
+    mode (Fig. 12's bar groups): the guideline's diagnosis is still logged
+    per round, but a non-improving rung does not end the walk, so the
+    result is the complete O0..O5 measurement curve, ties included.
     """
     state = backend.initial_state()
     m = backend.measure(state)
@@ -129,7 +135,15 @@ def autotune(backend, *, frontier: bool = False,
             rejected = rec.stop and "communication-bound" in rec.reason
             break
 
-        if frontier:
+        if ladder:
+            cands = backend.candidate_steps(state)
+            if not cands:
+                round_.stop = True
+                break
+            step = cands[0]
+            state = backend.apply(state, step)
+            m = backend.measure(state)
+        elif frontier:
             cands = []
             for step in backend.candidate_steps(state):
                 cand_state = backend.apply(state, step)
@@ -164,7 +178,7 @@ def autotune(backend, *, frontier: bool = False,
 
     return TuneResult(
         target=backend.name,
-        mode="frontier" if frontier else "greedy",
+        mode=("ladder" if ladder else "frontier" if frontier else "greedy"),
         rounds=rounds,
         rejected=rejected,
     )

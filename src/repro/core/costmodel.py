@@ -168,6 +168,106 @@ def kernel_time(
     }
 
 
+# ---------------------------------------------------------------------------
+# Resource model + feedback (paper Table 6 / §5.2).
+# ---------------------------------------------------------------------------
+
+MIN_CACHE_BYTES = 4 * 1024      # below this, burst init dominates (paper §3.2)
+
+
+def bram_blocks(capacity_bytes: float, width_bits: int,
+                hw: FpgaSpec = FPGA_2012) -> int:
+    """18 Kb BRAM blocks to build a ``width_bits``-wide buffer of the given
+    capacity: a block supplies <=36 bits of width, so wider words gang
+    ceil(w/36) blocks; the total must also cover the capacity."""
+    by_width = math.ceil(width_bits / hw.bram_block_max_width)
+    by_cap = math.ceil(capacity_bytes * 8 / hw.bram_block_bits)
+    return max(by_width, by_cap)
+
+
+def bram_demand(p: KernelProfile, level: OptLevel, hw: FpgaSpec = FPGA_2012,
+                *, cache_bytes: float, pe: int, word_bits: int) -> int:
+    """Modeled BRAM block demand of one configuration (paper §5.2's
+    feasibility check: buffers x PEs x blocks-per-buffer)."""
+    if not level.has(Step.DATA_CACHING):
+        return 0                     # no on-chip buffers in the naive port
+    n_pe = (min(pe, p.max_pe)
+            if level.has(Step.PE_DUPLICATION) and p.parallel_jobs > 0 else 1)
+    width = word_bits if level.has(Step.SCRATCHPAD_REORG) else p.word_bytes * 8
+    bufs = 3 if (level.has(Step.DOUBLE_BUFFERING) and p.overlappable) else 1
+    per_pe = max(1.0, cache_bytes / n_pe)
+    return bufs * n_pe * bram_blocks(per_pe, width, hw)
+
+
+def _halvings(top, floor):
+    out = []
+    v = top
+    while v >= floor:
+        out.append(v)
+        if v == floor:
+            break
+        v = max(floor, v // 2)
+    return out
+
+
+def fit_resources(p: KernelProfile, level: OptLevel,
+                  hw: FpgaSpec = FPGA_2012, *,
+                  cache_bytes: int = 64 * 1024, pe: int = 128,
+                  word_bits: int = None) -> dict:
+    """Paper Table 6 resource feedback: on a modeled BRAM conflict, do NOT
+    stop the walk — shrink the knobs and re-measure.
+
+    The shrink space follows the guideline's order (cache size first, then
+    PE count, trading scratchpad width last) as halving grids; every
+    feasible candidate is *re-measured* on the model and the fastest one
+    wins, so a width-bound conflict (where shrinking the cache frees no
+    blocks) correctly resolves by narrowing the scratchpad word or folding
+    PEs rather than thrashing the cache.
+    """
+    natural = p.word_bytes * 8
+    want_w = (word_bits if word_bits is not None
+              else (p.max_word_bits if level.has(Step.SCRATCHPAD_REORG)
+                    else natural))
+    demand = bram_demand(p, level, hw, cache_bytes=cache_bytes, pe=pe,
+                         word_bits=want_w)
+    fit = {
+        "cache_bytes": cache_bytes, "pe": pe, "word_bits": want_w,
+        "demand_blocks": demand, "budget_blocks": hw.bram_blocks,
+        "shrunk": False,
+    }
+    if demand <= hw.bram_blocks:
+        return fit
+
+    requested = dict(cache_bytes=cache_bytes, pe=pe, word_bits=want_w,
+                     demand_blocks=demand)
+    best = None
+    for c in _halvings(cache_bytes, MIN_CACHE_BYTES):
+        for q in _halvings(pe, 1):
+            for w in _halvings(want_w, natural):
+                d = bram_demand(p, level, hw, cache_bytes=c, pe=q,
+                                word_bits=w)
+                if d > hw.bram_blocks:
+                    continue
+                t = kernel_time(p, level, hw, cache_bytes=c, pe=q,
+                                word_bits=w)["system_s"]
+                key = (t, -c, -q, -w)
+                if best is None or key < best[0]:
+                    best = (key, dict(cache_bytes=c, pe=q, word_bits=w,
+                                      demand_blocks=d))
+    if best is None:
+        # Even the floor config over-subscribes (pathological profile);
+        # take the floor and report the overrun rather than stopping.
+        c, q, w = MIN_CACHE_BYTES, 1, natural
+        best = (None, dict(
+            cache_bytes=c, pe=q, word_bits=w,
+            demand_blocks=bram_demand(p, level, hw, cache_bytes=c, pe=q,
+                                      word_bits=w)))
+    fit.update(best[1])
+    fit["shrunk"] = True
+    fit["requested"] = requested
+    return fit
+
+
 def refinement_curve(
     p: KernelProfile, hw: FpgaSpec = FPGA_2012, **kw
 ) -> dict:

@@ -1,11 +1,14 @@
-"""End-to-end serving driver: slot-based continuous batching.
+"""End-to-end serving driver: slot-based continuous batching at any rung
+of the best-effort ladder.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-      --batch 4 --max-seq 64 --requests 8
+      --batch 4 --max-seq 64 --requests 8 --level 5 --policy spf
 
 On a real fleet the same driver builds the production mesh and the sharded
 ``serve_step`` from ``launch/steps.py``; on this container it runs the
-reduced smoke config on the host device.
+reduced smoke config on the host device.  ``--level`` selects the
+OptLevel the engine is built at (see ``repro.serving``); walk all six with
+``python -m repro.autotune --serve``.
 """
 
 from __future__ import annotations
@@ -17,16 +20,21 @@ import numpy as np
 import jax
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke
+from repro.core.optlevel import BestEffortConfig, OptLevel
 from repro.models import get_model
-from repro.serving import DecodeEngine, Request
+from repro.serving import DecodeEngine, Request, SamplerConfig
 
 
 def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
-               seed: int = 0, prompt_len=(2, 12), max_new=(4, 16)) -> dict:
+               seed: int = 0, prompt_len=(2, 12), max_new=(4, 16),
+               level: OptLevel = OptLevel.O5, policy: str = "fcfs",
+               sampler: SamplerConfig = None) -> dict:
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     engine = DecodeEngine(model, params, batch_size=batch_size,
-                          max_seq=max_seq)
+                          max_seq=max_seq,
+                          config=BestEffortConfig(level=level),
+                          policy=policy, sampler=sampler)
 
     rng = np.random.default_rng(seed)
     for _ in range(n_requests):
@@ -56,15 +64,27 @@ def main():
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--level", type=int, default=5, choices=range(6),
+                    help="OptLevel to build the engine at (0=naive)")
+    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"))
+    ap.add_argument("--sampler", default="greedy",
+                    choices=("greedy", "temperature", "top_k"))
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    sampler = SamplerConfig(kind=args.sampler, temperature=args.temperature,
+                            top_k=args.top_k, seed=args.seed)
     out = serve_demo(cfg, batch_size=args.batch, max_seq=args.max_seq,
-                     n_requests=args.requests, seed=args.seed)
+                     n_requests=args.requests, seed=args.seed,
+                     level=OptLevel(args.level), policy=args.policy,
+                     sampler=sampler)
     for r in out["finished"][:4]:
         print(f"[serve] req {r.rid}: prompt[{r.n_prompt}] -> "
               f"{r.generated}")
-    print(f"[serve] {len(out['finished'])} requests, {out['tokens']} new "
+    print(f"[serve] O{args.level}/{args.policy}: "
+          f"{len(out['finished'])} requests, {out['tokens']} new "
           f"tokens in {out['ticks']} ticks / {out['wall_s']:.2f}s "
           f"({out['tok_per_s']:.1f} tok/s batched)")
 

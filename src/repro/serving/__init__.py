@@ -1,1 +1,14 @@
-from repro.serving.engine import DecodeEngine, Request  # noqa: F401
+"""Serving subsystem: the decode engine refactored onto the ladder.
+
+One class per paper step — ``scheduler`` (admission + slots),
+``cache`` (data caching / scratchpad reorg), ``sampler`` (pipelined
+sample-in-graph), ``overlap`` (host/device double buffering) — assembled
+by ``engine.DecodeEngine`` at any ``OptLevel`` and tuned end-to-end by
+``python -m repro.autotune --serve``.
+"""
+
+from repro.serving.cache import CacheManager            # noqa: F401
+from repro.serving.engine import DecodeEngine            # noqa: F401
+from repro.serving.overlap import HostOverlap, TickBuffers  # noqa: F401
+from repro.serving.sampler import SamplerConfig, make_sampler  # noqa: F401
+from repro.serving.scheduler import Request, Scheduler, Slot  # noqa: F401

@@ -1,0 +1,112 @@
+"""Per-slot decode-cache management at every rung of the ladder.
+
+The engine's cache tree (KV caches for transformers, recurrent states for
+RWKV/SSM, both for hybrids) has one batch axis per leaf, located via the
+model's ``cache_axes()`` logical names — no layout guessing.  Admitting a
+request into slot ``i`` must reset that slot's slice; how that reset is
+done is exactly the paper's memory-system ladder:
+
+  O0 (no data caching)   — per-request cache REBUILD: allocate a fresh
+      cache tree and copy every surviving slot's slice across, one
+      host-driven dispatch per (leaf x live slot).  This is the "every
+      access goes back to DRAM" analog: nothing persistent is reused in
+      place.
+  O1+ (data caching)     — the cache is a persistent device-resident
+      scratchpad; admission zeroes just the new slot's slice in place.
+  O5 (scratchpad reorg)  — packed slot resets: all slots admitted in one
+      tick are zeroed by a single jitted, donated call (one wide write per
+      leaf instead of one narrow write per slot per leaf — the wide-word
+      packing analog).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optlevel import OptLevel, Step
+
+
+class CacheManager:
+    def __init__(self, model, batch_size: int, max_seq: int,
+                 level: OptLevel = OptLevel.O5, shardings=None):
+        self.model = model
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.level = level
+        self.cache = model.init_cache(batch_size, max_seq)
+        self.batch_axes = self._find_batch_axes()
+        self.shardings = shardings
+        if shardings is not None:
+            self.cache = jax.device_put(self.cache, shardings)
+        self._packed_zero = None
+
+    def _find_batch_axes(self) -> list:
+        axes_tree = self.model.cache_axes()
+        leaves_axes = jax.tree.leaves(
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+        leaves_cache = jax.tree.leaves(self.cache)
+        assert len(leaves_axes) == len(leaves_cache), "cache axes drift"
+        return [ax.index("batch") for ax in leaves_axes]
+
+    # -- reset strategies ----------------------------------------------------
+    def reset_slots(self, indices: list, live: list):
+        """Reset the cache slices of ``indices`` (newly admitted slots).
+
+        ``live`` are the slot indices whose state must survive — only the
+        O0 rebuild path needs them.
+        """
+        if not indices:
+            return
+        if not self.level.has(Step.DATA_CACHING):
+            self._rebuild(set(indices), live)
+        elif self.level.has(Step.SCRATCHPAD_REORG):
+            self._zero_packed(indices)
+        else:
+            for i in indices:
+                self._zero_slot(i)
+
+    def _rebuild(self, dropped: set, live: list):
+        """O0: no in-place scratchpad — build a fresh cache and copy every
+        surviving slot's slice over, slot by slot, leaf by leaf."""
+        fresh = self.model.init_cache(self.B, self.max_seq)
+        if self.shardings is not None:
+            fresh = jax.device_put(fresh, self.shardings)
+        old_leaves, treedef = jax.tree.flatten(self.cache)
+        new_leaves = jax.tree.leaves(fresh)
+        out = []
+        keep = [i for i in live if i not in dropped]
+        for old, new, bax in zip(old_leaves, new_leaves, self.batch_axes):
+            for i in keep:
+                idx = [slice(None)] * new.ndim
+                idx[bax] = i
+                new = new.at[tuple(idx)].set(old[tuple(idx)])
+            out.append(new)
+        self.cache = jax.tree.unflatten(treedef, out)
+
+    def _zero_slot(self, i: int):
+        """O1..O4: zero one slot's slice in the persistent cache."""
+        leaves, treedef = jax.tree.flatten(self.cache)
+        out = []
+        for leaf, bax in zip(leaves, self.batch_axes):
+            idx = [slice(None)] * leaf.ndim
+            idx[bax] = i
+            out.append(leaf.at[tuple(idx)].set(0))
+        self.cache = jax.tree.unflatten(treedef, out)
+
+    def _zero_packed(self, indices: list):
+        """O5: one fused, donated call zeroes every admitted slot at once."""
+        if self._packed_zero is None:
+            batch_axes = self.batch_axes
+
+            def zero(cache, idx):
+                leaves, treedef = jax.tree.flatten(cache)
+                out = []
+                for leaf, bax in zip(leaves, batch_axes):
+                    sel = (slice(None),) * bax + (idx,)
+                    out.append(leaf.at[sel].set(0))
+                return jax.tree.unflatten(treedef, out)
+
+            self._packed_zero = jax.jit(zero, donate_argnums=(0,))
+        self.cache = self._packed_zero(
+            self.cache, jnp.asarray(indices, jnp.int32))

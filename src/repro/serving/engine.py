@@ -1,10 +1,24 @@
-"""Slot-based continuous-batching decode engine.
+"""Slot-based continuous-batching decode engine, built at an OptLevel.
 
-The serving counterpart of the paper's ladder: a fixed pool of B slots (the
-"PE duplication" — B sequences decode in lockstep on the sharded
-serve_step), per-slot state caches staged on device (explicit data
-caching), admission/retirement pipelined with compute (double buffering:
-the host prepares next tokens while the device runs the step).
+The serving counterpart of the paper's five-step ladder, with every step a
+real, independently toggleable stage keyed by ``BestEffortConfig.level``:
+
+  O1 data caching      — persistent device-resident cache with in-place
+                         per-slot resets (``cache.CacheManager``); O0 falls
+                         back to a per-request cache rebuild.
+  O2 pipelining        — continuous batching: every active slot decodes in
+                         ONE fused jitted step with sampling in-graph
+                         (``sampler``), amortizing the pass over the
+                         weights; O0/O1 run the un-pipelined loop — one
+                         batch-1 model call per request per tick, host-side
+                         sampling over that request's full-vocab logits.
+  O3 PE duplication    — batch-axis sharding of cache + step across
+                         devices when ``config.effective_pe > 1``
+                         (``parallel.sharding`` on a 1-D data mesh).
+  O4 double buffering  — host prestages next tick's token/position buffers
+                         while the device runs this tick (``overlap``).
+  O5 scratchpad reorg  — packed slot admission: all slots admitted in a
+                         tick are zeroed by one fused donated call.
 
 Unified prefill/decode: every step feeds one token per active slot — a
 slot still consuming its prompt feeds the next prompt token (its logits
@@ -13,155 +27,323 @@ keeps one jitted step for all families (KV-cache transformers, RWKV/SSM
 state models, enc-dec) and is exactly how slot-based TPU serving engines
 handle heterogeneous request phases.
 
-Slot hygiene: on admission the slot's cache slice is zeroed (SSM/RWKV
-states accumulate; KV caches are masked by position but zeroing keeps the
-invariant uniform).  The batch axis of every cache leaf is located via the
-model's ``cache_axes()`` logical names — no layout guessing.
+Admission, slot bookkeeping and retirement live in ``scheduler``; the
+engine is only the tick loop that wires scheduler, cache manager, sampler
+and overlap together under one config.
 """
 
 from __future__ import annotations
 
 import collections
-import dataclasses
-import itertools
 from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-
-@dataclasses.dataclass
-class Request:
-    prompt: list
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    rid: int = -1
-    # filled by the engine:
-    generated: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-    @property
-    def n_prompt(self):
-        return len(self.prompt)
+from repro.core.optlevel import BestEffortConfig, OptLevel, Step
+from repro.serving.cache import CacheManager
+from repro.serving.overlap import HostOverlap
+from repro.serving.sampler import SamplerConfig, make_sampler
+from repro.serving.scheduler import Request, Scheduler
 
 
-@dataclasses.dataclass
-class _Slot:
-    req: Optional[Request] = None
-    pos: int = 0              # tokens consumed (prompt + generated)
+def _last_logits(logits):
+    """(B, V) or (B, 1, V) -> (B, V): the newest position's logits."""
+    if logits.ndim == 3:
+        return logits[:, -1, :]
+    return logits
 
-    @property
-    def active(self):
-        return self.req is not None and not self.req.done
 
-    def next_token(self) -> int:
-        r = self.req
-        if self.pos < r.n_prompt:
-            return r.prompt[self.pos]
-        return r.generated[-1]
+def _make_fused(model, sample):
+    """The batched fused decode+sample step (O2+); one definition shared
+    by the jit-cached path and the sharded-jit path so they can never
+    drift apart."""
+    def _fused(params, cache, tokens, positions, seeds):
+        logits, new_cache = model.decode_step(
+            params, cache, tokens, positions)
+        return sample(_last_logits(logits), seeds), new_cache
 
-    @property
-    def prefilling(self) -> bool:
-        # the step that consumes prompt token n_prompt-1 emits the first
-        # generated token, so "prefilling" = pos < n_prompt - 1
-        return self.pos < self.req.n_prompt - 1
+    return _fused
+
+
+# Jitted step functions are shared across engines of the same
+# (model, sampler, fusion mode): every level from O2 up runs the *same*
+# compiled decode program, so measured differences between ladder rungs
+# come from the host-side mechanics each rung actually changes, not from
+# per-engine jit-instance luck.  (Sharded O3+ engines build their own
+# step: shardings are part of the program.)  LRU-bounded: each entry pins
+# its model (the id() key must stay valid) and three compiled
+# executables, so an unbounded cache would leak in any process that
+# keeps constructing models.
+_STEP_CACHE = collections.OrderedDict()
+_STEP_CACHE_MAX = 8
+
+
+def _shared_steps(model, sampler_cfg):
+    key = (id(model), sampler_cfg)
+    if key in _STEP_CACHE:
+        _STEP_CACHE.move_to_end(key)
+    else:
+        sample = make_sampler(sampler_cfg)
+        axes_tree = model.cache_axes()
+        leaves_axes = jax.tree.leaves(
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+        batch_axes = [ax.index("batch") for ax in leaves_axes]
+
+        def _single(params, cache, token, position, islot):
+            """One request's decode step: slice slot ``islot``'s cache
+            rows, run a batch-1 model step, write the rows back.  The
+            un-pipelined serving loop — each request pays its own model
+            call (and its own pass over the weights)."""
+            leaves, treedef = jax.tree.flatten(cache)
+            row = jax.tree.unflatten(treedef, [
+                jax.lax.dynamic_slice_in_dim(leaf, islot, 1, axis=bax)
+                for leaf, bax in zip(leaves, batch_axes)])
+            logits, new_row = model.decode_step(
+                params, row, token[None, None], position[None])
+            row_leaves = jax.tree.leaves(new_row)
+            new_cache = jax.tree.unflatten(treedef, [
+                jax.lax.dynamic_update_slice_in_dim(leaf, new, islot,
+                                                    axis=bax)
+                for leaf, new, bax in zip(leaves, row_leaves, batch_axes)])
+            return _last_logits(logits)[0], new_cache
+
+        _STEP_CACHE[key] = {
+            "model": model,   # keep the model alive while its id is a key
+            "fused": jax.jit(_make_fused(model, sample),
+                             donate_argnums=(1,)),
+            "single": jax.jit(_single, donate_argnums=(1,)),
+            "sample": jax.jit(sample),
+        }
+        if len(_STEP_CACHE) > _STEP_CACHE_MAX:
+            _STEP_CACHE.popitem(last=False)
+    return _STEP_CACHE[key]
 
 
 class DecodeEngine:
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
-                 pad_id: int = 0, step_fn=None):
+                 pad_id: int = 0, config: Optional[BestEffortConfig] = None,
+                 sampler: Optional[SamplerConfig] = None,
+                 policy: str = "fcfs", step_fn=None):
         self.model = model
-        self.params = params
         self.B = batch_size
         self.max_seq = max_seq
         self.pad_id = pad_id
-        self.cache = model.init_cache(batch_size, max_seq)
-        self._batch_axis = self._find_batch_axes()
-        self.slots = [_Slot() for _ in range(batch_size)]
-        self.queue: collections.deque = collections.deque()
-        self.finished: list = []
-        self._rid = itertools.count()
+        self.config = config or BestEffortConfig(level=OptLevel.O5)
+        self.level = self.config.level
+        self.sampler_cfg = sampler or SamplerConfig()
+        self.scheduler = Scheduler(batch_size, max_seq, policy=policy)
         self.n_steps = 0
 
-        if step_fn is None:
-            def _step(params, cache, tokens, positions):
-                logits, new_cache = model.decode_step(
-                    params, cache, tokens, positions)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                return nxt, new_cache
-            step_fn = jax.jit(_step, donate_argnums=(1,))
-        self.step_fn = step_fn
+        # O3: PE duplication = batch-axis sharding across devices.
+        self._shardings = self._plan_pe_sharding()
+        cache_sh = tok_sh = pos_sh = None
+        if self._shardings is not None:
+            cache_sh, tok_sh, pos_sh = self._shardings
+            params = jax.device_put(params, self._repl)
+        self.params = params
+        self.cache_mgr = CacheManager(model, batch_size, max_seq,
+                                      self.level, shardings=cache_sh)
 
-    # -- slot/cache bookkeeping ----------------------------------------------
-    def _find_batch_axes(self):
-        axes_tree = self.model.cache_axes()
-        leaves_axes = jax.tree.leaves(
-            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
-        leaves_cache = jax.tree.leaves(self.cache)
-        assert len(leaves_axes) == len(leaves_cache), "cache axes drift"
-        return [ax.index("batch") for ax in leaves_axes]
+        self._fused = self.level.has(Step.PIPELINING) or step_fn is not None
+        if step_fn is not None:
+            # Back-compat hook: a caller-supplied fused step
+            # (params, cache, tokens, positions) -> (tokens, cache).
+            self._step_fn = lambda p, c, t, pos, seeds: step_fn(p, c, t, pos)
+        elif self._shardings is not None:
+            # Sharded PE duplication: shardings are part of the program,
+            # so this engine compiles its own instance of the fused step.
+            self._step_fn = jax.jit(
+                _make_fused(model, make_sampler(self.sampler_cfg)),
+                donate_argnums=(1,),
+                in_shardings=(self._repl, cache_sh, tok_sh, pos_sh, pos_sh),
+                out_shardings=(pos_sh, cache_sh))
+        elif self._fused:
+            self._step_fn = _shared_steps(model, self.sampler_cfg)["fused"]
+        else:
+            # O0/O1: the un-pipelined serving loop — each active request
+            # runs its OWN batch-1 model call per tick (every request pays
+            # a full pass over the weights; no continuous batching), and
+            # sampling happens OUTSIDE the graph: greedy argmax runs on
+            # the host over the request's transferred logits; stochastic
+            # kinds run as a separate device dispatch (host RNG would
+            # diverge from the fused path's bits).
+            shared = _shared_steps(model, self.sampler_cfg)
+            self._single_fn = shared["single"]
+            self._sample_fn = shared["sample"]
+            self._host_greedy = not self.sampler_cfg.stochastic
 
-    def _zero_slot(self, i: int):
-        leaves, treedef = jax.tree.flatten(self.cache)
-        out = []
-        for leaf, bax in zip(leaves, self._batch_axis):
-            idx = [slice(None)] * leaf.ndim
-            idx[bax] = i
-            out.append(leaf.at[tuple(idx)].set(0))
-        self.cache = jax.tree.unflatten(treedef, out)
+        # O4: host/device overlap via rotating prestaged buffers plus the
+        # split-tick protocol (dispatch -> bookkeeping under the running
+        # step -> finalize next tick).
+        self._overlap = (HostOverlap(batch_size, pad_id,
+                                     self.config.effective_buffers)
+                         if self.level.has(Step.DOUBLE_BUFFERING) else None)
+        self._pending = None        # (toks_future, emissions) of last tick
 
-    # -- public API ------------------------------------------------------------
+    # -- PE duplication -------------------------------------------------------
+    def _plan_pe_sharding(self):
+        """Shard the batch axis of cache/tokens/positions over a 1-D mesh
+        of min(pe, devices) when the level enables PE duplication."""
+        pe = self.config.effective_pe
+        if pe <= 1:
+            return None
+        devs = jax.devices()
+        n = min(pe, len(devs))
+        while n > 1 and self.B % n:
+            n -= 1
+        if n <= 1:
+            return None
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.parallel.sharding import Sharder
+
+        mesh = Mesh(np.asarray(devs[:n]), ("data",))
+        sharder = Sharder(mesh, {"batch": ("data",)})
+        cache_specs = self.model.cache_spec(self.B, self.max_seq)
+        cache_sh = sharder.tree_shardings(self.model.cache_axes(),
+                                          cache_specs)
+        tok_sh = NamedSharding(mesh, P("data", None))
+        pos_sh = NamedSharding(mesh, P("data"))
+        self._repl = NamedSharding(mesh, P())
+        return cache_sh, tok_sh, pos_sh
+
+    # -- public API -----------------------------------------------------------
+    @property
+    def cache(self):
+        return self.cache_mgr.cache
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def finished(self):
+        return self.scheduler.finished
+
+    @property
+    def slots(self):
+        return self.scheduler.slots
+
     def submit(self, req: Request) -> int:
-        req.rid = next(self._rid)
-        self.queue.append(req)
-        return req.rid
+        return self.scheduler.submit(req)
 
-    def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot.active or not self.queue:
-                continue
-            req = self.queue.popleft()
-            assert req.n_prompt >= 1, "empty prompt"
-            assert req.n_prompt + req.max_new_tokens <= self.max_seq, (
-                "request exceeds engine max_seq")
-            self.slots[i] = _Slot(req=req, pos=0)
-            self._zero_slot(i)
-
-    def step(self):
+    def step(self) -> bool:
         """One engine tick: admit, run the batched decode step, retire."""
-        self._admit()
-        if not any(s.active for s in self.slots):
+        if self._overlap is not None:
+            return self._step_overlapped()
+        return self._step_serial()
+
+    def _dispatch(self, tokens_np, positions_np, seeds_np):
+        """Run the batched fused device step; returns the (possibly still
+        in-flight) sampled tokens and installs the new cache."""
+        toks_dev, new_cache = self._step_fn(
+            self.params, self.cache_mgr.cache, jnp.asarray(tokens_np),
+            jnp.asarray(positions_np), jnp.asarray(seeds_np))
+        self.cache_mgr.cache = new_cache
+        self.n_steps += 1
+        return toks_dev
+
+    def _step_serial(self) -> bool:
+        """O0..O3: admit -> fill -> dispatch -> wait -> retire, in order.
+
+        Below O2 (no pipelining) each active request additionally runs its
+        own batch-1 model call, one after another — the naive per-request
+        loop a batched tick replaces.
+        """
+        sched = self.scheduler
+        admitted = sched.admit()
+        active = sched.active_indices
+        self.cache_mgr.reset_slots(admitted, active)
+        if not active:
             return False
 
-        tokens = np.full((self.B, 1), self.pad_id, np.int32)
-        positions = np.zeros((self.B,), np.int32)
-        for i, s in enumerate(self.slots):
-            if s.active:
-                tokens[i, 0] = s.next_token()
-                positions[i] = s.pos
+        cfg = self.sampler_cfg
+        slots = sched.slots
+        if not self._fused:
+            # O0/O1: one model call per request, host-side sampling.
+            toks = np.zeros((self.B,), np.int32)
+            for i in active:
+                s = slots[i]
+                logits, self.cache_mgr.cache = self._single_fn(
+                    self.params, self.cache_mgr.cache,
+                    jnp.int32(s.next_token()), jnp.int32(s.pos),
+                    jnp.int32(i))
+                if self._host_greedy:
+                    toks[i] = int(np.asarray(logits).argmax())
+                else:
+                    seed = cfg.request_seed(s.req.rid, len(s.req.generated))
+                    toks[i] = int(self._sample_fn(
+                        jnp.asarray(logits)[None],
+                        jnp.asarray([seed], jnp.int32))[0])
+            self.n_steps += 1
+            for i in active:
+                sched.advance(i, toks[i])
+            return True
 
-        nxt, self.cache = self.step_fn(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(positions))
-        nxt = np.asarray(nxt).reshape(self.B, -1)[:, -1]
-        self.n_steps += 1
+        # O2/O3: one batched fused step for every active slot.
+        tokens_np = np.asarray(
+            [[s.next_token() if s.active else self.pad_id]
+             for s in slots], np.int32)
+        positions_np = np.asarray(
+            [s.pos if s.active else 0 for s in slots], np.int32)
+        seeds_np = (np.asarray(
+            [cfg.request_seed(s.req.rid, len(s.req.generated))
+             if s.active else 0 for s in slots], np.int32)
+            if cfg.stochastic else np.zeros((self.B,), np.int32))
 
-        for i, s in enumerate(self.slots):
-            if not s.active:
+        toks_dev = self._dispatch(tokens_np, positions_np, seeds_np)
+        toks = np.asarray(toks_dev).reshape(self.B, -1)[:, -1]
+        for i in active:
+            sched.advance(i, toks[i])
+        return True
+
+    def _step_overlapped(self) -> bool:
+        """O4+: double-buffered schedule.  Each call finalizes the
+        previous tick (its tokens have been computing since last call),
+        dispatches this tick from mostly-prestaged buffers, then does all
+        token-independent bookkeeping — position advance, count-based
+        retirement planning, admission, cache-slot resets, next tick's
+        prompt prestaging — while the device runs."""
+        sched = self.scheduler
+        cfg = self.sampler_cfg
+        if self._pending is not None:
+            toks_dev, emissions = self._pending
+            self._pending = None
+            toks = np.asarray(toks_dev).reshape(self.B, -1)[:, -1]
+            sched.finalize(emissions, toks)
+        active = sched.active_indices
+        if not active:
+            # cold start / wake-up: nothing was admitted under a running
+            # step, so admit + reset inline.
+            admitted = sched.admit()
+            if not admitted:
+                return False
+            active = sched.active_indices
+            self.cache_mgr.reset_slots(admitted, active)
+
+        # fill: only slots not prestaged during the previous tick
+        buf = self._overlap.rotate()
+        skip = self._overlap.prestaged
+        for i in active:
+            if i in skip:
                 continue
-            emitted = not s.prefilling
-            s.pos += 1
-            if emitted:
-                r = s.req
-                tok = int(nxt[i])
-                r.generated.append(tok)
-                hit_eos = r.eos_id is not None and tok == r.eos_id
-                if (len(r.generated) >= r.max_new_tokens or hit_eos
-                        or s.pos + 1 >= self.max_seq):
-                    r.done = True
-                    self.finished.append(r)
-                    self.slots[i] = _Slot()
+            s = sched.slots[i]
+            buf.tokens[i, 0] = s.next_token()
+            buf.positions[i] = s.pos
+            if cfg.stochastic:
+                buf.seeds[i] = cfg.request_seed(
+                    s.req.rid, len(s.req.generated))
+
+        toks_dev = self._dispatch(buf.tokens, buf.positions, buf.seeds)
+
+        # -- bookkeeping for the next tick, under the running step -----------
+        emissions = sched.tick_advance(active)
+        self._pending = (toks_dev, emissions)
+        admitted = sched.admit()                 # refills planned-free slots
+        if admitted:
+            self.cache_mgr.reset_slots(admitted, sched.active_indices)
+        self._overlap.prestage(sched, cfg)
         return True
 
     def run(self, *, max_ticks: int = 10_000) -> list:

@@ -1,0 +1,81 @@
+"""Token samplers for the decode engine — and where they run.
+
+``make_sampler(cfg)`` returns a pure function
+``sample(logits[B, V], seeds[B]) -> tokens[B]`` built from jnp ops, so the
+same math can run
+
+  * UNFUSED (O0/O1): the jitted model step returns full-vocab logits, and
+    the sampler runs as a second, separate dispatch — the naive two-kernel
+    path, with the (B, 1, V) logits materialized between them; or
+  * IN-GRAPH (O2+, the customized-pipelining step): the sampler is fused
+    into the jitted decode step, so only the (B,) sampled token ids ever
+    leave the graph.
+
+Greedy sampling is deterministic, so fused and unfused paths emit
+bit-identical tokens — the property the ladder tests pin.  Stochastic
+kinds (temperature / top-k) derive one fold-in seed per (request,
+emission-index) on the host, making them reproducible per request
+regardless of batch composition or slot placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("greedy", "temperature", "top_k")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    kind: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0               # 0 => full vocab
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown sampler {self.kind!r}; "
+                             f"choices: {KINDS}")
+
+    @property
+    def stochastic(self) -> bool:
+        return self.kind != "greedy"
+
+    def request_seed(self, rid: int, n_emitted: int) -> int:
+        """Stable per-(request, emission) seed, independent of slot/batch."""
+        h = (self.seed * 1_000_003 + rid * 7_919 + n_emitted) & 0x7FFFFFFF
+        return h
+
+
+def make_sampler(cfg: SamplerConfig):
+    """Returns ``sample(logits[B, V], seeds[B]) -> tokens[B]`` (int32)."""
+
+    if cfg.kind == "greedy":
+        # Not jnp.argmax: XLA CPU lowers argmax to a slow variadic reduce
+        # (~2.5x the two-pass form at 32k vocab).  max + min-index-of-max
+        # is vectorizable and has identical first-max semantics (and
+        # matches np.argmax on the host path bit for bit).
+        def sample(logits, seeds):
+            del seeds
+            m = jnp.max(logits, axis=-1, keepdims=True)
+            idx = jnp.where(logits == m,
+                            jnp.arange(logits.shape[-1], dtype=jnp.int32),
+                            logits.shape[-1])
+            return jnp.min(idx, axis=-1).astype(jnp.int32)
+        return sample
+
+    temp = max(cfg.temperature, 1e-6)
+    top_k = cfg.top_k
+
+    def sample_row(logits, seed):
+        key = jax.random.PRNGKey(seed)
+        scaled = logits.astype(jnp.float32) / temp
+        if top_k and top_k > 0:
+            kth = jax.lax.top_k(scaled, top_k)[0][..., -1]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+    return jax.vmap(sample_row)

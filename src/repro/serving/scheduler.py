@@ -1,0 +1,205 @@
+"""Admission + slot bookkeeping, split out of the decode engine.
+
+The scheduler owns the request queue, the fixed pool of B slots, and the
+per-slot position arithmetic.  Two admission policies:
+
+  * ``fcfs`` — first come, first served (the classic continuous-batching
+    default; fair, latency-predictable).
+  * ``spf``  — shortest-prompt-first: admit the queued request with the
+    fewest prompt tokens, so short requests are not convoyed behind long
+    prefills (SJF applied to the prefill phase; throughput-friendly under
+    mixed lengths).
+
+Request validation happens at ``submit`` time, not mid-flight: an
+oversized request raises ``ValueError`` immediately instead of asserting
+deep inside the engine tick, and a degenerate ``max_new_tokens <= 0``
+request is retired on the spot (empty completion) rather than ever
+occupying a slot — the naive path admitted it and, depending on prompt
+length vs ``max_seq``, could pin the slot forever.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Optional
+
+POLICIES = ("fcfs", "spf")
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    rid: int = -1
+    # filled by the engine:
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def n_prompt(self):
+        return len(self.prompt)
+
+
+@dataclasses.dataclass
+class Slot:
+    req: Optional[Request] = None
+    pos: int = 0              # tokens consumed (prompt + generated)
+
+    @property
+    def active(self):
+        return self.req is not None and not self.req.done
+
+    def next_token(self) -> int:
+        r = self.req
+        if self.pos < r.n_prompt:
+            return r.prompt[self.pos]
+        return r.generated[-1]
+
+    @property
+    def prefilling(self) -> bool:
+        # the step that consumes prompt token n_prompt-1 emits the first
+        # generated token, so "prefilling" = pos < n_prompt - 1
+        return self.pos < self.req.n_prompt - 1
+
+
+class Scheduler:
+    """Queue + slot pool.  The engine asks it who to admit, feeds it the
+    sampled token per slot per tick, and it decides retirement."""
+
+    def __init__(self, n_slots: int, max_seq: int, *, policy: str = "fcfs"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; choices: {POLICIES}")
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.policy = policy
+        self.slots = [Slot() for _ in range(n_slots)]
+        self.queue: collections.deque = collections.deque()
+        self.finished: list = []
+        self._rid = itertools.count()
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        req.rid = next(self._rid)
+        if req.n_prompt < 1:
+            raise ValueError(f"req {req.rid}: empty prompt")
+        if req.n_prompt + max(req.max_new_tokens, 0) > self.max_seq:
+            raise ValueError(
+                f"req {req.rid}: prompt ({req.n_prompt}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds engine max_seq "
+                f"({self.max_seq})")
+        if req.max_new_tokens <= 0:
+            # Degenerate request: nothing to generate.  Retire immediately
+            # with an empty completion instead of occupying a slot (the old
+            # engine admitted it and could pin the slot forever when the
+            # prompt ended at the max_seq boundary).
+            req.done = True
+            self.finished.append(req)
+            return req.rid
+        self.queue.append(req)
+        return req.rid
+
+    def _pop(self) -> Request:
+        if self.policy == "spf":
+            best = min(range(len(self.queue)),
+                       key=lambda i: self.queue[i].n_prompt)
+            self.queue.rotate(-best)
+            req = self.queue.popleft()
+            self.queue.rotate(best)
+            return req
+        return self.queue.popleft()
+
+    # -- per-tick phases ------------------------------------------------------
+    def admit(self) -> list:
+        """Fill free slots from the queue; returns newly occupied indices."""
+        admitted = []
+        for i, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            self.slots[i] = Slot(req=self._pop(), pos=0)
+            admitted.append(i)
+        return admitted
+
+    @property
+    def active_indices(self) -> list:
+        return [i for i, s in enumerate(self.slots) if s.active]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s.active for s in self.slots)
+
+    def advance(self, i: int, token: int):
+        """Post-step bookkeeping for slot ``i`` given its sampled ``token``.
+
+        Returns the retired ``Request`` if the slot finished, else None.
+        """
+        s = self.slots[i]
+        emitted = not s.prefilling
+        s.pos += 1
+        if not emitted:
+            return None
+        r = s.req
+        r.generated.append(int(token))
+        hit_eos = r.eos_id is not None and int(token) == r.eos_id
+        if (len(r.generated) >= r.max_new_tokens or hit_eos
+                or s.pos + 1 >= self.max_seq):
+            r.done = True
+            self.finished.append(r)
+            self.slots[i] = Slot()
+            return r
+        return None
+
+    # -- overlapped (double-buffered) tick protocol ---------------------------
+    # The engine's O4+ path splits ``advance`` in two so the host can do
+    # slot bookkeeping while the device computes: retirements decided by
+    # token COUNT or the max_seq boundary are known the moment the step is
+    # dispatched — only an eos hit needs the actual token.  ``tick_advance``
+    # runs at dispatch time, frees the count-retired slots (so the
+    # overlapped admission can refill them under the running step), and
+    # ``finalize`` completes the bookkeeping when the tokens arrive.
+
+    def tick_advance(self, active: list) -> list:
+        """Advance positions for this tick; plan count/boundary retirements.
+
+        Returns emissions ``[(slot_index, request, planned_retire)]`` — the
+        slots whose sampled token must be recorded at ``finalize``.
+        """
+        out = []
+        for i in active:
+            s = self.slots[i]
+            emitted = not s.prefilling
+            s.pos += 1
+            if not emitted:
+                continue
+            r = s.req
+            # Emission count from position arithmetic, NOT len(generated):
+            # with the pipelined engine, finalize (which appends to
+            # generated) trails the dispatch frontier, so the list is
+            # stale here.  After the increment, this tick's emission is
+            # number ``pos - n_prompt + 1``.
+            n_emitted = s.pos - r.n_prompt + 1
+            planned = (n_emitted >= r.max_new_tokens
+                       or s.pos + 1 >= self.max_seq)
+            if planned:
+                self.slots[i] = Slot()      # free under the running step
+            out.append((i, r, planned))
+        return out
+
+    def finalize(self, emissions: list, toks):
+        """Record the device's tokens for ``tick_advance``'s emissions;
+        complete planned retirements and surprise eos stops."""
+        for i, r, planned in emissions:
+            if r.done:
+                # stale emission: the request hit eos in an earlier tick
+                # but the pipelined engine had already dispatched this
+                # one — its token is discarded, not recorded.
+                continue
+            tok = int(toks[i])
+            r.generated.append(tok)
+            hit_eos = r.eos_id is not None and tok == r.eos_id
+            if planned or hit_eos:
+                r.done = True
+                self.finished.append(r)
+                if not planned and self.slots[i].req is r:
+                    self.slots[i] = Slot()

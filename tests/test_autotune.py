@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro.autotune import (CostTwinBackend, KernelModelBackend,
-                            LM_STEP_OVERRIDES, autotune, read_trajectory,
-                            render_rounds, render_summary, roofline_terms,
-                            write_trajectory)
+                            LM_STEP_OVERRIDES, ServingBackend, autotune,
+                            read_trajectory, render_rounds, render_summary,
+                            roofline_terms, write_trajectory)
 from repro.autotune.trajectory import trajectory_path
 from repro.core import costmodel
 from repro.core.guideline import recommend
@@ -110,6 +110,102 @@ def test_autotuned_level_is_output_equivalent(name, rng):
         np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-5)
     else:
         np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# Resource feedback (paper Table 6): shrink, re-measure, keep walking
+# ---------------------------------------------------------------------------
+
+def test_resource_conflict_shrinks_and_walk_continues():
+    """A configuration that over-subscribes the BRAM fabric must not stop
+    the walk: the backend shrinks cache/PE/width, re-measures, and still
+    reaches O5 (the paper's §5.2 PEs-vs-width trade, automated)."""
+    prof = costmodel.MACHSUITE_PROFILES["aes"]
+    hw = costmodel.FPGA_2012
+    # the paper's own infeasible point: 128 PEs x 512-bit x 3 buffers
+    assert costmodel.bram_demand(
+        prof, OptLevel.O5, hw, cache_bytes=64 * 1024, pe=128,
+        word_bits=512) > hw.bram_blocks
+
+    res = autotune(KernelModelBackend(prof, cache_bytes=64 * 1024, pe=128))
+    assert res.final_label == "O5" and not res.rejected
+    fit = res.final.measurement.meta["resource"]
+    assert fit["shrunk"] is True
+    assert fit["demand_blocks"] <= fit["budget_blocks"]
+    # the requested (infeasible) config is recorded next to the fit
+    assert fit["requested"]["demand_blocks"] > hw.bram_blocks
+    # feasible rungs below O5 are untouched
+    for r in res.rounds[:-1]:
+        assert r.measurement.meta["resource"]["shrunk"] is False, r.label
+
+
+def test_resource_fit_prefers_fastest_feasible():
+    """The fit re-measures candidates rather than blindly halving: for AES
+    (width-bound conflict) narrowing the scratchpad word keeps all 128 PEs
+    instead of folding PEs, because that candidate measures faster."""
+    prof = costmodel.MACHSUITE_PROFILES["aes"]
+    fit = costmodel.fit_resources(prof, OptLevel.O5,
+                                  cache_bytes=64 * 1024, pe=128)
+    assert fit["shrunk"]
+    assert fit["pe"] == 128                  # PEs kept
+    assert fit["word_bits"] < 512            # width traded instead
+    t_fit = costmodel.kernel_time(
+        prof, OptLevel.O5, cache_bytes=fit["cache_bytes"], pe=fit["pe"],
+        word_bits=fit["word_bits"])["system_s"]
+    # strictly better than the naive halve-the-PEs resolution
+    t_fold = costmodel.kernel_time(
+        prof, OptLevel.O5, cache_bytes=64 * 1024, pe=64)["system_s"]
+    assert t_fit < t_fold
+
+
+def test_feasible_config_never_shrunk():
+    prof = costmodel.MACHSUITE_PROFILES["gemm"]
+    fit = costmodel.fit_resources(prof, OptLevel.O5,
+                                  cache_bytes=64 * 1024, pe=128)
+    assert fit["shrunk"] is False
+    assert fit["cache_bytes"] == 64 * 1024 and fit["pe"] == 128
+    # below O1 there are no on-chip buffers at all
+    assert costmodel.bram_demand(prof, OptLevel.O0, costmodel.FPGA_2012,
+                                 cache_bytes=64 * 1024, pe=128,
+                                 word_bits=512) == 0
+
+
+# ---------------------------------------------------------------------------
+# ServingBackend: ladder state machine (no jax work — measure is exercised
+# by the slow-tier walk below and by benchmarks/serving_ladder.py)
+# ---------------------------------------------------------------------------
+
+def test_serving_backend_ladder_state_machine():
+    b = ServingBackend("qwen3-8b", repeats=1, n_requests=2)
+    s = b.initial_state()
+    assert b.name == "serve/qwen3-8b"
+    assert b.describe(s) == "O0" and b.applied(s) == set()
+    assert b.candidate_steps(s) == [Step.DATA_CACHING]
+    s = b.apply(s, Step.DATA_CACHING)
+    assert s == OptLevel.O1
+    assert b.candidate_steps(OptLevel.O5) == []
+
+
+@pytest.mark.slow
+def test_serving_ladder_walk_identical_tokens():
+    """The full measured O0->O5 serving walk: six rounds, every level's
+    generations bit-identical under greedy sampling."""
+    b = ServingBackend("qwen3-8b", batch_size=2, max_seq=24, n_requests=4,
+                       max_new=4, repeats=1)
+    res = autotune(b, ladder=True)
+    assert res.mode == "ladder" and not res.rejected
+    assert [r.label for r in res.rounds] == [f"O{i}" for i in range(6)]
+    gens = [r.measurement.meta["generated"] for r in res.rounds]
+    assert all(g == gens[0] for g in gens)
+    assert all(r.measurement.total_s > 0 for r in res.rounds)
+
+
+def test_ladder_mode_on_kernel_backend_measures_every_rung():
+    res = autotune(KernelModelBackend(costmodel.MACHSUITE_PROFILES["gemm"]),
+                   ladder=True)
+    assert res.mode == "ladder"
+    assert [r.label for r in res.rounds] == [f"O{i}" for i in range(6)]
+    assert res.final.stop
 
 
 # ---------------------------------------------------------------------------

@@ -214,3 +214,33 @@ def test_mini_dryrun_8dev():
         print("OK", rf.dominant, sorted(rf.collective_breakdown))
     """)
     assert "OK" in out
+
+
+def test_serving_pe_sharding_matches_single_device():
+    """O3's PE duplication for serving: with pe>1 and multiple devices the
+    engine shards the batch axis of cache+step; tokens must match the
+    unsharded O2 engine bit for bit."""
+    out = run_py("""
+        import jax
+        from repro.configs import get_smoke
+        from repro.core.optlevel import BestEffortConfig, OptLevel
+        from repro.models import get_model
+        from repro.serving import DecodeEngine, Request
+
+        assert jax.device_count() == 2
+        cfg = get_smoke("qwen3-8b")
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        gens = {}
+        for lvl in (OptLevel.O2, OptLevel.O3, OptLevel.O5):
+            eng = DecodeEngine(model, params, batch_size=4, max_seq=32,
+                               config=BestEffortConfig(level=lvl, pe=2))
+            sharded = eng._shardings is not None
+            assert sharded == (lvl >= OptLevel.O3), (lvl, sharded)
+            for p in ([5, 6, 7], [9], [3, 1, 4, 1], [2, 2], [8, 8, 8]):
+                eng.submit(Request(prompt=list(p), max_new_tokens=4))
+            gens[int(lvl)] = {r.rid: r.generated for r in eng.run()}
+        assert gens[2] == gens[3] == gens[5]
+        print("OK sharded serving identical")
+    """, n_devices=2)
+    assert "OK" in out

@@ -1,21 +1,33 @@
-"""Serving engine: continuous batching, slot hygiene, retirement."""
+"""Serving engine: continuous batching, slot hygiene, retirement — and the
+O0..O5 ladder contract: every level generates bit-identical tokens under
+greedy sampling (the serving analog of MachSuite's output-equivalence
+matrix)."""
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke
+from repro.core.optlevel import ALL_LEVELS, BestEffortConfig, OptLevel
 from repro.models import get_model
-from repro.serving import DecodeEngine, Request
+from repro.serving import (DecodeEngine, Request, SamplerConfig, Scheduler)
 
 RNG = jax.random.PRNGKey(0)
 
+_MODELS = {}
 
-def _engine(arch="qwen3-8b", B=3, max_seq=32):
-    cfg = get_smoke(arch)
-    model = get_model(cfg)
-    params = model.init(RNG)
-    return DecodeEngine(model, params, batch_size=B, max_seq=max_seq), cfg
+
+def _model(arch="qwen3-8b"):
+    if arch not in _MODELS:
+        cfg = get_smoke(arch)
+        model = get_model(cfg)
+        _MODELS[arch] = (cfg, model, model.init(RNG))
+    return _MODELS[arch]
+
+
+def _engine(arch="qwen3-8b", B=3, max_seq=32, **kw):
+    cfg, model, params = _model(arch)
+    return DecodeEngine(model, params, batch_size=B, max_seq=max_seq,
+                        **kw), cfg
 
 
 def test_all_requests_finish_exact_lengths():
@@ -67,8 +79,58 @@ def test_batched_equals_solo():
     assert solo == batched
 
 
-def test_eos_stops_early():
-    eng, cfg = _engine()
+# ---------------------------------------------------------------------------
+# The ladder: every OptLevel computes the same function (greedy sampling)
+# ---------------------------------------------------------------------------
+
+_WORKLOAD = [([5, 6, 7], 4), ([9], 6), ([3, 1, 4, 1], 3), ([2, 2], 5),
+             ([8, 8, 8, 8, 8], 2), ([4, 2], 4)]
+_LADDER_REF = {}
+
+
+def _run_ladder_workload(level, arch="qwen3-8b"):
+    eng, _ = _engine(arch, B=3, max_seq=32,
+                     config=BestEffortConfig(level=level))
+    rids = [eng.submit(Request(prompt=list(p), max_new_tokens=n))
+            for p, n in _WORKLOAD]
+    fin = {r.rid: r.generated for r in eng.run()}
+    return [fin[rid] for rid in rids]
+
+
+@pytest.mark.parametrize("level", ALL_LEVELS, ids=lambda l: f"O{int(l)}")
+def test_identical_tokens_at_every_level(level):
+    """Greedy generations are bit-identical at every rung: the ladder only
+    changes *how* the engine runs, never *what* it computes."""
+    gen = _run_ladder_workload(level)
+    if "qwen3-8b" not in _LADDER_REF:
+        _LADDER_REF["qwen3-8b"] = _run_ladder_workload(OptLevel.O5)
+    ref = _LADDER_REF["qwen3-8b"]
+    assert gen == ref, f"O{int(level)} diverged from O5"
+    assert [len(g) for g in gen] == [n for _, n in _WORKLOAD]
+
+
+def test_mid_flight_admission_at_o5():
+    """Requests submitted while others decode join without disturbing the
+    in-flight generations (continuous batching at the top rung)."""
+    eng, _ = _engine(B=2, max_seq=32,
+                     config=BestEffortConfig(level=OptLevel.O5))
+    r0 = eng.submit(Request(prompt=[5, 6, 7], max_new_tokens=6))
+    for _ in range(3):
+        eng.step()
+    r1 = eng.submit(Request(prompt=[9, 9], max_new_tokens=4))
+    fin = {r.rid: r.generated for r in eng.run()}
+    assert set(fin) == {r0, r1}
+    assert len(fin[r0]) == 6 and len(fin[r1]) == 4
+
+    # in-flight tokens match an undisturbed run of the same request
+    solo, _ = _engine(B=2, max_seq=32,
+                      config=BestEffortConfig(level=OptLevel.O5))
+    solo.submit(Request(prompt=[5, 6, 7], max_new_tokens=6))
+    assert solo.run()[0].generated == fin[r0]
+
+
+def test_eos_stops_early_at_o5():
+    eng, cfg = _engine(config=BestEffortConfig(level=OptLevel.O5))
     # run once to find what token gets generated, then use it as EOS
     eng.submit(Request(prompt=[3, 5], max_new_tokens=6))
     toks = eng.run()[0].generated
@@ -79,8 +141,91 @@ def test_eos_stops_early():
     assert len(out.generated) <= 2
 
 
-def test_request_too_long_rejected():
+# ---------------------------------------------------------------------------
+# Admission validation + retirement edges (regressions)
+# ---------------------------------------------------------------------------
+
+def test_request_too_long_rejected_at_submit():
     eng, _ = _engine(B=1, max_seq=8)
-    eng.submit(Request(prompt=[1] * 6, max_new_tokens=6))
-    with pytest.raises(AssertionError):
-        eng.run()
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(prompt=[1] * 6, max_new_tokens=6))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(prompt=[], max_new_tokens=2))
+
+
+def test_zero_max_new_tokens_retires_immediately():
+    """Regression: a max_new_tokens=0 request used to occupy a slot (and
+    generate a token it never asked for); now it retires at submit with an
+    empty completion and never blocks other traffic."""
+    eng, _ = _engine(B=1, max_seq=8)
+    rid0 = eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=0))
+    assert eng.finished and eng.finished[0].rid == rid0
+    assert eng.finished[0].generated == [] and eng.finished[0].done
+    # a prompt filling the engine to the brim with nothing to generate
+    rid1 = eng.submit(Request(prompt=[1] * 8, max_new_tokens=0))
+    rid2 = eng.submit(Request(prompt=[4, 5], max_new_tokens=3))
+    fin = {r.rid: r for r in eng.run()}
+    assert set(fin) == {rid0, rid1, rid2}
+    assert fin[rid1].generated == []
+    assert len(fin[rid2].generated) == 3          # the slot was never pinned
+    assert eng.n_steps == 4                       # only rid2's ticks
+
+
+def test_prompt_ending_at_max_seq_boundary_retires():
+    """A request whose prompt + budget lands exactly on max_seq finishes
+    (possibly short) and frees its slot."""
+    eng, _ = _engine(B=1, max_seq=8)
+    rid = eng.submit(Request(prompt=[1] * 6, max_new_tokens=2))
+    fin = eng.run()
+    assert fin[0].rid == rid and 1 <= len(fin[0].generated) <= 2
+    assert not any(s.active for s in eng.slots)
+    # engine still serves after the boundary case
+    eng.submit(Request(prompt=[2], max_new_tokens=2))
+    assert len(eng.run()) == 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policies + samplers
+# ---------------------------------------------------------------------------
+
+def test_spf_policy_admits_shortest_prompt_first():
+    s = Scheduler(1, 32, policy="spf")
+    s.submit(Request(prompt=[1] * 5, max_new_tokens=1))
+    s.submit(Request(prompt=[1] * 2, max_new_tokens=1))
+    s.submit(Request(prompt=[1] * 9, max_new_tokens=1))
+    s.admit()
+    assert s.slots[0].req.n_prompt == 2
+    assert [r.n_prompt for r in s.queue] == [5, 9]   # order preserved
+    with pytest.raises(ValueError, match="policy"):
+        Scheduler(1, 32, policy="lifo")
+
+
+def test_spf_end_to_end_matches_fcfs_outputs():
+    eng, _ = _engine(B=2, max_seq=24, policy="spf")
+    eng.submit(Request(prompt=[5, 6, 7], max_new_tokens=4))
+    eng.submit(Request(prompt=[9], max_new_tokens=3))
+    eng.submit(Request(prompt=[3, 1, 4, 1], max_new_tokens=2))
+    fin = {tuple(r.prompt): r.generated for r in eng.run()}
+    ref_eng, _ = _engine(B=2, max_seq=24, policy="fcfs")
+    for p in fin:
+        ref_eng.submit(Request(prompt=list(p), max_new_tokens=10))
+    ref = {tuple(r.prompt): r.generated for r in ref_eng.run()}
+    for p, g in fin.items():
+        assert ref[p][: len(g)] == g, p   # same greedy continuations
+
+
+def test_stochastic_samplers_deterministic_per_seed():
+    def gen(seed, kind="temperature", **kw):
+        eng, _ = _engine(B=2, max_seq=24, sampler=SamplerConfig(
+            kind=kind, seed=seed, **kw))
+        eng.submit(Request(prompt=[5, 6, 7], max_new_tokens=5))
+        return eng.run()[0].generated
+
+    a, b = gen(0, temperature=1.3), gen(0, temperature=1.3)
+    assert a == b                         # same seed -> same tokens
+    assert gen(1, temperature=1.3) != a   # different seed -> different
+    cfg = _model()[0]
+    topk = gen(0, kind="top_k", top_k=4, temperature=1.0)
+    assert all(0 <= t < cfg.vocab for t in topk)
+    with pytest.raises(ValueError, match="unknown sampler"):
+        SamplerConfig(kind="beam")
