@@ -1,9 +1,13 @@
 """The serving ladder — the paper's Table 1 analog for the decode engine.
 
-Measures ``repro.serving.DecodeEngine`` at every OptLevel O0..O5 on one
+Measures ``repro.serving.DecodeEngine`` at every OptLevel O0..O6 on one
 fixed continuous-batching workload (smoke config) and renders the
 per-level throughput/latency table to ``benchmarks/SERVING_LADDER.md``,
-plus a JSONL trajectory compatible with the autotune tooling.
+plus a JSONL trajectory compatible with the autotune tooling.  The O6
+rung (paged KV blocks) runs at equal worst-case capacity here so the
+table stays a pure speed comparison; its capacity win — more admitted
+concurrency at equal memory on long-tail mixes — is measured separately
+by :func:`capacity_demo` and rendered under the same table.
 
   PYTHONPATH=src python -m benchmarks.serving_ladder
 
@@ -37,6 +41,7 @@ STAGES = {
     3: "+ PE duplication: batch-axis sharding across devices",
     4: "+ double buffering: bookkeeping runs under the in-flight step",
     5: "+ scratchpad reorg: packed one-call zeroing of admitted slots",
+    6: "+ paged scratchpad: KV block pool + per-request block tables",
 }
 
 MD_PATH = os.path.join(os.path.dirname(__file__), "SERVING_LADDER.md")
@@ -73,6 +78,7 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
 
     generated = {}        # level -> token lists (must agree per level too)
     engines = []          # [(level, engine)]
+    kv_capacity = {}      # level -> persistent cache capacity (tokens)
 
     def add_instance(lvl):
         eng = DecodeEngine(
@@ -81,6 +87,7 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         _, gen = run(eng)                          # warmup: jit compiles
         assert generated.setdefault(int(lvl), gen) == gen, (
             f"level {lvl}: instances disagree")
+        kv_capacity[int(lvl)] = eng.cache_mgr.capacity_tokens
         engines.append((lvl, eng))
         return eng
 
@@ -141,7 +148,7 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         # A real regression (beyond noise) is left standing and renders
         # as non-monotone — the harness never papers over mechanism.
         noise_ties.clear()
-        for k in range(1, 6):
+        for k in range(1, len(ALL_LEVELS)):
             if est[k] <= est[k - 1]:
                 continue
             n = min(len(round_best[k]), len(round_best[k - 1]))
@@ -158,13 +165,17 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
 
     best = floors()
     extra = 0
+    # Inversion escalation covers the MECHANISM rungs O0..O5 only: an
+    # inversion there after the initial rounds is instance luck and more
+    # instances converge it away.  O5->O6 is excluded — the paged rung
+    # pays a real gather/scatter toll at equal capacity, so "slower than
+    # O5" is the expected reading, not luck, and chasing it would burn
+    # every extra round (and ~2 fresh jit compiles per round) for
+    # nothing; the rendered table explains the regression instead.
+    mono_top = min(5, len(ALL_LEVELS) - 1)
     while extra < max_extra_rounds and any(
-            best[k] > best[k - 1] for k in range(1, 6)):
-        # an inversion after the initial rounds is instance luck, not
-        # mechanism: add one fresh engine for each level in an inverted
-        # pair (the floor estimate over more instances converges on the
-        # true floor), then keep measuring everything.
-        for k in range(1, 6):
+            best[k] > best[k - 1] for k in range(1, mono_top + 1)):
+        for k in range(1, mono_top + 1):
             if best[k] > best[k - 1]:
                 add_instance(ALL_LEVELS[k])
                 add_instance(ALL_LEVELS[k - 1])
@@ -189,11 +200,95 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
             "identical": generated[k] == generated[0],
             "noise_tie_with_prev": (k - 1, k) in noise_ties,
             "extra_rounds": extra,
+            "kv_capacity": kv_capacity[k],
         })
     return rows
 
 
-def render_md(rows, arch: str) -> str:
+def capacity_demo(arch: str = "qwen3-8b", *, memory_slots: int = 4,
+                  max_seq: int = 48, slots_paged: int = 8,
+                  block_size: int = 8, n_requests: int = 24,
+                  max_new: int = 6, seed: int = 0) -> dict:
+    """The paged rung's actual win, measured: at EQUAL KV memory
+    (``memory_slots x max_seq`` token positions), the contiguous cache
+    admits at most ``memory_slots`` concurrent requests no matter how
+    short they are, while the paged pool admits as many as their actual
+    reservations pack — more concurrency (and fewer ticks) on long-tail
+    prompt mixes.  Greedy tokens must stay identical between the two
+    engines (slot placement and batch composition never change *what* is
+    computed).
+
+    Timing follows the ladder harness's rules, not a hand-rolled
+    stopwatch: jit compiles (the O6 engine always builds its own step —
+    pool geometry is part of the program) and the deterministic run shape
+    (peak concurrency, ticks) are captured on an untimed warmup pass, and
+    the tok/s column is the best of interleaved re-runs on the
+    already-warm engines, so neither side's number carries compile time
+    or a one-sided quiet period."""
+    import jax
+
+    from repro.autotune.measurement import (run_serving_workload,
+                                            serving_smoke_config,
+                                            serving_workload)
+    from repro.core.optlevel import BestEffortConfig, OptLevel
+    from repro.models import get_model
+    from repro.serving import DecodeEngine, Request
+
+    rounds = 3
+    cfg = serving_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    workload = serving_workload(cfg.vocab, max_seq=max_seq,
+                                n_requests=n_requests, max_new=max_new,
+                                seed=seed)
+    pool_blocks = memory_slots * max_seq // block_size   # same token memory
+
+    def warmup_tracked(eng):
+        """Untimed first pass: compiles, and records the run's
+        deterministic shape (peak concurrency, ticks, generations)."""
+        rids = [eng.submit(Request(prompt=list(p), max_new_tokens=n))
+                for p, n in workload]
+        peak = 0
+        for _ in range(10_000):
+            stepped = eng.step()
+            peak = max(peak, sum(s.active for s in eng.slots))
+            if not stepped and not eng.queue:
+                break
+        by_rid = {r.rid: r.generated for r in eng.finished}
+        gen = [by_rid[rid] for rid in rids]
+        return {"peak_concurrency": peak, "ticks": eng.n_steps,
+                "gen": gen, "tokens": sum(len(g) for g in gen)}
+
+    eng_c = DecodeEngine(
+        model, params, batch_size=memory_slots, max_seq=max_seq,
+        config=BestEffortConfig(level=OptLevel.O5))
+    eng_p = DecodeEngine(
+        model, params, batch_size=slots_paged, max_seq=max_seq,
+        config=BestEffortConfig(level=OptLevel.O6,
+                                kv_block_size=block_size,
+                                kv_pool_blocks=pool_blocks))
+    contig, paged = warmup_tracked(eng_c), warmup_tracked(eng_p)
+    assert paged["gen"] == contig["gen"], "capacity demo changed tokens"
+
+    contig["wall_s"] = paged["wall_s"] = float("inf")
+    for _ in range(rounds):                       # interleaved best-of-K
+        for rec, eng in ((contig, eng_c), (paged, eng_p)):
+            wall, _, gen, _ = run_serving_workload(eng, workload)
+            assert gen == rec["gen"], "capacity demo nondeterminism"
+            rec["wall_s"] = min(rec["wall_s"], wall)
+    return {
+        "arch": arch,
+        "kv_memory_tokens": memory_slots * max_seq,
+        "block_size": block_size,
+        "pool_blocks": pool_blocks,
+        "n_requests": n_requests,
+        "contiguous": {k: v for k, v in contig.items() if k != "gen"},
+        "paged": {k: v for k, v in paged.items() if k != "gen"},
+        "identical": True,
+    }
+
+
+def render_md(rows, arch: str, capacity: dict = None) -> str:
     lines = [
         "# The serving ladder (paper Table 1 analog for the decode engine)",
         "",
@@ -207,27 +302,63 @@ def render_md(rows, arch: str) -> str:
         "output-equivalence matrix).",
         "",
         "| level | serving stage (paper step) | tok/s | tick (ms) | "
-        "wall (s) | speedup vs O0 | identical tokens |",
-        "|---|---|---|---|---|---|---|",
+        "wall (s) | speedup vs O0 | KV capacity (tok) | identical tokens |",
+        "|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
         lines.append(
             f"| {r['label']} | {r['stage']} | {r['tok_per_s']:.0f} "
             f"| {r['tick_ms']:.3f} | {r['wall_s']:.4f} "
             f"| {r['speedup_vs_o0']:.2f}x "
+            f"| {r.get('kv_capacity', '-')} "
             f"| {'yes' if r['identical'] else 'NO'} |")
+    # The monotonicity contract covers the mechanism rungs O0..O5 only —
+    # the O6 capacity rung may legitimately pay a gather/scatter toll
+    # (the note below explains it), matching the harness's mono_top.
+    mtop = min(5, rows[-1]["level"])
     mono = all(rows[i]["tok_per_s"] >= rows[i - 1]["tok_per_s"]
-               for i in range(1, len(rows)))
+               for i in range(1, mtop + 1))
     ties = [f"O{r['level'] - 1}=O{r['level']}" for r in rows
             if r.get("noise_tie_with_prev")]
     lines += [
         "",
-        f"tok/s monotone non-decreasing O0->O5: {'yes' if mono else 'NO'}; "
+        f"tok/s monotone non-decreasing O0->O{mtop}: "
+        f"{'yes' if mono else 'NO'}; "
         f"tokens bit-identical across levels: "
         f"{'yes' if all(r['identical'] for r in rows) else 'NO'}."
         + (f"  Ties within measurement noise (paired-delta test): "
            f"{', '.join(ties)}." if ties else ""),
     ]
+    if rows[-1]["level"] >= 6:
+        lines += [
+            "",
+            "O6 runs this speed table at EQUAL worst-case capacity"
+            " (auto-sized pool), so any delta vs O5 is the pure"
+            " gather/scatter toll of block indirection; the rung's win is"
+            " the capacity table below.",
+        ]
+    if capacity:
+        c, p = capacity["contiguous"], capacity["paged"]
+        lines += [
+            "",
+            "## Capacity at equal KV memory (the O6 rung's actual win)",
+            "",
+            f"Same long-tail workload ({capacity['n_requests']} requests), "
+            f"same KV memory ({capacity['kv_memory_tokens']} token "
+            f"positions = {capacity['pool_blocks']} blocks of "
+            f"{capacity['block_size']}):",
+            "",
+            "| cache | peak concurrent requests | ticks to drain | tok/s |",
+            "|---|---|---|---|",
+            f"| contiguous (O5, B x max_seq slots) "
+            f"| {c['peak_concurrency']} | {c['ticks']} "
+            f"| {c['tokens'] / c['wall_s']:.0f} |",
+            f"| paged (O6, block tables) | {p['peak_concurrency']} "
+            f"| {p['ticks']} | {p['tokens'] / p['wall_s']:.0f} |",
+            "",
+            "Greedy tokens identical between the two engines: "
+            f"{'yes' if capacity['identical'] else 'NO'}.",
+        ]
     return "\n".join(lines)
 
 
@@ -246,15 +377,20 @@ def write_trajectory(rows, arch: str, out_dir: str = None) -> str:
 def main(arch: str = "qwen3-8b", write_md: bool = True, **kw):
     t0 = time.time()
     rows = measure_ladder(arch, **kw)
+    capacity = capacity_demo(arch)
     if write_md:
         with open(MD_PATH, "w") as f:
-            f.write(render_md(rows, arch) + "\n")
+            f.write(render_md(rows, arch, capacity) + "\n")
         write_trajectory(rows, arch)
     out = [(f"serving_ladder_O{r['level']}", r["wall_s"] * 1e6,
             f"{r['tok_per_s']:.0f}tok/s {r['speedup_vs_o0']:.2f}x "
             f"identical={r['identical']}") for r in rows]
+    cc = capacity["contiguous"]["peak_concurrency"]
+    cp = capacity["paged"]["peak_concurrency"]
+    out.append(("serving_capacity_paged_vs_contig", cp * 1e6 / max(cc, 1),
+                f"peak concurrency {cp} vs {cc} at equal KV memory"))
     out.append(("serving_ladder_wall", (time.time() - t0) * 1e6,
-                f"6 levels x best-of-interleaved ({arch})"))
+                f"{len(rows)} levels x best-of-interleaved ({arch})"))
     return out
 
 

@@ -9,8 +9,8 @@ LM configs (lowered-HLO cost twin on the production mesh; compile-heavy):
 
   PYTHONPATH=src python -m repro.autotune --arch qwen3-8b --shape train_4k
 
-The serving engine itself (measured tokens/sec, smoke config, full O0->O5
-ladder walk):
+The serving engine itself (measured tokens/sec, smoke config, full O0->O6
+ladder walk — O6 is the paged KV-block rung):
 
   PYTHONPATH=src python -m repro.autotune --serve --arch qwen3-8b
 
@@ -52,9 +52,9 @@ def main(argv=None) -> int:
     target.add_argument("--arch", help="LM architecture (repro.configs)")
     ap.add_argument("--shape", help="LM shape cell (e.g. train_4k)")
     ap.add_argument("--serve", action="store_true",
-                    help="walk the serving engine itself O0->O5 on "
+                    help="walk the serving engine itself O0->O6 on "
                          "measured tokens/sec (requires --arch; smoke "
-                         "config)")
+                         "config; O6 = paged KV blocks)")
     ap.add_argument("--frontier", action="store_true",
                     help="AutoDSE-style mode: measure every remaining "
                          "candidate step per round, keep the best")
@@ -72,6 +72,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"))
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="O6 paged-cache block size in tokens")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="O6 pool size in blocks (0 = auto: equal "
+                         "worst-case capacity to the contiguous cache)")
     args = ap.parse_args(argv)
 
     if args.serve:
@@ -82,12 +87,16 @@ def main(argv=None) -> int:
         backend = ServingBackend(
             args.arch, batch_size=args.batch, max_seq=args.max_seq,
             n_requests=args.requests, max_new=args.max_new,
-            repeats=args.repeats, policy=args.policy)
+            repeats=args.repeats, policy=args.policy,
+            kv_block_size=args.kv_block,
+            kv_pool_blocks=args.kv_pool_blocks)
         result = _run_one(backend, args, ladder=True)
         levels = [r.measurement.meta for r in result.rounds]
         gens = [m["generated"] for m in levels]
         same = all(g == gens[0] for g in gens)
         print(f"generated tokens identical across levels: {same}")
+        caps = {m["level"]: m.get("kv_capacity") for m in levels}
+        print(f"decode-cache capacity (token positions) per level: {caps}")
         return 0 if same else 1
 
     if args.kernel:

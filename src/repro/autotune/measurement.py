@@ -32,7 +32,7 @@ import dataclasses
 
 from repro.core import costmodel
 from repro.core.hw import FPGA_2012, TPU_V5E, TpuSpec
-from repro.core.optlevel import STEP_ORDER, OptLevel, Step
+from repro.core.optlevel import LADDER, STEP_ORDER, OptLevel, Step
 
 
 @dataclasses.dataclass
@@ -129,7 +129,20 @@ class CumulativeLadderState:
     """State is an :class:`OptLevel`.  The ladder is cumulative, so
     "applying" a step means moving to the lowest level that includes it
     (exactly what the paper's iterations do: Iter #3 lands at O5 having
-    passed O4)."""
+    passed O4).
+
+    ``top_level`` bounds the walk to the steps that exist on this
+    surface: the paper's platforms stop at O5; the serving engine's
+    ladder continues to O6 (paged scratchpad).  ``step_universe`` is the
+    matching step set, handed to the guideline so it neither recommends a
+    rung the surface lacks nor stops before one it has.
+    """
+
+    top_level: OptLevel = OptLevel.O5
+
+    @property
+    def step_universe(self) -> tuple:
+        return LADDER[: int(self.top_level)]
 
     def initial_state(self) -> OptLevel:
         return OptLevel.O0
@@ -143,10 +156,12 @@ class CumulativeLadderState:
         # intervening step into one jump (O0 + scratchpad-reorg == O5) and
         # the frontier would trivially pick the whole ladder in one round.
         # Independent-knob backends (CostTwinBackend) offer the full set.
-        return [state.next_step] if state.next_step is not None else []
+        if state >= self.top_level:
+            return []
+        return [LADDER[int(state)]]
 
     def apply(self, state: OptLevel, step: Step) -> OptLevel:
-        return OptLevel(max(int(state), STEP_ORDER.index(step) + 1))
+        return OptLevel(max(int(state), LADDER.index(step) + 1))
 
     def describe(self, state: OptLevel) -> str:
         return f"O{int(state)}"
@@ -387,13 +402,20 @@ class ServingBackend(CumulativeLadderState):
     ``meta['generated']`` records every request's token ids so the ladder
     walk can assert bit-identical generations across levels under greedy
     sampling — the serving analog of MachSuite's O0..O5 output-equivalence
-    matrix.
+    matrix.  This surface's ladder extends past the paper's five to the
+    paged-scratchpad rung (``top_level = O6``); ``meta['kv_capacity']``
+    records each level's persistent decode-cache token capacity so the
+    walk shows the paged rung's actual win (capacity at equal memory, not
+    raw tok/s).
     """
+
+    top_level = OptLevel.O6
 
     def __init__(self, arch: str = "qwen3-8b", *, batch_size: int = 4,
                  max_seq: int = 48, n_requests: int = 12, max_new: int = 8,
                  repeats: int = 3, policy: str = "fcfs", pe: int = 8,
-                 vocab: int = 0, seed: int = 0):
+                 vocab: int = 0, seed: int = 0, kv_block_size: int = 16,
+                 kv_pool_blocks: int = 0):
         self.arch = arch
         self.batch_size = batch_size
         self.max_seq = max_seq
@@ -404,6 +426,8 @@ class ServingBackend(CumulativeLadderState):
         self.pe = pe
         self.vocab = vocab
         self.seed = seed
+        self.kv_block_size = kv_block_size
+        self.kv_pool_blocks = kv_pool_blocks
         self._model = None
         self._params = None
 
@@ -437,7 +461,9 @@ class ServingBackend(CumulativeLadderState):
         workload = self._workload()
         engine = DecodeEngine(
             model, params, batch_size=self.batch_size, max_seq=self.max_seq,
-            config=BestEffortConfig(level=state, pe=self.pe),
+            config=BestEffortConfig(level=state, pe=self.pe,
+                                    kv_block_size=self.kv_block_size,
+                                    kv_pool_blocks=self.kv_pool_blocks),
             policy=self.policy)
 
         # warmup: jit compiles here
@@ -450,6 +476,9 @@ class ServingBackend(CumulativeLadderState):
                 best_wall = wall
 
         tok_per_s = tokens / best_wall if best_wall > 0 else 0.0
+        # Persistent decode-cache capacity in token positions: contiguous
+        # rungs reserve B x max_seq; the paged rung holds pool_blocks x T.
+        kv_capacity = engine.cache_mgr.capacity_tokens
         return Measurement(
             target=self.name,
             label=self.describe(state),
@@ -466,6 +495,7 @@ class ServingBackend(CumulativeLadderState):
                 "batch_size": self.batch_size,
                 "requests": self.n_requests,
                 "policy": self.policy,
+                "kv_capacity": kv_capacity,
                 "generated": [[int(t) for t in g] for g in generated],
             },
         )

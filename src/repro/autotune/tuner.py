@@ -94,6 +94,10 @@ def _diagnose(backend, state, m: Measurement) -> Recommendation:
         collective_s=m.collective_s,
         offload_s=m.offload_s,
         baseline_s=m.baseline_s,
+        # Surfaces with a non-paper ladder (serving: O6 paged scratchpad)
+        # declare their step universe; everything else gets the paper's
+        # five and stops at O5 exactly as before.
+        steps=getattr(backend, "step_universe", None),
     )
 
 

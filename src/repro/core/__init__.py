@@ -31,6 +31,7 @@ from repro.core.hlo_stats import HloStats, parse_hlo, shape_bytes
 from repro.core.hw import FPGA_2012, TPU_V5E
 from repro.core.optlevel import (
     ALL_LEVELS,
+    LADDER,
     STEP_ORDER,
     BestEffortConfig,
     OptLevel,
@@ -40,7 +41,7 @@ from repro.core.refine import RefineRecord, refine_compiled, refine_modelled
 
 __all__ = [
     "ALL_LEVELS", "BestEffortConfig", "COMM_BOUND_THRESHOLD", "FPGA_2012",
-    "HloStats", "KernelProfile", "MACHSUITE_PROFILES", "OptLevel",
+    "HloStats", "KernelProfile", "LADDER", "MACHSUITE_PROFILES", "OptLevel",
     "Recommendation", "RefineRecord", "Roofline", "STEP_ORDER", "Step",
     "TPU_V5E", "comm_bound_filter", "extract_cost", "kernel_time",
     "paper_validation_table", "parse_hlo", "recommend", "refine_compiled",

@@ -271,8 +271,11 @@ def fit_resources(p: KernelProfile, level: OptLevel,
 def refinement_curve(
     p: KernelProfile, hw: FpgaSpec = FPGA_2012, **kw
 ) -> dict:
-    """Times at every level O0..O5 — one paper Fig. 12 bar group."""
-    return {int(lvl): kernel_time(p, lvl, hw, **kw) for lvl in OptLevel}
+    """Times at every level O0..O5 — one paper Fig. 12 bar group.  The
+    curve is paper-scoped: it stops at O5 (the serving-only O6 paged rung
+    has no FPGA analog and would render as a duplicate O5 bar)."""
+    return {int(lvl): kernel_time(p, lvl, hw, **kw)
+            for lvl in OptLevel if lvl <= OptLevel.O5}
 
 
 # ---------------------------------------------------------------------------

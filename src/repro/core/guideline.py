@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.optlevel import OptLevel, Step
+from repro.core.optlevel import STEP_ORDER, OptLevel, Step
 
 
 @dataclasses.dataclass
@@ -65,6 +65,7 @@ def recommend(
     collective_s: float = 0.0,
     offload_s: float = 0.0,
     baseline_s: float = 0.0,
+    steps=None,
 ) -> Recommendation:
     """Given the current breakdown, pick the paper's next step.
 
@@ -75,11 +76,18 @@ def recommend(
     ``collective_s`` generalizes the paper's PCIe term to the TPU mesh: a
     dominant collective term is attacked with the O4/O5 analogs (overlap,
     compressed/wider-word collectives) rather than more PEs.
+
+    ``steps`` is the step universe available on the surface being tuned —
+    default the paper's five (``STEP_ORDER``).  The serving runtime passes
+    its extended ladder so the paged-scratchpad rung (memory-system step,
+    tried after wide-word reorg, exactly the paper's Iter #3 escalation)
+    is recommended there and nowhere else.
     """
     comm = comm_bound_filter(offload_s, baseline_s)
     if comm is not None:
         return comm
 
+    universe = tuple(steps) if steps is not None else STEP_ORDER
     if applied is None:
         if level is None:
             raise TypeError("recommend() needs `level` or `applied`")
@@ -90,31 +98,31 @@ def recommend(
     dominant = max(terms, key=terms.get)
 
     if dominant == "memory":
-        order = (Step.DATA_CACHING, Step.DOUBLE_BUFFERING, Step.SCRATCHPAD_REORG)
+        order = (Step.DATA_CACHING, Step.DOUBLE_BUFFERING,
+                 Step.SCRATCHPAD_REORG, Step.PAGED_SCRATCHPAD)
         why = "memory term dominates (paper Iter #1/#3: DRAM access bound)"
     elif dominant == "compute":
         order = (Step.PIPELINING, Step.PE_DUPLICATION)
         why = "compute term dominates (paper Iter #2: frequency-deficit bound)"
     else:
-        order = (Step.DOUBLE_BUFFERING, Step.SCRATCHPAD_REORG, Step.PE_DUPLICATION)
+        order = (Step.DOUBLE_BUFFERING, Step.SCRATCHPAD_REORG,
+                 Step.PAGED_SCRATCHPAD, Step.PE_DUPLICATION)
         why = ("collective term dominates (TPU generalization of the PCIe "
                "column: overlap it, then shrink it by packing)")
 
     for step in order:
-        if step not in applied:
+        if step in universe and step not in applied:
             return Recommendation(step, why)
     # Everything that attacks the dominant term is already applied.
-    for step in (
-        Step.DATA_CACHING, Step.PIPELINING, Step.PE_DUPLICATION,
-        Step.DOUBLE_BUFFERING, Step.SCRATCHPAD_REORG,
-    ):
+    for step in universe:
         if step not in applied:
             return Recommendation(
                 step, f"dominant-term steps exhausted; next ladder step ({why})"
             )
-    return Recommendation(
-        None,
-        "all five steps applied — the paper stops here (best-effort, "
-        "not necessarily optimal)",
-        stop=True,
-    )
+    if universe == STEP_ORDER:
+        reason = ("all five steps applied — the paper stops here "
+                  "(best-effort, not necessarily optimal)")
+    else:
+        reason = (f"all {len(universe)} ladder steps applied — top of this "
+                  "surface's ladder (best-effort, not necessarily optimal)")
+    return Recommendation(None, reason, stop=True)

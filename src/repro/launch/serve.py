@@ -7,8 +7,8 @@ of the best-effort ladder.
 On a real fleet the same driver builds the production mesh and the sharded
 ``serve_step`` from ``launch/steps.py``; on this container it runs the
 reduced smoke config on the host device.  ``--level`` selects the
-OptLevel the engine is built at (see ``repro.serving``); walk all six with
-``python -m repro.autotune --serve``.
+OptLevel the engine is built at (see ``repro.serving``; 6 = paged KV
+blocks); walk all seven with ``python -m repro.autotune --serve``.
 """
 
 from __future__ import annotations
@@ -64,8 +64,9 @@ def main():
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--level", type=int, default=5, choices=range(6),
-                    help="OptLevel to build the engine at (0=naive)")
+    ap.add_argument("--level", type=int, default=5, choices=range(7),
+                    help="OptLevel to build the engine at (0=naive, "
+                         "6=paged KV blocks)")
     ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"))
     ap.add_argument("--sampler", default="greedy",
                     choices=("greedy", "temperature", "top_k"))

@@ -10,5 +10,7 @@ by ``engine.DecodeEngine`` at any ``OptLevel`` and tuned end-to-end by
 from repro.serving.cache import CacheManager            # noqa: F401
 from repro.serving.engine import DecodeEngine            # noqa: F401
 from repro.serving.overlap import HostOverlap, TickBuffers  # noqa: F401
+from repro.serving.paged import (                        # noqa: F401
+    BlockAllocator, PagedAllocator, PagedCacheManager)
 from repro.serving.sampler import SamplerConfig, make_sampler  # noqa: F401
 from repro.serving.scheduler import Request, Scheduler, Slot  # noqa: F401

@@ -27,6 +27,28 @@ import jax.numpy as jnp
 from repro.core.optlevel import OptLevel, Step
 
 
+def make_packed_zero(batch_axes: list, skip: list = None):
+    """The O5 packed reset as a reusable jitted closure: one donated call
+    zeroes slot slices ``idx`` of every leaf (``skip[i]`` leaves pass
+    through untouched — the paged manager uses it to zero only the
+    recurrent-state leaves while block-table leaves stay mask-protected).
+    """
+    skip = skip or [False] * len(batch_axes)
+
+    def zero(cache, idx):
+        leaves, treedef = jax.tree.flatten(cache)
+        out = []
+        for leaf, bax, skp in zip(leaves, batch_axes, skip):
+            if skp:
+                out.append(leaf)
+                continue
+            sel = (slice(None),) * bax + (idx,)
+            out.append(leaf.at[sel].set(0))
+        return jax.tree.unflatten(treedef, out)
+
+    return jax.jit(zero, donate_argnums=(0,))
+
+
 class CacheManager:
     def __init__(self, model, batch_size: int, max_seq: int,
                  level: OptLevel = OptLevel.O5, shardings=None):
@@ -40,6 +62,13 @@ class CacheManager:
         if shardings is not None:
             self.cache = jax.device_put(self.cache, shardings)
         self._packed_zero = None
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Persistent decode-cache capacity in token positions: the
+        contiguous cache reserves the full horizon for every slot (the
+        reservation the paged manager's block pool replaces)."""
+        return self.B * self.max_seq
 
     def _find_batch_axes(self) -> list:
         axes_tree = self.model.cache_axes()
@@ -97,16 +126,6 @@ class CacheManager:
     def _zero_packed(self, indices: list):
         """O5: one fused, donated call zeroes every admitted slot at once."""
         if self._packed_zero is None:
-            batch_axes = self.batch_axes
-
-            def zero(cache, idx):
-                leaves, treedef = jax.tree.flatten(cache)
-                out = []
-                for leaf, bax in zip(leaves, batch_axes):
-                    sel = (slice(None),) * bax + (idx,)
-                    out.append(leaf.at[sel].set(0))
-                return jax.tree.unflatten(treedef, out)
-
-            self._packed_zero = jax.jit(zero, donate_argnums=(0,))
+            self._packed_zero = make_packed_zero(self.batch_axes)
         self.cache = self._packed_zero(
             self.cache, jnp.asarray(indices, jnp.int32))

@@ -19,6 +19,12 @@ real, independently toggleable stage keyed by ``BestEffortConfig.level``:
                          while the device runs this tick (``overlap``).
   O5 scratchpad reorg  — packed slot admission: all slots admitted in a
                          tick are zeroed by one fused donated call.
+  O6 paged scratchpad  — the decode cache becomes a pool of fixed-size
+                         KV blocks with per-request block tables
+                         (``paged.PagedCacheManager``); the jitted step
+                         gathers each slot's dense view from the pool and
+                         scatters back the one block it wrote.  Admission
+                         is gated on free blocks (queue, never reject).
 
 Unified prefill/decode: every step feeds one token per active slot — a
 slot still consuming its prompt feeds the next prompt token (its logits
@@ -44,6 +50,7 @@ import jax.numpy as jnp
 from repro.core.optlevel import BestEffortConfig, OptLevel, Step
 from repro.serving.cache import CacheManager
 from repro.serving.overlap import HostOverlap
+from repro.serving.paged import PagedCacheManager
 from repro.serving.sampler import SamplerConfig, make_sampler
 from repro.serving.scheduler import Request, Scheduler
 
@@ -63,6 +70,21 @@ def _make_fused(model, sample):
         logits, new_cache = model.decode_step(
             params, cache, tokens, positions)
         return sample(_last_logits(logits), seeds), new_cache
+
+    return _fused
+
+
+def _make_paged_fused(model, sample, layout):
+    """The O6 step: block-table gather -> the SAME decode_step the dense
+    rungs run -> single-block scatter.  The dense view the model sees is
+    bit-identical at every unmasked position (see ``paged`` docstring),
+    so greedy tokens cannot drift from the contiguous path."""
+    def _fused(params, pool, tables, tokens, positions, seeds):
+        dense = layout.gather(pool, tables)
+        logits, new_dense = model.decode_step(
+            params, dense, tokens, positions)
+        toks = sample(_last_logits(logits), seeds)
+        return toks, layout.scatter(pool, tables, new_dense, positions)
 
     return _fused
 
@@ -136,21 +158,55 @@ class DecodeEngine:
         self.scheduler = Scheduler(batch_size, max_seq, policy=policy)
         self.n_steps = 0
 
+        # O6: paged KV blocks.  The pool's leading axis is blocks, not
+        # slots, so the O3 batch-axis sharding plan does not apply
+        # (block-axis sharding of the pool is future work) — paged
+        # engines always build the unsharded paged step.
+        self._paged = self.level.has(Step.PAGED_SCRATCHPAD)
+        if self._paged and step_fn is not None:
+            # A caller-supplied fused step has no block-table argument;
+            # silently falling back to the contiguous cache would let an
+            # operator believe they are measuring the paged rung.
+            raise ValueError(
+                "step_fn is incompatible with the paged O6 cache (the "
+                "jitted step must thread block tables); build the engine "
+                "at O5 or drop step_fn")
+
         # O3: PE duplication = batch-axis sharding across devices.
-        self._shardings = self._plan_pe_sharding()
+        self._shardings = None if self._paged else self._plan_pe_sharding()
         cache_sh = tok_sh = pos_sh = None
         if self._shardings is not None:
             cache_sh, tok_sh, pos_sh = self._shardings
             params = jax.device_put(params, self._repl)
         self.params = params
-        self.cache_mgr = CacheManager(model, batch_size, max_seq,
-                                      self.level, shardings=cache_sh)
+        if self._paged:
+            self.cache_mgr = PagedCacheManager(
+                model, batch_size, max_seq,
+                block_size=self.config.kv_block_size,
+                pool_blocks=self.config.kv_pool_blocks)
+            # The scheduler drives the block lifecycle: admission is
+            # gated on free blocks (a request that fits max_seq but not
+            # the pool queues), admit allocates the reservation, retire
+            # returns it before the next admission wave.
+            self.scheduler.admission_gate = self.cache_mgr.can_admit
+            self.scheduler.on_admit = self.cache_mgr.admit_slot
+            self.scheduler.on_retire = self.cache_mgr.release_slot
+        else:
+            self.cache_mgr = CacheManager(model, batch_size, max_seq,
+                                          self.level, shardings=cache_sh)
 
         self._fused = self.level.has(Step.PIPELINING) or step_fn is not None
         if step_fn is not None:
             # Back-compat hook: a caller-supplied fused step
             # (params, cache, tokens, positions) -> (tokens, cache).
             self._step_fn = lambda p, c, t, pos, seeds: step_fn(p, c, t, pos)
+        elif self._paged:
+            # Pool geometry is part of the program, so each paged engine
+            # compiles its own step (like the sharded path).
+            self._step_fn = jax.jit(
+                _make_paged_fused(model, make_sampler(self.sampler_cfg),
+                                  self.cache_mgr.layout),
+                donate_argnums=(1,))
         elif self._shardings is not None:
             # Sharded PE duplication: shardings are part of the program,
             # so this engine compiles its own instance of the fused step.
@@ -236,10 +292,20 @@ class DecodeEngine:
 
     def _dispatch(self, tokens_np, positions_np, seeds_np):
         """Run the batched fused device step; returns the (possibly still
-        in-flight) sampled tokens and installs the new cache."""
-        toks_dev, new_cache = self._step_fn(
-            self.params, self.cache_mgr.cache, jnp.asarray(tokens_np),
-            jnp.asarray(positions_np), jnp.asarray(seeds_np))
+        in-flight) sampled tokens and installs the new cache.  The paged
+        step additionally threads the current block tables through the
+        graph (values change at admission; the (B, nb) shape never does,
+        so there is no retrace)."""
+        if self._paged:
+            toks_dev, new_cache = self._step_fn(
+                self.params, self.cache_mgr.cache,
+                jnp.asarray(self.cache_mgr.tables),
+                jnp.asarray(tokens_np), jnp.asarray(positions_np),
+                jnp.asarray(seeds_np))
+        else:
+            toks_dev, new_cache = self._step_fn(
+                self.params, self.cache_mgr.cache, jnp.asarray(tokens_np),
+                jnp.asarray(positions_np), jnp.asarray(seeds_np))
         self.cache_mgr.cache = new_cache
         self.n_steps += 1
         return toks_dev

@@ -1,0 +1,386 @@
+"""Paged decode-cache scratchpad — the serving ladder's O6 rung.
+
+The contiguous ``cache.CacheManager`` reserves ``batch x max_seq`` cache
+memory per slot no matter how short the requests are.  This module is the
+vLLM-style alternative (scratchpad reorganization, level 2): every cache
+leaf with a sequence axis is stored as a pool of fixed-size KV *blocks*,
+and each slot owns a per-request *block table* mapping logical block
+``j`` (positions ``j*T .. j*T+T-1``) to a physical pool block.  Capacity
+is then the pool size over the *actual* per-request reservations
+(``min(n_prompt + max_new_tokens, max_seq)`` tokens), so long-tail
+prompt mixes admit more concurrent requests at equal memory.
+
+Layering (so the allocator is testable without jax):
+
+  * :class:`BlockAllocator` — pure free-list arithmetic: allocate /
+    append / release over integer block ids.  Block 0 is reserved as the
+    NULL block: unallocated block-table entries point at it, it is never
+    handed out, and its contents are write-garbage by design (see below).
+  * :class:`PagedAllocator` — per-slot block tables + reservation-based
+    admission on top of the free list.  Drives the scheduler's admission
+    gate: a request whose reservation exceeds the free blocks *queues*
+    (never raises) until retirements free blocks.
+  * :class:`PagedCacheManager` — the jax layer: owns the pooled cache
+    tree and presents the contiguous manager's ``reset_slots`` / cache
+    interface to the engine; the jitted decode step threads the block
+    table through a gather (pool -> dense per-slot view) and a scatter
+    (the one block each slot wrote this tick -> pool).
+
+Bit-identity with the contiguous path (the ladder's O0..O6 contract)
+rests on one invariant: a slot at position ``p`` has itself written every
+cache entry at positions ``< p`` (blocks are reserved for the whole
+request up front, and positions advance one per tick), position ``p`` is
+written in-graph before attention reads it, and every position ``> p`` —
+stale block contents, NULL-block garbage, neighbours' leftovers — is
+masked to -1e30 before the softmax, where float32 ``exp`` underflows to
+exactly 0.  Nothing unmasked can differ, so greedy argmax cannot either.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` positions."""
+    return -(-max(n_tokens, 0) // block_size)
+
+
+class BlockAllocator:
+    """Fixed pool of KV blocks with a LIFO free list.
+
+    ``n_blocks`` is the number of *allocatable* blocks; physical pool
+    storage has ``n_blocks + 1`` rows (row 0 is the reserved NULL block).
+    ``defrag`` makes allocation take the lowest-numbered free blocks
+    (keeps live blocks packed toward the pool's start after churn — the
+    copy-on-admit compaction in :meth:`PagedCacheManager.compact` then
+    has less to move).
+    """
+
+    def __init__(self, n_blocks: int, *, defrag: bool = False):
+        if n_blocks < 1:
+            raise ValueError(f"need at least one block (got {n_blocks})")
+        self.n_blocks = n_blocks
+        self.defrag = defrag
+        self._free = list(range(n_blocks, 0, -1))   # pop() -> lowest id
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def allocate(self, n: int) -> list:
+        """Take ``n`` blocks off the free list; raises if short (callers
+        gate on ``free_blocks`` first — the scheduler's admission gate)."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"block pool exhausted: want {n}, free {len(self._free)} "
+                f"of {self.n_blocks} (admission gate should have queued)")
+        if self.defrag:
+            self._free.sort(reverse=True)
+        return [self._free.pop() for _ in range(n)]
+
+    def append(self) -> int:
+        """Grow a request by one block (the incremental-growth API; the
+        engine reserves whole requests up front, tests exercise this)."""
+        return self.allocate(1)[0]
+
+    def release(self, blocks) -> None:
+        live = set(self._free)
+        for b in blocks:
+            if b == NULL_BLOCK:
+                continue
+            if b in live or not (1 <= b <= self.n_blocks):
+                raise RuntimeError(f"double/invalid free of block {b}")
+            live.add(b)
+            self._free.append(b)
+
+    def rebuild(self, n_held: int) -> None:
+        """Reset to the state where blocks ``1..n_held`` are held and the
+        rest are free (the compacted layout) — keeps the free-list
+        representation invariant in this class only."""
+        self._free = list(range(self.n_blocks, n_held, -1))
+
+
+class PagedAllocator:
+    """Per-slot block tables over a :class:`BlockAllocator`.
+
+    Pure host arithmetic (numpy tables, python free list) so the
+    scheduler property tests can drive random admit/retire sequences
+    against the real bookkeeping without touching jax.
+    """
+
+    def __init__(self, batch_size: int, max_seq: int, *,
+                 block_size: int = 16, pool_blocks: int = 0,
+                 defrag: bool = False):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1 (got {block_size})")
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.blocks_per_seq = blocks_for(max_seq, block_size)
+        # 0 = auto: equal worst-case capacity to the contiguous cache.
+        self.pool_blocks = pool_blocks or batch_size * self.blocks_per_seq
+        if self.pool_blocks < self.blocks_per_seq:
+            # Any submittable request (validated against max_seq) must be
+            # admittable once the pool drains, or it would queue forever.
+            raise ValueError(
+                f"pool_blocks={self.pool_blocks} cannot hold one max_seq "
+                f"request ({self.blocks_per_seq} blocks of {block_size})")
+        self.allocator = BlockAllocator(self.pool_blocks, defrag=defrag)
+        # tables[i, j] = physical block of slot i's logical block j
+        self.tables = np.full((batch_size, self.blocks_per_seq),
+                              NULL_BLOCK, np.int32)
+        self._held = [0] * batch_size      # blocks held per slot
+
+    # -- admission gate + lifecycle (wired to Scheduler callbacks) ----------
+    def reserved_tokens(self, req) -> int:
+        """Positions the request can ever write: the prompt is consumed
+        one token per tick through the same cache, so the reservation is
+        prompt + budget, clipped to the engine's max_seq horizon."""
+        return min(req.n_prompt + req.max_new_tokens, self.max_seq)
+
+    def blocks_needed(self, req) -> int:
+        return blocks_for(self.reserved_tokens(req), self.block_size)
+
+    def can_admit(self, req) -> bool:
+        """The scheduler's admission gate: a request that fits max_seq but
+        not the remaining free blocks queues (never raises)."""
+        return self.blocks_needed(req) <= self.allocator.free_blocks
+
+    def admit_slot(self, i: int, req) -> None:
+        """Allocate the request's full reservation into slot ``i``'s
+        table (up-front reservation = no mid-flight exhaustion)."""
+        if self._held[i]:
+            raise RuntimeError(f"slot {i} admitted while holding blocks")
+        n = self.blocks_needed(req)
+        self.tables[i, :] = NULL_BLOCK
+        self.tables[i, :n] = self.allocator.allocate(n)
+        self._held[i] = n
+
+    def release_slot(self, i: int, req=None) -> None:
+        n = self._held[i]
+        if n:
+            self.allocator.release(self.tables[i, :n].tolist())
+        self.tables[i, :] = NULL_BLOCK
+        self._held[i] = 0
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.free_blocks
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.pool_blocks * self.block_size
+
+    def check_conservation(self) -> None:
+        """allocated + free == total, and no block is in two places."""
+        held = [b for row, n in zip(self.tables, self._held)
+                for b in row[:n].tolist()]
+        free = self.allocator._free
+        assert len(held) + len(free) == self.pool_blocks, (held, free)
+        assert not (set(held) & set(free)), "block both held and free"
+        assert len(set(held)) == len(held), "block held twice"
+
+
+# ---------------------------------------------------------------------------
+# The jax layer: pooled cache tree + gather/scatter layout.
+# ---------------------------------------------------------------------------
+
+
+def _axes_leaves_with_paths(tree, prefix=()):
+    """(path, axes-tuple) pairs in ``jax.tree.leaves`` order (dicts sort
+    their keys) for the plain dict-of-tuples trees ``cache_axes`` returns.
+    The path lets the layout classify leaves by *identity* (self- vs
+    cross-attention cache), not by shape coincidence."""
+    if isinstance(tree, tuple):
+        return [(prefix, tree)]
+    assert isinstance(tree, dict), f"unexpected cache_axes node {tree!r}"
+    out = []
+    for k in sorted(tree):
+        out.extend(_axes_leaves_with_paths(tree[k], prefix + (k,)))
+    return out
+
+
+class PagedLayout:
+    """Per-leaf paging plan derived from the model's ``cache_axes()``.
+
+    A leaf is paged iff its logical axes name both "batch" and "kv_seq",
+    the sequence axis spans the engine's max_seq, and it is a *decode*
+    cache — cross-attention caches (path contains "cross") pass through
+    untouched, whatever their length: cross attention is unmasked, so
+    the stale-positions-are-masked argument that makes paging safe does
+    not apply to them.  Recurrent-state leaves (RWKV wkv, Mamba conv/ssm
+    — no sequence axis) keep per-slot contiguous storage: there is
+    nothing to page in O(1)-state families.  In every paged leaf of every
+    model family here the sequence axis sits immediately after the batch
+    axis, which makes the (batch, seq) <-> (block, in-block) reshapes
+    below pure metadata.
+    """
+
+    def __init__(self, model, batch_size: int, max_seq: int,
+                 block_size: int, pool_blocks: int):
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.T = block_size
+        self.nb = blocks_for(max_seq, block_size)
+        self.pool_rows = pool_blocks + 1            # + NULL block row
+        axes_tree = model.cache_axes()
+        paths_axes = _axes_leaves_with_paths(axes_tree)
+        axes_flat = jax.tree.leaves(axes_tree,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        assert [ax for _, ax in paths_axes] == axes_flat, "leaf-order drift"
+        specs = jax.tree.leaves(model.cache_spec(batch_size, max_seq))
+        assert len(paths_axes) == len(specs), "cache axes drift"
+        self.plans = []          # (bax, paged) per leaf
+        for (path, ax), spec in zip(paths_axes, specs):
+            bax = ax.index("batch")
+            cross = any("cross" in str(k) for k in path)
+            paged = ("kv_seq" in ax and not cross
+                     and spec.shape[ax.index("kv_seq")] == max_seq)
+            if paged:
+                assert ax.index("kv_seq") == bax + 1, (
+                    f"paged leaf needs seq right after batch, got {ax}")
+            self.plans.append((bax, paged))
+
+    def init_pool(self, model) -> tuple:
+        """(pool tree, treedef): paged leaves become
+        (..., pool_rows, block_size, ...) zeros; recurrent leaves keep
+        their contiguous per-slot shape."""
+        dense = model.init_cache(self.B, self.max_seq)
+        leaves, treedef = jax.tree.flatten(dense)
+        out = []
+        for leaf, (bax, paged) in zip(leaves, self.plans):
+            if not paged:
+                out.append(leaf)
+                continue
+            shape = list(leaf.shape)
+            shape[bax] = self.pool_rows
+            shape[bax + 1] = self.T
+            out.append(jnp.zeros(tuple(shape), leaf.dtype))
+        return jax.tree.unflatten(treedef, out), treedef
+
+    # Both halves below are traced inside the jitted decode step.
+    def gather(self, pool, tables):
+        """pool tree + tables (B, nb) -> dense per-slot cache view with a
+        (possibly block-padded) sequence axis of nb*T >= max_seq."""
+        leaves, treedef = jax.tree.flatten(pool)
+        flat = tables.reshape(-1)                     # (B*nb,)
+        out = []
+        for leaf, (bax, paged) in zip(leaves, self.plans):
+            if not paged:
+                out.append(leaf)
+                continue
+            g = jnp.take(leaf, flat, axis=bax)        # bax: B*nb, bax+1: T
+            shape = (g.shape[:bax] + (self.B, self.nb * self.T)
+                     + g.shape[bax + 2:])
+            out.append(g.reshape(shape))
+        return jax.tree.unflatten(treedef, out)
+
+    def scatter(self, pool, tables, new_dense, positions):
+        """Write back the ONE block each slot touched this tick.
+
+        A decode tick writes exactly position ``positions[b]`` per slot,
+        so only logical block ``positions[b] // T`` changed; the other
+        nb-1 blocks still hold what the pool holds.  Inactive slots point
+        at the NULL block, which absorbs their garbage chunk.
+        """
+        jb = positions // self.T                      # (B,) logical block
+        pb = jnp.take_along_axis(tables, jb[:, None], axis=1)[:, 0]
+        seq_idx = (jb * self.T)[:, None] + jnp.arange(self.T)[None]  # (B, T)
+        pool_leaves, treedef = jax.tree.flatten(pool)
+        dense_leaves = jax.tree.leaves(new_dense)
+        out = []
+        for leaf, dense, (bax, paged) in zip(pool_leaves, dense_leaves,
+                                             self.plans):
+            if not paged:
+                out.append(dense)                     # whole-state replace
+                continue
+            idx = seq_idx.reshape(
+                (1,) * bax + seq_idx.shape + (1,) * (dense.ndim - bax - 2))
+            chunk = jnp.take_along_axis(dense, idx, axis=bax + 1)
+            sel = (slice(None),) * bax + (pb,)
+            out.append(leaf.at[sel].set(chunk))
+        return jax.tree.unflatten(treedef, out)
+
+
+class PagedCacheManager(PagedAllocator):
+    """Block-pooled drop-in for ``cache.CacheManager`` at O6.
+
+    Same engine-facing surface — ``.cache`` (the pool tree),
+    ``reset_slots(indices, live)`` — plus the allocator lifecycle the
+    scheduler drives through its ``admission_gate`` / ``on_admit`` /
+    ``on_retire`` hooks.  Slot admission allocates the request's whole
+    reservation (so ``reset_slots`` has nothing left to do: stale block
+    contents are masked, not zeroed — see the module docstring), and
+    retirement returns the blocks before the next admission wave runs.
+    """
+
+    def __init__(self, model, batch_size: int, max_seq: int, *,
+                 block_size: int = 16, pool_blocks: int = 0,
+                 defrag: bool = False):
+        super().__init__(batch_size, max_seq, block_size=block_size,
+                         pool_blocks=pool_blocks, defrag=defrag)
+        self.model = model
+        self.layout = PagedLayout(model, batch_size, max_seq,
+                                  self.block_size, self.pool_blocks)
+        self.cache, self._treedef = self.layout.init_pool(model)
+        self._state_zero = None
+
+    def reset_slots(self, indices: list, live: list) -> None:
+        """Admission reset under paging.
+
+        Paged (sequence-axis) leaves need NO zeroing: the slots in
+        ``indices`` had their tables rebuilt by ``admit_slot`` and every
+        stale position is masked before the softmax.  Recurrent-STATE
+        leaves (RWKV wkv / Mamba conv+ssm — per-slot, no sequence axis)
+        are different: state is carried, not masked, so the previous
+        tenant's state would leak straight into the new request's first
+        step.  Those leaves get the O5-style packed one-call zeroing.
+        """
+        if not indices or all(paged for _, paged in self.layout.plans):
+            return
+        if self._state_zero is None:
+            from repro.serving.cache import make_packed_zero
+
+            self._state_zero = make_packed_zero(
+                [bax for bax, _ in self.layout.plans],
+                skip=[paged for _, paged in self.layout.plans])
+        self.cache = self._state_zero(
+            self.cache, jnp.asarray(indices, jnp.int32))
+
+    def compact(self) -> None:
+        """Copy-on-admit defrag: relocate every held block to the lowest
+        free ids, rewriting tables and physically copying pool rows.
+        Optional — correctness never needs it (block ids are fully
+        virtualized); it keeps the live set dense so a future pool-shrink
+        or sequence-sharded gather touches a compact prefix."""
+        held = sorted({b for row, n in zip(self.tables, self._held)
+                       for b in row[:n].tolist()})
+        want = list(range(1, len(held) + 1))
+        moves = {old: new for old, new in zip(held, want) if old != new}
+        if not moves:
+            return
+        src = jnp.asarray(list(moves.keys()), jnp.int32)
+        dst = jnp.asarray(list(moves.values()), jnp.int32)
+        leaves = jax.tree.leaves(self.cache)
+        out = []
+        for leaf, (bax, paged) in zip(leaves, self.layout.plans):
+            if not paged:
+                out.append(leaf)
+                continue
+            sel_src = (slice(None),) * bax + (src,)
+            sel_dst = (slice(None),) * bax + (dst,)
+            out.append(leaf.at[sel_dst].set(leaf[sel_src]))
+        self.cache = jax.tree.unflatten(self._treedef, out)
+        remap = np.vectorize(lambda b: moves.get(int(b), int(b)))
+        self.tables = remap(self.tables).astype(np.int32)
+        self.allocator.rebuild(len(held))

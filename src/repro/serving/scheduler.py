@@ -16,6 +16,18 @@ deep inside the engine tick, and a degenerate ``max_new_tokens <= 0``
 request is retired on the spot (empty completion) rather than ever
 occupying a slot — the naive path admitted it and, depending on prompt
 length vs ``max_seq``, could pin the slot forever.
+
+Submit-time validation is deliberately *static* (the single-request
+``max_seq`` capacity only): under the O6 paged cache a request that fits
+``max_seq`` but not the currently-free KV blocks must QUEUE until
+retirements free blocks, never raise — block availability is a property
+of the moment, not of the request.  That dynamic check is the
+``admission_gate`` hook, consulted per candidate at admit time; a gated
+candidate stays queued and ends this tick's admission wave (no
+head-of-line bypass, so fcfs arrival order survives).  The cache layer
+tracks slot tenancy through ``on_admit(i, req)`` / ``on_retire(i, req)``,
+fired exactly once per occupancy at every retirement site (serial
+advance, planned tick_advance retirement, surprise eos in finalize).
 """
 
 from __future__ import annotations
@@ -79,6 +91,10 @@ class Scheduler:
         self.queue: collections.deque = collections.deque()
         self.finished: list = []
         self._rid = itertools.count()
+        # Cache-layer hooks (wired by the engine for the paged path):
+        self.admission_gate = None     # (req) -> bool: may admit now?
+        self.on_admit = None           # (slot_index, req): slot occupied
+        self.on_retire = None          # (slot_index, req): slot freed
 
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request) -> int:
@@ -101,24 +117,40 @@ class Scheduler:
         self.queue.append(req)
         return req.rid
 
-    def _pop(self) -> Request:
+    def _next_index(self) -> int:
+        """Queue index of the request the policy would admit next."""
         if self.policy == "spf":
-            best = min(range(len(self.queue)),
+            return min(range(len(self.queue)),
                        key=lambda i: self.queue[i].n_prompt)
-            self.queue.rotate(-best)
-            req = self.queue.popleft()
-            self.queue.rotate(best)
-            return req
-        return self.queue.popleft()
+        return 0
+
+    def _pop(self, at: int) -> Request:
+        self.queue.rotate(-at)
+        req = self.queue.popleft()
+        self.queue.rotate(at)
+        return req
 
     # -- per-tick phases ------------------------------------------------------
     def admit(self) -> list:
-        """Fill free slots from the queue; returns newly occupied indices."""
+        """Fill free slots from the queue; returns newly occupied indices.
+
+        Each candidate is checked against the ``admission_gate`` before
+        leaving the queue; a gated-out candidate (e.g. not enough free KV
+        blocks for its reservation) stays queued and stops this wave —
+        admitting someone behind it would reorder arrivals.
+        """
         admitted = []
         for i, slot in enumerate(self.slots):
             if slot.active or not self.queue:
                 continue
-            self.slots[i] = Slot(req=self._pop(), pos=0)
+            at = self._next_index()
+            if (self.admission_gate is not None
+                    and not self.admission_gate(self.queue[at])):
+                break
+            req = self._pop(at)
+            self.slots[i] = Slot(req=req, pos=0)
+            if self.on_admit is not None:
+                self.on_admit(i, req)
             admitted.append(i)
         return admitted
 
@@ -147,6 +179,8 @@ class Scheduler:
             r.done = True
             self.finished.append(r)
             self.slots[i] = Slot()
+            if self.on_retire is not None:
+                self.on_retire(i, r)
             return r
         return None
 
@@ -183,6 +217,14 @@ class Scheduler:
                        or s.pos + 1 >= self.max_seq)
             if planned:
                 self.slots[i] = Slot()      # free under the running step
+                if self.on_retire is not None:
+                    # Blocks freed here may be reallocated by the very
+                    # next admit(): the in-flight step still scatters the
+                    # retiree's final token into them, but a new tenant
+                    # only ever reads positions it has itself written
+                    # (everything else is masked), so the stale write is
+                    # unobservable.
+                    self.on_retire(i, r)
             out.append((i, r, planned))
         return out
 
@@ -203,3 +245,5 @@ class Scheduler:
                 self.finished.append(r)
                 if not planned and self.slots[i].req is r:
                     self.slots[i] = Slot()
+                    if self.on_retire is not None:
+                        self.on_retire(i, r)

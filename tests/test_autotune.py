@@ -183,21 +183,31 @@ def test_serving_backend_ladder_state_machine():
     assert b.candidate_steps(s) == [Step.DATA_CACHING]
     s = b.apply(s, Step.DATA_CACHING)
     assert s == OptLevel.O1
-    assert b.candidate_steps(OptLevel.O5) == []
+    # the serving ladder continues past the paper's five to the paged rung
+    assert b.candidate_steps(OptLevel.O5) == [Step.PAGED_SCRATCHPAD]
+    assert b.apply(OptLevel.O5, Step.PAGED_SCRATCHPAD) == OptLevel.O6
+    assert b.candidate_steps(OptLevel.O6) == []
+    # paper-scoped backends still top out at O5
+    kb = KernelModelBackend(costmodel.MACHSUITE_PROFILES["gemm"])
+    assert kb.candidate_steps(OptLevel.O5) == []
 
 
 @pytest.mark.slow
 def test_serving_ladder_walk_identical_tokens():
-    """The full measured O0->O5 serving walk: six rounds, every level's
-    generations bit-identical under greedy sampling."""
+    """The full measured O0->O6 serving walk: seven rounds, every level's
+    generations bit-identical under greedy sampling — including the paged
+    O6 rung at reduced pool capacity (forces queueing)."""
     b = ServingBackend("qwen3-8b", batch_size=2, max_seq=24, n_requests=4,
-                       max_new=4, repeats=1)
+                       max_new=4, repeats=1, kv_block_size=8,
+                       kv_pool_blocks=5)
     res = autotune(b, ladder=True)
     assert res.mode == "ladder" and not res.rejected
-    assert [r.label for r in res.rounds] == [f"O{i}" for i in range(6)]
+    assert [r.label for r in res.rounds] == [f"O{i}" for i in range(7)]
     gens = [r.measurement.meta["generated"] for r in res.rounds]
     assert all(g == gens[0] for g in gens)
     assert all(r.measurement.total_s > 0 for r in res.rounds)
+    caps = [r.measurement.meta["kv_capacity"] for r in res.rounds]
+    assert caps[:6] == [2 * 24] * 6 and caps[6] == 5 * 8
 
 
 def test_ladder_mode_on_kernel_backend_measures_every_rung():

@@ -6,8 +6,8 @@ import pytest
 from repro.core import costmodel
 from repro.core.guideline import (COMM_BOUND_THRESHOLD, comm_bound_filter,
                                   recommend)
-from repro.core.optlevel import (ALL_LEVELS, BestEffortConfig, OptLevel,
-                                 Step, STEP_ORDER)
+from repro.core.optlevel import (ALL_LEVELS, LADDER, BestEffortConfig,
+                                 OptLevel, Step, STEP_ORDER)
 from repro.core.refine import refine_modelled
 
 
@@ -17,7 +17,27 @@ def test_ladder_cumulative_semantics():
     assert OptLevel.O5.has(Step.SCRATCHPAD_REORG)
     assert not OptLevel.O2.has(Step.PE_DUPLICATION)
     assert OptLevel.O2.next_step == Step.PE_DUPLICATION
-    assert OptLevel.O5.next_step is None
+    # The serving extension sits past the paper's five: O5's next move is
+    # the paged-scratchpad rung; the full ladder tops out at O6.
+    assert OptLevel.O5.next_step == Step.PAGED_SCRATCHPAD
+    assert OptLevel.O6.next_step is None
+    assert OptLevel.O6.has(Step.PAGED_SCRATCHPAD)
+    assert not OptLevel.O5.has(Step.PAGED_SCRATCHPAD)
+    assert STEP_ORDER == LADDER[:5]      # the paper's table is untouched
+
+
+def test_paged_step_scoped_to_extended_universe():
+    """The paper-scoped default universe never recommends the paged rung
+    (kernel/LM walks stop at O5); the serving universe escalates to it
+    after wide-word reorg, and stops only past O6."""
+    five = set(STEP_ORDER)
+    rec = recommend(applied=five, compute_s=1.0, memory_s=5.0)
+    assert rec.stop and rec.step is None
+    rec = recommend(applied=five, compute_s=1.0, memory_s=5.0, steps=LADDER)
+    assert rec.step == Step.PAGED_SCRATCHPAD
+    rec = recommend(applied=set(LADDER), compute_s=1.0, memory_s=5.0,
+                    steps=LADDER)
+    assert rec.stop and rec.step is None
 
 
 def test_best_effort_config_gates():

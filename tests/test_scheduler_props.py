@@ -1,0 +1,232 @@
+"""Property-based scheduler + block-allocator tests (satellite of the O6
+paged-cache work): random admit/retire/eos traffic must preserve the
+bookkeeping invariants the serving engine's correctness rests on —
+
+  * no slot double-occupancy (an active request lives in exactly one slot);
+  * admission order respects the policy (fcfs: arrival order, no
+    head-of-line bypass even when the block gate queues the head; spf:
+    the admitted request has the shortest prompt in the queue);
+  * block free-list conservation under the paged path: held + free ==
+    total, no block held twice or both held and free, retired slots hold
+    nothing — across BOTH tick protocols (serial ``advance`` and the
+    overlapped ``tick_advance``/``finalize`` split).
+
+Runs through ``tests/_hypothesis_compat``: real hypothesis when the
+environment has it, the deterministic fixed-seed fallback otherwise.
+"""
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.serving import PagedAllocator, Request, Scheduler
+from repro.serving.paged import BlockAllocator, blocks_for
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator: the free list itself
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_basics():
+    a = BlockAllocator(4)
+    assert a.free_blocks == 4 and a.used_blocks == 0
+    got = a.allocate(3)
+    assert len(got) == len(set(got)) == 3
+    assert all(1 <= b <= 4 for b in got)        # block 0 is NULL, reserved
+    assert a.free_blocks == 1
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.allocate(2)
+    a.release(got[:2])
+    assert a.free_blocks == 3
+    with pytest.raises(RuntimeError, match="free"):
+        a.release([got[0]])                      # double free
+    with pytest.raises(RuntimeError, match="free"):
+        a.release([99])                          # out of range
+    b = a.append()
+    assert 1 <= b <= 4 and a.free_blocks == 2
+
+
+def test_block_allocator_defrag_takes_lowest_ids():
+    a = BlockAllocator(8, defrag=True)
+    first = a.allocate(6)
+    a.release(first)                             # free list now shuffled
+    assert a.allocate(3) == [1, 2, 3]
+
+
+def test_blocks_for_arithmetic():
+    assert blocks_for(0, 4) == 0
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+
+
+def test_paged_allocator_rejects_pool_too_small_for_one_request():
+    with pytest.raises(ValueError, match="max_seq"):
+        PagedAllocator(2, 32, block_size=4, pool_blocks=7)
+
+
+# ---------------------------------------------------------------------------
+# Random traffic against the real Scheduler + PagedAllocator wiring
+# ---------------------------------------------------------------------------
+
+def _check_invariants(sched, pa):
+    # no double occupancy: an active request sits in exactly one slot
+    active = [s.req for s in sched.slots if s.active]
+    assert len({id(r) for r in active}) == len(active)
+    assert not any(r.done for r in active)
+    # free-list conservation + table/held consistency
+    pa.check_conservation()
+    for i, s in enumerate(sched.slots):
+        if not s.active:
+            assert pa._held[i] == 0, f"retired slot {i} still holds blocks"
+        else:
+            assert pa._held[i] == pa.blocks_needed(s.req)
+
+
+def _run_scenario(seed: int, policy: str, split_protocol: bool):
+    rng = np.random.default_rng(seed)
+    n_slots = int(rng.integers(1, 5))
+    block_size = int(rng.integers(1, 6))
+    max_seq = int(rng.integers(8, 33))
+    per_seq = blocks_for(max_seq, block_size)
+    # pool between "one max request" and "every slot maxed": small pools
+    # force the admission gate to queue
+    pool = int(rng.integers(per_seq, n_slots * per_seq + 1))
+    pa = PagedAllocator(n_slots, max_seq, block_size=block_size,
+                        pool_blocks=pool)
+    sched = Scheduler(n_slots, max_seq, policy=policy)
+    sched.admission_gate = pa.can_admit
+    admitted_log = []
+
+    def on_admit(i, req):
+        pa.admit_slot(i, req)
+        admitted_log.append(req)
+        if policy == "fcfs":
+            # no head-of-line bypass: everything still queued arrived later
+            assert all(req.rid < q.rid for q in sched.queue)
+        else:
+            # spf: nothing shorter was left behind
+            assert all(req.n_prompt <= q.n_prompt for q in sched.queue)
+
+    sched.on_admit = on_admit
+    sched.on_retire = pa.release_slot
+
+    EOS = 7
+    submitted = 0
+    for _ in range(int(rng.integers(10, 40))):
+        # random submissions (some degenerate / eos-bearing)
+        for _ in range(int(rng.integers(0, 3))):
+            plen = int(rng.integers(1, max_seq))
+            new = int(rng.integers(0, max_seq - plen + 1))
+            sched.submit(Request(
+                prompt=[int(t) for t in rng.integers(1, 50, plen)],
+                max_new_tokens=new,
+                eos_id=EOS if rng.random() < 0.5 else None))
+            submitted += 1
+        sched.admit()
+        _check_invariants(sched, pa)
+        active = sched.active_indices
+        toks = {i: int(rng.integers(1, 10)) for i in active}  # may hit EOS
+        if split_protocol:
+            emissions = sched.tick_advance(active)
+            _check_invariants(sched, pa)          # freed under running step
+            sched.admit()                         # overlapped refill
+            _check_invariants(sched, pa)
+            sched.finalize(emissions, toks)
+        else:
+            for i in active:
+                sched.advance(i, toks[i])
+        _check_invariants(sched, pa)
+
+    # drain: every submitted request eventually finishes and every block
+    # comes home
+    for _ in range(10_000):
+        if not sched.has_work():
+            break
+        sched.admit()
+        active = sched.active_indices
+        toks = {i: int(rng.integers(1, 10)) for i in active}
+        if split_protocol:
+            emissions = sched.tick_advance(active)
+            sched.finalize(emissions, toks)
+        else:
+            for i in active:
+                sched.advance(i, toks[i])
+        _check_invariants(sched, pa)
+    assert not sched.has_work(), "scenario failed to drain (deadlock?)"
+    assert len(sched.finished) == submitted
+    assert pa.free_blocks == pool, "blocks leaked after full drain"
+    # fcfs admitted exactly in arrival order
+    if policy == "fcfs":
+        rids = [r.rid for r in admitted_log]
+        assert rids == sorted(rids)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_traffic_fcfs_serial(seed):
+    _run_scenario(seed, "fcfs", split_protocol=False)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_traffic_fcfs_split(seed):
+    _run_scenario(seed, "fcfs", split_protocol=True)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_traffic_spf_serial(seed):
+    _run_scenario(seed, "spf", split_protocol=False)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_traffic_spf_split(seed):
+    _run_scenario(seed, "spf", split_protocol=True)
+
+
+# ---------------------------------------------------------------------------
+# The block-granularity admission gate (the satellite fix): a request that
+# fits max_seq but not the free blocks queues — never raises — and admits
+# once retirements free the pool.
+# ---------------------------------------------------------------------------
+
+def test_block_exhaustion_queues_instead_of_raising():
+    pa = PagedAllocator(2, 16, block_size=4, pool_blocks=5)
+    sched = Scheduler(2, 16, policy="fcfs")
+    sched.admission_gate = pa.can_admit
+    sched.on_admit = pa.admit_slot
+    sched.on_retire = pa.release_slot
+
+    # 12-token reservation = 3 blocks; two of them exceed the 5-block pool
+    sched.submit(Request(prompt=[1] * 8, max_new_tokens=4))
+    sched.submit(Request(prompt=[2] * 8, max_new_tokens=4))   # must queue
+    assert sched.admit() == [0]
+    assert len(sched.queue) == 1 and pa.free_blocks == 2
+    assert sched.admit() == []                 # still gated, still queued
+    # drain the first request; its retirement frees the blocks
+    for _ in range(11):
+        for i in sched.active_indices:
+            sched.advance(i, 3)
+    assert not sched.slots[0].active
+    assert sched.admit() == [0]                # queued request admits now
+    assert sched.queue == type(sched.queue)()
+    pa.check_conservation()
+
+
+def test_gate_preserves_fcfs_no_bypass():
+    """A small request behind a gated big one must NOT jump the queue
+    under fcfs."""
+    pa = PagedAllocator(2, 16, block_size=4, pool_blocks=5)
+    sched = Scheduler(2, 16, policy="fcfs")
+    sched.admission_gate = pa.can_admit
+    sched.on_admit = pa.admit_slot
+    sched.on_retire = pa.release_slot
+    sched.submit(Request(prompt=[1] * 8, max_new_tokens=4))   # 3 blocks
+    sched.submit(Request(prompt=[2] * 8, max_new_tokens=4))   # gated head
+    sched.submit(Request(prompt=[3], max_new_tokens=2))       # 1 block
+    assert sched.admit() == [0]
+    assert sched.admit() == []                 # head gated; no bypass
+    assert [r.n_prompt for r in sched.queue] == [8, 1]
