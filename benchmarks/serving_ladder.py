@@ -3,11 +3,19 @@
 Measures ``repro.serving.DecodeEngine`` at every OptLevel O0..O6 on one
 fixed continuous-batching workload (smoke config) and renders the
 per-level throughput/latency table to ``benchmarks/SERVING_LADDER.md``,
-plus a JSONL trajectory compatible with the autotune tooling.  The O6
-rung (paged KV blocks) runs at equal worst-case capacity here so the
-table stays a pure speed comparison; its capacity win — more admitted
+plus a JSONL trajectory compatible with the autotune tooling (every row
+records its ``layout`` and ``devices`` placement cell).  The O6 rung
+(paged KV blocks) runs at equal worst-case capacity here so the table
+stays a pure speed comparison; its capacity win — more admitted
 concurrency at equal memory on long-tail mixes — is measured separately
-by :func:`capacity_demo` and rendered under the same table.
+by :func:`capacity_demo` and rendered under the same table.  On >= 2
+visible devices (``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
+every O3+ row shards — the O6 row then IS the layout x placement
+composition cell (paged pool sharded on its BLOCK axis, same placement
+as the O5 row so O5->O6 stays the pure block-indirection delta) — and
+the ladder gains the ``O6pe1`` placement-ablation row (same paged pool,
+replicated), measured by the same interleaved trimmed-min harness as
+every other row.
 
   PYTHONPATH=src python -m benchmarks.serving_ladder
 
@@ -42,6 +50,10 @@ STAGES = {
     4: "+ double buffering: bookkeeping runs under the in-flight step",
     5: "+ scratchpad reorg: packed one-call zeroing of admitted slots",
     6: "+ paged scratchpad: KV block pool + per-request block tables",
+    # Key 7 is not a level: on >= 2 devices (where the O6 row itself runs
+    # the block-axis-sharded composition cell) it re-runs O6 pinned to
+    # pe=1 — the placement ablation within the paged layout.
+    7: "O6 placement ablation: same paged pool, replicated (pe=1)",
 }
 
 MD_PATH = os.path.join(os.path.dirname(__file__), "SERVING_LADDER.md")
@@ -49,19 +61,36 @@ TRAJ_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "autotune")
 
 
+def ladder_variants(devices: int):
+    """The measured (key, label, config) cells.  Keys 0..6 are the
+    OptLevels at their default configs — on >= 2 devices every O3+ row
+    shards, so O5->O6 compares MATCHED placements and the O6 row itself
+    is the layout x placement composition cell (block-axis-sharded paged
+    pool).  Key 7, added only on multi-device runs, is the placement
+    ablation: the same paged engine pinned to pe=1, isolating what
+    sharding buys (or costs) within the paged layout."""
+    from repro.core.optlevel import ALL_LEVELS, BestEffortConfig, OptLevel
+
+    out = [(int(lvl), f"O{int(lvl)}", BestEffortConfig(level=lvl))
+           for lvl in ALL_LEVELS]
+    if devices > 1:
+        out.append((7, "O6pe1", BestEffortConfig(level=OptLevel.O6, pe=1)))
+    return out
+
+
 def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
                    max_seq: int = 48, n_requests: int = 16,
                    max_new: int = 8, instances: int = 2, rounds: int = 8,
                    max_extra_rounds: int = 24, policy: str = "fcfs",
                    vocab: int = 0, seed: int = 0) -> list:
-    """Returns one row dict per level: wall_s, tok_per_s, ticks, tokens,
-    identical (vs O0), plus the workload identity."""
+    """Returns one row dict per measured variant: wall_s, tok_per_s,
+    ticks, tokens, identical (vs O0), layout/devices, plus the workload
+    identity."""
     import jax
 
     from repro.autotune.measurement import (run_serving_workload,
                                             serving_smoke_config,
                                             serving_workload)
-    from repro.core.optlevel import ALL_LEVELS, BestEffortConfig
     from repro.models import get_model
     from repro.serving import DecodeEngine
 
@@ -71,47 +100,54 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
     workload = serving_workload(cfg.vocab, max_seq=max_seq,
                                 n_requests=n_requests, max_new=max_new,
                                 seed=seed)
+    variants = ladder_variants(jax.device_count())
+    by_key = {k: (label, vcfg) for k, label, vcfg in variants}
+    keys = [k for k, _, _ in variants]
 
     def run(eng):
         wall, _, gen, _ = run_serving_workload(eng, workload)
         return wall, gen
 
-    generated = {}        # level -> token lists (must agree per level too)
-    engines = []          # [(level, engine)]
-    kv_capacity = {}      # level -> persistent cache capacity (tokens)
+    generated = {}        # key -> token lists (must agree per key too)
+    engines = []          # [(key, engine)]
+    kv_capacity = {}      # key -> persistent cache capacity (tokens)
+    devices_used = {}     # key -> placement device count
+    layouts = {}          # key -> cache layout name
 
-    def add_instance(lvl):
+    def add_instance(k):
+        _, vcfg = by_key[k]
         eng = DecodeEngine(
             model, params, batch_size=batch_size, max_seq=max_seq,
-            config=BestEffortConfig(level=lvl), policy=policy)
+            config=vcfg, policy=policy)
         _, gen = run(eng)                          # warmup: jit compiles
-        assert generated.setdefault(int(lvl), gen) == gen, (
-            f"level {lvl}: instances disagree")
-        kv_capacity[int(lvl)] = eng.cache_mgr.capacity_tokens
-        engines.append((lvl, eng))
+        assert generated.setdefault(k, gen) == gen, (
+            f"variant {k}: instances disagree")
+        kv_capacity[k] = eng.cache_mgr.capacity_tokens
+        devices_used[k] = eng.placement.n_devices
+        layouts[k] = eng.layout.name
+        engines.append((k, eng))
         return eng
 
     # Serpentine creation order: engine construction order measurably
     # biases performance (allocator state drifts over process lifetime),
-    # so instance 0 is built O0->O5, instance 1 O5->O0, and so on — no
-    # level systematically inherits the worst allocator state.
-    for k in range(instances):
-        order = ALL_LEVELS if k % 2 == 0 else tuple(reversed(ALL_LEVELS))
-        for lvl in order:
-            add_instance(lvl)
+    # so instance 0 is built O0->O6, instance 1 O6->O0, and so on — no
+    # variant systematically inherits the worst allocator state.
+    for i in range(instances):
+        order = keys if i % 2 == 0 else list(reversed(keys))
+        for k in order:
+            add_instance(k)
 
-    samples = {int(lvl): [] for lvl in ALL_LEVELS}
-    round_best = {int(lvl): [] for lvl in ALL_LEVELS}   # per-round minima
+    samples = {k: [] for k in keys}
+    round_best = {k: [] for k in keys}   # per-round minima
     ticks = {}
 
     def one_round():
         this_round = {}
-        for lvl, eng in engines:
+        for k, eng in engines:
             t_before = eng.n_steps
             wall, gen = run(eng)
-            assert gen == generated[int(lvl)], f"level {lvl}: nondeterminism"
-            samples[int(lvl)].append(wall)
-            k = int(lvl)
+            assert gen == generated[k], f"variant {k}: nondeterminism"
+            samples[k].append(wall)
             this_round[k] = min(this_round.get(k, wall), wall)
             ticks[k] = eng.n_steps - t_before
         for k, w in this_round.items():
@@ -140,56 +176,57 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         est = {k: sum(sorted(v)[:3]) / min(3, len(v))
                for k, v in pool.items()}
 
-        # Adjacent levels whose measured difference is statistically
+        # Adjacent variants whose measured difference is statistically
         # indistinguishable from round-to-round jitter are TIES: compare
         # the PAIRED per-round minima (same process epoch, so drift
         # cancels) and, when the median delta is inside the noise band
-        # (1.5 MADs, floored at 1%), give both levels the pooled floor.
+        # (1.5 MADs, floored at 1%), give both variants the pooled floor.
         # A real regression (beyond noise) is left standing and renders
         # as non-monotone — the harness never papers over mechanism.
         noise_ties.clear()
-        for k in range(1, len(ALL_LEVELS)):
-            if est[k] <= est[k - 1]:
+        for i in range(1, len(keys)):
+            k, prev = keys[i], keys[i - 1]
+            if est[k] <= est[prev]:
                 continue
-            n = min(len(round_best[k]), len(round_best[k - 1]))
-            deltas = sorted(round_best[k][i] - round_best[k - 1][i]
-                            for i in range(n))
+            n = min(len(round_best[k]), len(round_best[prev]))
+            deltas = sorted(round_best[k][j] - round_best[prev][j]
+                            for j in range(n))
             med = deltas[n // 2]
             mad = sorted(abs(d - med) for d in deltas)[n // 2]
-            if med <= max(1.5 * mad, 0.01 * est[k - 1]):
-                merged = sorted(pool[k] + pool[k - 1])
+            if med <= max(1.5 * mad, 0.01 * est[prev]):
+                merged = sorted(pool[k] + pool[prev])
                 tie = sum(merged[:3]) / min(3, len(merged))
-                est[k] = est[k - 1] = tie
-                noise_ties.append((k - 1, k))
+                est[k] = est[prev] = tie
+                noise_ties.append((prev, k))
         return est
 
     best = floors()
     extra = 0
     # Inversion escalation covers the MECHANISM rungs O0..O5 only: an
     # inversion there after the initial rounds is instance luck and more
-    # instances converge it away.  O5->O6 is excluded — the paged rung
-    # pays a real gather/scatter toll at equal capacity, so "slower than
-    # O5" is the expected reading, not luck, and chasing it would burn
-    # every extra round (and ~2 fresh jit compiles per round) for
-    # nothing; the rendered table explains the regression instead.
-    mono_top = min(5, len(ALL_LEVELS) - 1)
+    # instances converge it away.  O5->O6 (and the O6+pe composition row)
+    # is excluded — the paged rung pays a real gather/scatter toll at
+    # equal capacity, so "slower than O5" is the expected reading, not
+    # luck, and chasing it would burn every extra round (and ~2 fresh jit
+    # compiles per round) for nothing; the rendered table explains the
+    # regression instead.
+    mono_top = min(5, len(keys) - 1)
     while extra < max_extra_rounds and any(
             best[k] > best[k - 1] for k in range(1, mono_top + 1)):
         for k in range(1, mono_top + 1):
             if best[k] > best[k - 1]:
-                add_instance(ALL_LEVELS[k])
-                add_instance(ALL_LEVELS[k - 1])
+                add_instance(k)
+                add_instance(k - 1)
         one_round()
         best = floors()
         extra += 1
 
     tokens = sum(len(g) for g in generated[0])
     rows = []
-    for lvl in ALL_LEVELS:
-        k = int(lvl)
+    for i, k in enumerate(keys):
         rows.append({
-            "level": k,
-            "label": f"O{k}",
+            "level": min(k, 6),
+            "label": by_key[k][0],
             "stage": STAGES[k],
             "wall_s": best[k],
             "tok_per_s": tokens / best[k],
@@ -198,9 +235,11 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
             "tokens": tokens,
             "speedup_vs_o0": best[0] / best[k],
             "identical": generated[k] == generated[0],
-            "noise_tie_with_prev": (k - 1, k) in noise_ties,
+            "noise_tie_with_prev": i > 0 and (keys[i - 1], k) in noise_ties,
             "extra_rounds": extra,
             "kv_capacity": kv_capacity[k],
+            "layout": layouts[k],
+            "devices": devices_used[k],
         })
     return rows
 
@@ -302,8 +341,9 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
         "output-equivalence matrix).",
         "",
         "| level | serving stage (paper step) | tok/s | tick (ms) | "
-        "wall (s) | speedup vs O0 | KV capacity (tok) | identical tokens |",
-        "|---|---|---|---|---|---|---|---|",
+        "wall (s) | speedup vs O0 | KV capacity (tok) | devices | "
+        "identical tokens |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
         lines.append(
@@ -311,15 +351,17 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
             f"| {r['tick_ms']:.3f} | {r['wall_s']:.4f} "
             f"| {r['speedup_vs_o0']:.2f}x "
             f"| {r.get('kv_capacity', '-')} "
+            f"| {r.get('devices', 1)} "
             f"| {'yes' if r['identical'] else 'NO'} |")
     # The monotonicity contract covers the mechanism rungs O0..O5 only —
-    # the O6 capacity rung may legitimately pay a gather/scatter toll
-    # (the note below explains it), matching the harness's mono_top.
-    mtop = min(5, rows[-1]["level"])
+    # the O6 capacity rung (and the O6+pe composition row) may
+    # legitimately pay a gather/scatter toll (the note below explains
+    # it), matching the harness's mono_top.
+    mtop = min(5, len(rows) - 1)
     mono = all(rows[i]["tok_per_s"] >= rows[i - 1]["tok_per_s"]
                for i in range(1, mtop + 1))
-    ties = [f"O{r['level'] - 1}=O{r['level']}" for r in rows
-            if r.get("noise_tie_with_prev")]
+    ties = [f"{rows[i - 1]['label']}={rows[i]['label']}"
+            for i, r in enumerate(rows) if r.get("noise_tie_with_prev")]
     lines += [
         "",
         f"tok/s monotone non-decreasing O0->O{mtop}: "
@@ -336,6 +378,33 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
             " (auto-sized pool), so any delta vs O5 is the pure"
             " gather/scatter toll of block indirection; the rung's win is"
             " the capacity table below.",
+            "",
+            "## Layout x placement matrix",
+            "",
+            "Cache layout (contiguous vs paged, `serving/layout.py`) and",
+            "device placement (replicated vs PE-sharded,",
+            "`parallel/sharding.PlacementPlan`) are orthogonal layers —",
+            "every combination compiles a decode step, and greedy tokens",
+            "are bit-identical across all four cells (dist-tier oracle in",
+            "`tests/test_distributed.py`):",
+            "",
+            "| | replicated (pe=1 or 1 device) "
+            "| PE-sharded (pe>1, >=2 devices) |",
+            "|---|---|---|",
+            "| contiguous (O0-O5) | process-wide shared jitted step "
+            "| per-engine step; cache + tokens sharded on the batch axis |",
+            "| paged (O6) | per-engine step (pool geometry is part of the "
+            "program); gather -> decode -> scatter "
+            "| per-engine step; pool sharded on the BLOCK axis (rows "
+            "padded to a device multiple), block tables replicated, "
+            "gathered dense view re-sharded onto the batch axis |",
+            "",
+            "On a multi-device run every O3+ row shards (the `devices` "
+            "column shows the placement each engine actually landed "
+            "on), so the O6 row is the composed sharded-paged cell at "
+            "the SAME placement as O5, and the table gains the `O6pe1` "
+            "placement-ablation row — the same paged pool replicated — "
+            "measured by the same interleaved trimmed-min harness.",
         ]
     if capacity:
         c, p = capacity["contiguous"], capacity["paged"]
@@ -382,8 +451,9 @@ def main(arch: str = "qwen3-8b", write_md: bool = True, **kw):
         with open(MD_PATH, "w") as f:
             f.write(render_md(rows, arch, capacity) + "\n")
         write_trajectory(rows, arch)
-    out = [(f"serving_ladder_O{r['level']}", r["wall_s"] * 1e6,
+    out = [(f"serving_ladder_{r['label']}", r["wall_s"] * 1e6,
             f"{r['tok_per_s']:.0f}tok/s {r['speedup_vs_o0']:.2f}x "
+            f"{r['layout']}x{r['devices']}dev "
             f"identical={r['identical']}") for r in rows]
     cc = capacity["contiguous"]["peak_concurrency"]
     cp = capacity["paged"]["peak_concurrency"]

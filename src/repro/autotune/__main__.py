@@ -97,6 +97,9 @@ def main(argv=None) -> int:
         print(f"generated tokens identical across levels: {same}")
         caps = {m["level"]: m.get("kv_capacity") for m in levels}
         print(f"decode-cache capacity (token positions) per level: {caps}")
+        cells = {m["level"]: f"{m.get('layout')}x{m.get('devices')}dev"
+                 for m in levels}
+        print(f"layout x placement per level: {cells}")
         return 0 if same else 1
 
     if args.kernel:

@@ -406,7 +406,10 @@ class ServingBackend(CumulativeLadderState):
     paged-scratchpad rung (``top_level = O6``); ``meta['kv_capacity']``
     records each level's persistent decode-cache token capacity so the
     walk shows the paged rung's actual win (capacity at equal memory, not
-    raw tok/s).
+    raw tok/s), and ``meta['layout']`` / ``meta['devices']`` record each
+    rung's (cache layout, device count) cell — on a multi-device host the
+    O3+ rungs shard (including the paged pool on its block axis at O6;
+    layout and placement compose, see ``repro.serving.layout``).
     """
 
     top_level = OptLevel.O6
@@ -496,6 +499,8 @@ class ServingBackend(CumulativeLadderState):
                 "requests": self.n_requests,
                 "policy": self.policy,
                 "kv_capacity": kv_capacity,
+                "layout": engine.layout.name,
+                "devices": engine.placement.n_devices,
                 "generated": [[int(t) for t in g] for g in generated],
             },
         )

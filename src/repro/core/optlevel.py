@@ -158,6 +158,18 @@ class BestEffortConfig:
     def effective_pe(self) -> int:
         return self.pe if self.level.has(Step.PE_DUPLICATION) else 1
 
+    # Cache LAYOUT (contiguous vs paged) and device PLACEMENT (replicated
+    # vs PE-sharded, ``effective_pe``) are ORTHOGONAL serving axes, not
+    # alternatives: the ladder is cumulative, so O6 includes PE
+    # duplication, and a paged engine with effective_pe > 1 on >= 2
+    # devices shards the block pool instead of falling back (the paper's
+    # steps compose — see ``repro.serving.layout``).  No (layout,
+    # placement) combination is invalid.
+    @property
+    def kv_layout(self) -> str:
+        return ("paged" if self.level.has(Step.PAGED_SCRATCHPAD)
+                else "contiguous")
+
     @property
     def effective_buffers(self) -> int:
         return self.n_buffers if self.level.has(Step.DOUBLE_BUFFERING) else 1

@@ -9,6 +9,13 @@ On a real fleet the same driver builds the production mesh and the sharded
 reduced smoke config on the host device.  ``--level`` selects the
 OptLevel the engine is built at (see ``repro.serving``; 6 = paged KV
 blocks); walk all seven with ``python -m repro.autotune --serve``.
+
+Layout x placement: ``--pe`` sets the PE-duplication degree — on >= 2
+devices an O3+ engine shards (the contiguous cache on its batch axis;
+at ``--level 6`` the paged pool on its BLOCK axis).  Force host devices
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``;
+``--expect-devices`` turns the reported placement into an exit code for
+CI smoke jobs.
 """
 
 from __future__ import annotations
@@ -28,12 +35,16 @@ from repro.serving import DecodeEngine, Request, SamplerConfig
 def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                seed: int = 0, prompt_len=(2, 12), max_new=(4, 16),
                level: OptLevel = OptLevel.O5, policy: str = "fcfs",
-               sampler: SamplerConfig = None) -> dict:
+               sampler: SamplerConfig = None, pe: int = 8,
+               kv_block_size: int = 16, kv_pool_blocks: int = 0) -> dict:
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     engine = DecodeEngine(model, params, batch_size=batch_size,
                           max_seq=max_seq,
-                          config=BestEffortConfig(level=level),
+                          config=BestEffortConfig(
+                              level=level, pe=pe,
+                              kv_block_size=kv_block_size,
+                              kv_pool_blocks=kv_pool_blocks),
                           policy=policy, sampler=sampler)
 
     rng = np.random.default_rng(seed)
@@ -53,6 +64,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
         "wall_s": wall,
         "tokens": total_new,
         "tok_per_s": total_new / wall if wall > 0 else 0.0,
+        "layout": engine.layout.name,
+        "devices": engine.placement.n_devices,
     }
 
 
@@ -72,6 +85,16 @@ def main():
                     choices=("greedy", "temperature", "top_k"))
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--pe", type=int, default=8,
+                    help="PE duplication degree (O3+): shard degree over "
+                         "visible devices; degrades, never fails")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="O6 paged-cache block size in tokens")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="O6 pool size in blocks (0 = auto)")
+    ap.add_argument("--expect-devices", type=int, default=0,
+                    help="exit 1 unless the engine's placement landed on "
+                         "exactly this many devices (CI smoke)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -80,14 +103,22 @@ def main():
     out = serve_demo(cfg, batch_size=args.batch, max_seq=args.max_seq,
                      n_requests=args.requests, seed=args.seed,
                      level=OptLevel(args.level), policy=args.policy,
-                     sampler=sampler)
+                     sampler=sampler, pe=args.pe,
+                     kv_block_size=args.kv_block,
+                     kv_pool_blocks=args.kv_pool_blocks)
     for r in out["finished"][:4]:
         print(f"[serve] req {r.rid}: prompt[{r.n_prompt}] -> "
               f"{r.generated}")
-    print(f"[serve] O{args.level}/{args.policy}: "
+    print(f"[serve] O{args.level}/{args.policy} "
+          f"[{out['layout']} x {out['devices']} device(s)]: "
           f"{len(out['finished'])} requests, {out['tokens']} new "
           f"tokens in {out['ticks']} ticks / {out['wall_s']:.2f}s "
           f"({out['tok_per_s']:.1f} tok/s batched)")
+    if args.expect_devices and out["devices"] != args.expect_devices:
+        raise SystemExit(
+            f"placement landed on {out['devices']} device(s), expected "
+            f"{args.expect_devices} (XLA_FLAGS / --pe / batch "
+            f"divisibility?)")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,8 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -113,6 +115,107 @@ def make_rules(mesh: Mesh, *, fsdp_over_pod: bool = False) -> dict:
         "state": ("model",),
         "layers": (),
     }
+
+
+# --------------------------------------------------------------------------
+# PlacementPlan: the device-placement half of the serving engine's
+# layout x placement product.  Cache LAYOUT (contiguous vs paged KV
+# blocks, ``repro.serving.layout``) and device PLACEMENT (replicated vs
+# PE-sharded) are orthogonal refinement axes — the paper applies PE
+# duplication and scratchpad reorganization *together*, and AutoDSE-style
+# search needs the knob space to stay a product — so the plan is its own
+# object instead of a fork inside the engine.
+# --------------------------------------------------------------------------
+
+
+class PlacementPlan:
+    """Where the serving engine's arrays live: one data-parallel mesh
+    axis (or none).
+
+    ``mesh is None`` is the replicated plan — every helper degrades to a
+    no-op, so single-device engines pay nothing and callers never branch.
+    With a mesh, the helpers hand out the three sharding families the
+    decode step needs: ``replicated`` (params, block tables),
+    :meth:`axis` (one array axis over ``"data"`` — the batch axis of a
+    contiguous cache, the BLOCK axis of a paged pool), and the
+    per-tick token/position shardings.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None):
+        self.mesh = mesh
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def n_devices(self) -> int:
+        return 1 if self.mesh is None else int(self.mesh.devices.size)
+
+    # -- sharding constructors (None when unsharded) -------------------------
+    @property
+    def replicated(self) -> Optional[NamedSharding]:
+        return None if self.mesh is None else NamedSharding(self.mesh, P())
+
+    def axis(self, ax: int) -> Optional[NamedSharding]:
+        """Shard one array axis over the data mesh axis."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*([None] * ax + ["data"])))
+
+    def token_shardings(self):
+        """(tokens (B, 1), positions/seeds (B,)) shardings for the step."""
+        if self.mesh is None:
+            return None, None
+        return (NamedSharding(self.mesh, P("data", None)),
+                NamedSharding(self.mesh, P("data")))
+
+    def cache_shardings(self, model, batch_size: int, max_seq: int):
+        """Batch-axis shardings for a CONTIGUOUS per-slot cache tree
+        (every leaf sharded on its logical ``batch`` axis)."""
+        if self.mesh is None:
+            return None
+        sharder = Sharder(self.mesh, {"batch": ("data",)})
+        return sharder.tree_shardings(model.cache_axes(),
+                                      model.cache_spec(batch_size, max_seq))
+
+    # -- placement application ----------------------------------------------
+    def put_replicated(self, tree):
+        """Replicate a pytree across the plan's devices (identity when
+        unsharded)."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, self.replicated)
+
+    def constrain_axis(self, leaf, ax: int):
+        """In-graph re-shard of ``leaf`` on axis ``ax`` (identity when
+        unsharded) — how the paged step turns its gathered dense view
+        into a batch-sharded one so the model runs PE-duplicated."""
+        if self.mesh is None:
+            return leaf
+        return jax.lax.with_sharding_constraint(leaf, self.axis(ax))
+
+
+def plan_pe_placement(config, batch_size: int,
+                      devices=None) -> PlacementPlan:
+    """Build the engine's :class:`PlacementPlan` from its config.
+
+    PE duplication degrades, never fails (the repo-wide best-effort
+    contract): ``pe`` is clipped to the visible devices, then reduced
+    until the batch divides it; anything that lands at 1 returns the
+    replicated plan.  The same plan serves both cache layouts — the
+    layout object decides WHICH axis each array shards on.
+    """
+    pe = config.effective_pe
+    if pe <= 1:
+        return PlacementPlan()
+    devs = list(devices) if devices is not None else jax.devices()
+    n = min(pe, len(devs))
+    while n > 1 and batch_size % n:
+        n -= 1
+    if n <= 1:
+        return PlacementPlan()
+    return PlacementPlan(Mesh(np.asarray(devs[:n]), ("data",)))
 
 
 # --------------------------------------------------------------------------

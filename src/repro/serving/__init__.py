@@ -5,12 +5,20 @@ One class per paper step — ``scheduler`` (admission + slots),
 sample-in-graph), ``overlap`` (host/device double buffering) — assembled
 by ``engine.DecodeEngine`` at any ``OptLevel`` and tuned end-to-end by
 ``python -m repro.autotune --serve``.
+
+Cache layout and device placement are orthogonal strategy layers:
+``layout.KVLayout`` (``ContiguousLayout`` / ``PagedLayout``) owns how
+the decode cache is stored, ``parallel.sharding.PlacementPlan`` owns
+where it lives, and every (layout, placement) combination compiles a
+decode step — including the block-axis-sharded paged pool (O3 x O6).
 """
 
 from repro.serving.cache import CacheManager            # noqa: F401
 from repro.serving.engine import DecodeEngine            # noqa: F401
+from repro.serving.layout import (                       # noqa: F401
+    ContiguousLayout, KVLayout, PagedLayout, select_layout)
 from repro.serving.overlap import HostOverlap, TickBuffers  # noqa: F401
 from repro.serving.paged import (                        # noqa: F401
-    BlockAllocator, PagedAllocator, PagedCacheManager)
+    BlockAllocator, BlockPagingPlan, PagedAllocator, PagedCacheManager)
 from repro.serving.sampler import SamplerConfig, make_sampler  # noqa: F401
 from repro.serving.scheduler import Request, Scheduler, Slot  # noqa: F401

@@ -70,6 +70,13 @@ class CacheManager:
         reservation the paged manager's block pool replaces)."""
         return self.B * self.max_seq
 
+    def step_extras(self) -> tuple:
+        """Per-tick step inputs beyond (params, cache, tokens, positions,
+        seeds).  The contiguous step needs none; the paged manager
+        returns its block tables here — the hook that keeps the engine's
+        dispatch path layout-blind."""
+        return ()
+
     def _find_batch_axes(self) -> list:
         axes_tree = self.model.cache_axes()
         leaves_axes = jax.tree.leaves(

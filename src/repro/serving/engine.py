@@ -12,9 +12,11 @@ real, independently toggleable stage keyed by ``BestEffortConfig.level``:
                          weights; O0/O1 run the un-pipelined loop — one
                          batch-1 model call per request per tick, host-side
                          sampling over that request's full-vocab logits.
-  O3 PE duplication    — batch-axis sharding of cache + step across
-                         devices when ``config.effective_pe > 1``
-                         (``parallel.sharding`` on a 1-D data mesh).
+  O3 PE duplication    — sharding across devices when
+                         ``config.effective_pe > 1``
+                         (``parallel.sharding.PlacementPlan`` on a 1-D
+                         data mesh): the contiguous cache on its batch
+                         axis, the paged pool on its BLOCK axis.
   O4 double buffering  — host prestages next tick's token/position buffers
                          while the device runs this tick (``overlap``).
   O5 scratchpad reorg  — packed slot admission: all slots admitted in a
@@ -25,6 +27,13 @@ real, independently toggleable stage keyed by ``BestEffortConfig.level``:
                          gathers each slot's dense view from the pool and
                          scatters back the one block it wrote.  Admission
                          is gated on free blocks (queue, never reject).
+
+Cache LAYOUT (contiguous vs paged, ``serving.layout.KVLayout``) and
+device PLACEMENT (replicated vs PE-sharded,
+``parallel.sharding.PlacementPlan``) are two orthogonal strategy objects
+selected here once — the engine itself never branches on them again, so
+O3 x O6 compose (a paged engine with ``effective_pe > 1`` on >= 2
+devices runs a block-axis-sharded step) instead of excluding each other.
 
 Unified prefill/decode: every step feeds one token per active slot — a
 slot still consuming its prompt feeds the next prompt token (its logits
@@ -40,107 +49,17 @@ and overlap together under one config.
 
 from __future__ import annotations
 
-import collections
 from typing import Optional
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core.optlevel import BestEffortConfig, OptLevel, Step
-from repro.serving.cache import CacheManager
+from repro.parallel.sharding import plan_pe_placement
+from repro.serving.layout import select_layout, shared_steps
 from repro.serving.overlap import HostOverlap
-from repro.serving.paged import PagedCacheManager
-from repro.serving.sampler import SamplerConfig, make_sampler
+from repro.serving.sampler import SamplerConfig
 from repro.serving.scheduler import Request, Scheduler
-
-
-def _last_logits(logits):
-    """(B, V) or (B, 1, V) -> (B, V): the newest position's logits."""
-    if logits.ndim == 3:
-        return logits[:, -1, :]
-    return logits
-
-
-def _make_fused(model, sample):
-    """The batched fused decode+sample step (O2+); one definition shared
-    by the jit-cached path and the sharded-jit path so they can never
-    drift apart."""
-    def _fused(params, cache, tokens, positions, seeds):
-        logits, new_cache = model.decode_step(
-            params, cache, tokens, positions)
-        return sample(_last_logits(logits), seeds), new_cache
-
-    return _fused
-
-
-def _make_paged_fused(model, sample, layout):
-    """The O6 step: block-table gather -> the SAME decode_step the dense
-    rungs run -> single-block scatter.  The dense view the model sees is
-    bit-identical at every unmasked position (see ``paged`` docstring),
-    so greedy tokens cannot drift from the contiguous path."""
-    def _fused(params, pool, tables, tokens, positions, seeds):
-        dense = layout.gather(pool, tables)
-        logits, new_dense = model.decode_step(
-            params, dense, tokens, positions)
-        toks = sample(_last_logits(logits), seeds)
-        return toks, layout.scatter(pool, tables, new_dense, positions)
-
-    return _fused
-
-
-# Jitted step functions are shared across engines of the same
-# (model, sampler, fusion mode): every level from O2 up runs the *same*
-# compiled decode program, so measured differences between ladder rungs
-# come from the host-side mechanics each rung actually changes, not from
-# per-engine jit-instance luck.  (Sharded O3+ engines build their own
-# step: shardings are part of the program.)  LRU-bounded: each entry pins
-# its model (the id() key must stay valid) and three compiled
-# executables, so an unbounded cache would leak in any process that
-# keeps constructing models.
-_STEP_CACHE = collections.OrderedDict()
-_STEP_CACHE_MAX = 8
-
-
-def _shared_steps(model, sampler_cfg):
-    key = (id(model), sampler_cfg)
-    if key in _STEP_CACHE:
-        _STEP_CACHE.move_to_end(key)
-    else:
-        sample = make_sampler(sampler_cfg)
-        axes_tree = model.cache_axes()
-        leaves_axes = jax.tree.leaves(
-            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
-        batch_axes = [ax.index("batch") for ax in leaves_axes]
-
-        def _single(params, cache, token, position, islot):
-            """One request's decode step: slice slot ``islot``'s cache
-            rows, run a batch-1 model step, write the rows back.  The
-            un-pipelined serving loop — each request pays its own model
-            call (and its own pass over the weights)."""
-            leaves, treedef = jax.tree.flatten(cache)
-            row = jax.tree.unflatten(treedef, [
-                jax.lax.dynamic_slice_in_dim(leaf, islot, 1, axis=bax)
-                for leaf, bax in zip(leaves, batch_axes)])
-            logits, new_row = model.decode_step(
-                params, row, token[None, None], position[None])
-            row_leaves = jax.tree.leaves(new_row)
-            new_cache = jax.tree.unflatten(treedef, [
-                jax.lax.dynamic_update_slice_in_dim(leaf, new, islot,
-                                                    axis=bax)
-                for leaf, new, bax in zip(leaves, row_leaves, batch_axes)])
-            return _last_logits(logits)[0], new_cache
-
-        _STEP_CACHE[key] = {
-            "model": model,   # keep the model alive while its id is a key
-            "fused": jax.jit(_make_fused(model, sample),
-                             donate_argnums=(1,)),
-            "single": jax.jit(_single, donate_argnums=(1,)),
-            "sample": jax.jit(sample),
-        }
-        if len(_STEP_CACHE) > _STEP_CACHE_MAX:
-            _STEP_CACHE.popitem(last=False)
-    return _STEP_CACHE[key]
 
 
 class DecodeEngine:
@@ -158,12 +77,11 @@ class DecodeEngine:
         self.scheduler = Scheduler(batch_size, max_seq, policy=policy)
         self.n_steps = 0
 
-        # O6: paged KV blocks.  The pool's leading axis is blocks, not
-        # slots, so the O3 batch-axis sharding plan does not apply
-        # (block-axis sharding of the pool is future work) — paged
-        # engines always build the unsharded paged step.
-        self._paged = self.level.has(Step.PAGED_SCRATCHPAD)
-        if self._paged and step_fn is not None:
+        # The two orthogonal serving axes, as strategy objects: cache
+        # layout (contiguous O0..O5 / paged O6) and device placement
+        # (replicated / PE-sharded).  Every combination compiles a step.
+        self.layout = select_layout(self.config)
+        if step_fn is not None and not self.layout.supports_step_fn:
             # A caller-supplied fused step has no block-table argument;
             # silently falling back to the contiguous cache would let an
             # operator believe they are measuring the paged rung.
@@ -171,52 +89,20 @@ class DecodeEngine:
                 "step_fn is incompatible with the paged O6 cache (the "
                 "jitted step must thread block tables); build the engine "
                 "at O5 or drop step_fn")
-
-        # O3: PE duplication = batch-axis sharding across devices.
-        self._shardings = None if self._paged else self._plan_pe_sharding()
-        cache_sh = tok_sh = pos_sh = None
-        if self._shardings is not None:
-            cache_sh, tok_sh, pos_sh = self._shardings
-            params = jax.device_put(params, self._repl)
-        self.params = params
-        if self._paged:
-            self.cache_mgr = PagedCacheManager(
-                model, batch_size, max_seq,
-                block_size=self.config.kv_block_size,
-                pool_blocks=self.config.kv_pool_blocks)
-            # The scheduler drives the block lifecycle: admission is
-            # gated on free blocks (a request that fits max_seq but not
-            # the pool queues), admit allocates the reservation, retire
-            # returns it before the next admission wave.
-            self.scheduler.admission_gate = self.cache_mgr.can_admit
-            self.scheduler.on_admit = self.cache_mgr.admit_slot
-            self.scheduler.on_retire = self.cache_mgr.release_slot
-        else:
-            self.cache_mgr = CacheManager(model, batch_size, max_seq,
-                                          self.level, shardings=cache_sh)
+        self.placement = plan_pe_placement(self.config, batch_size)
+        self.params = self.placement.put_replicated(params)
+        self.cache_mgr = self.layout.build_manager(
+            model, batch_size, max_seq, self.config, self.placement)
+        self.layout.wire_scheduler(self.scheduler, self.cache_mgr)
 
         self._fused = self.level.has(Step.PIPELINING) or step_fn is not None
         if step_fn is not None:
             # Back-compat hook: a caller-supplied fused step
             # (params, cache, tokens, positions) -> (tokens, cache).
             self._step_fn = lambda p, c, t, pos, seeds: step_fn(p, c, t, pos)
-        elif self._paged:
-            # Pool geometry is part of the program, so each paged engine
-            # compiles its own step (like the sharded path).
-            self._step_fn = jax.jit(
-                _make_paged_fused(model, make_sampler(self.sampler_cfg),
-                                  self.cache_mgr.layout),
-                donate_argnums=(1,))
-        elif self._shardings is not None:
-            # Sharded PE duplication: shardings are part of the program,
-            # so this engine compiles its own instance of the fused step.
-            self._step_fn = jax.jit(
-                _make_fused(model, make_sampler(self.sampler_cfg)),
-                donate_argnums=(1,),
-                in_shardings=(self._repl, cache_sh, tok_sh, pos_sh, pos_sh),
-                out_shardings=(pos_sh, cache_sh))
         elif self._fused:
-            self._step_fn = _shared_steps(model, self.sampler_cfg)["fused"]
+            self._step_fn = self.layout.make_step(
+                model, self.sampler_cfg, self.cache_mgr, self.placement)
         else:
             # O0/O1: the un-pipelined serving loop — each active request
             # runs its OWN batch-1 model call per tick (every request pays
@@ -225,7 +111,7 @@ class DecodeEngine:
             # the host over the request's transferred logits; stochastic
             # kinds run as a separate device dispatch (host RNG would
             # diverge from the fused path's bits).
-            shared = _shared_steps(model, self.sampler_cfg)
+            shared = shared_steps(model, self.sampler_cfg)
             self._single_fn = shared["single"]
             self._sample_fn = shared["sample"]
             self._host_greedy = not self.sampler_cfg.stochastic
@@ -237,32 +123,6 @@ class DecodeEngine:
                                      self.config.effective_buffers)
                          if self.level.has(Step.DOUBLE_BUFFERING) else None)
         self._pending = None        # (toks_future, emissions) of last tick
-
-    # -- PE duplication -------------------------------------------------------
-    def _plan_pe_sharding(self):
-        """Shard the batch axis of cache/tokens/positions over a 1-D mesh
-        of min(pe, devices) when the level enables PE duplication."""
-        pe = self.config.effective_pe
-        if pe <= 1:
-            return None
-        devs = jax.devices()
-        n = min(pe, len(devs))
-        while n > 1 and self.B % n:
-            n -= 1
-        if n <= 1:
-            return None
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-        from repro.parallel.sharding import Sharder
-
-        mesh = Mesh(np.asarray(devs[:n]), ("data",))
-        sharder = Sharder(mesh, {"batch": ("data",)})
-        cache_specs = self.model.cache_spec(self.B, self.max_seq)
-        cache_sh = sharder.tree_shardings(self.model.cache_axes(),
-                                          cache_specs)
-        tok_sh = NamedSharding(mesh, P("data", None))
-        pos_sh = NamedSharding(mesh, P("data"))
-        self._repl = NamedSharding(mesh, P())
-        return cache_sh, tok_sh, pos_sh
 
     # -- public API -----------------------------------------------------------
     @property
@@ -292,20 +152,17 @@ class DecodeEngine:
 
     def _dispatch(self, tokens_np, positions_np, seeds_np):
         """Run the batched fused device step; returns the (possibly still
-        in-flight) sampled tokens and installs the new cache.  The paged
-        step additionally threads the current block tables through the
-        graph (values change at admission; the (B, nb) shape never does,
-        so there is no retrace)."""
-        if self._paged:
-            toks_dev, new_cache = self._step_fn(
-                self.params, self.cache_mgr.cache,
-                jnp.asarray(self.cache_mgr.tables),
-                jnp.asarray(tokens_np), jnp.asarray(positions_np),
-                jnp.asarray(seeds_np))
-        else:
-            toks_dev, new_cache = self._step_fn(
-                self.params, self.cache_mgr.cache, jnp.asarray(tokens_np),
-                jnp.asarray(positions_np), jnp.asarray(seeds_np))
+        in-flight) sampled tokens and installs the new cache.  The
+        manager's ``step_extras()`` supplies any layout-specific step
+        inputs — the paged manager's cached device block tables
+        (invalidated at admission/retirement; the (B, nb) shape never
+        changes, so there is no retrace) — keeping this path
+        layout-blind."""
+        toks_dev, new_cache = self._step_fn(
+            self.params, self.cache_mgr.cache,
+            *self.cache_mgr.step_extras(),
+            jnp.asarray(tokens_np), jnp.asarray(positions_np),
+            jnp.asarray(seeds_np))
         self.cache_mgr.cache = new_cache
         self.n_steps += 1
         return toks_dev

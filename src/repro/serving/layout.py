@@ -1,0 +1,296 @@
+"""KVLayout: the cache-LAYOUT half of the serving engine's
+layout x placement product.
+
+The paper's whole point is that refinement steps COMPOSE — PE
+duplication (step 3) and scratchpad reorganization (step 5) are applied
+together, not as alternatives — and AutoDSE-style search needs the knob
+space to stay a product of independent axes.  So the engine selects two
+orthogonal strategy objects instead of forking on ``if paged``:
+
+  * :class:`KVLayout` (this module) — HOW the decode cache is stored:
+    :class:`ContiguousLayout` (one ``batch x max_seq`` slice per slot,
+    O0..O5) or :class:`PagedLayout` (a pooled KV-block scratchpad with
+    per-request block tables, O6).  The layout owns cache-manager
+    construction, scheduler wiring (admission gates for the block pool)
+    and the step-wrapping that used to be inlined in the engine as
+    ``_make_fused`` / ``_make_paged_fused``.
+  * :class:`repro.parallel.sharding.PlacementPlan` — WHERE the arrays
+    live: replicated, or PE-sharded over a 1-D data mesh.
+
+Every (layout, placement) cell compiles a decode step:
+
+  contiguous x replicated  — the process-wide shared jitted step
+  contiguous x sharded     — per-engine step; cache/tokens sharded on
+                             the batch axis (classic O3)
+  paged      x replicated  — per-engine step (pool geometry is part of
+                             the program); gather -> decode -> scatter
+  paged      x sharded     — per-engine step; the pool is sharded on the
+                             BLOCK axis (rows padded to a device
+                             multiple), block tables replicated, and the
+                             gathered dense view is re-sharded onto the
+                             batch axis so the model itself runs
+                             PE-duplicated (O3 x O6 composed)
+
+Greedy tokens are bit-identical across all four cells: sharding touches
+only non-contraction axes (batch, pool rows), so no reduction is ever
+split — the same oracle the O0..O6 ladder tests pin.
+
+The shared step cache here is weakref-keyed: entries hold the model only
+through a weak proxy and are evicted the moment the model dies, so a
+process that keeps constructing engines never pins dead models (the old
+``id(model)``-keyed cache did, until LRU churn).
+"""
+
+from __future__ import annotations
+
+import collections
+import weakref
+
+import jax
+
+from repro.core.optlevel import BestEffortConfig
+from repro.serving.cache import CacheManager
+from repro.serving.paged import PagedCacheManager
+from repro.serving.sampler import make_sampler
+
+
+def _last_logits(logits):
+    """(B, V) or (B, 1, V) -> (B, V): the newest position's logits."""
+    if logits.ndim == 3:
+        return logits[:, -1, :]
+    return logits
+
+
+def make_fused(model, sample):
+    """The batched fused decode+sample step (contiguous O2+); one
+    definition shared by the replicated and the PE-sharded instantiation
+    so they can never drift apart."""
+    def _fused(params, cache, tokens, positions, seeds):
+        logits, new_cache = model.decode_step(
+            params, cache, tokens, positions)
+        return sample(_last_logits(logits), seeds), new_cache
+
+    return _fused
+
+
+def make_paged_fused(model, sample, plan, constrain=None):
+    """The paged step: block-table gather -> the SAME ``decode_step`` the
+    dense rungs run -> single-block scatter.  The dense view the model
+    sees is bit-identical at every unmasked position (see ``paged``
+    docstring), so greedy tokens cannot drift from the contiguous path.
+
+    ``constrain`` (from the sharded placement) re-shards the gathered
+    dense view onto the batch axis in-graph, so under a mesh the model
+    body runs PE-duplicated while the pool stays block-sharded.
+    """
+    def _fused(params, pool, tables, tokens, positions, seeds):
+        dense = plan.gather(pool, tables)
+        if constrain is not None:
+            dense = plan.map_batch_axes(dense, constrain)
+        logits, new_dense = model.decode_step(
+            params, dense, tokens, positions)
+        toks = sample(_last_logits(logits), seeds)
+        return toks, plan.scatter(pool, tables, new_dense, positions)
+
+    return _fused
+
+
+# ---------------------------------------------------------------------------
+# Shared jitted steps (contiguous, replicated) — weakref-keyed.
+# ---------------------------------------------------------------------------
+
+# Jitted step functions are shared across engines of the same
+# (model, sampler, fusion mode): every replicated contiguous level from
+# O2 up runs the *same* compiled decode program, so measured differences
+# between ladder rungs come from the host-side mechanics each rung
+# actually changes, not from per-engine jit-instance luck.  (Sharded and
+# paged engines build their own step: shardings and pool geometry are
+# part of the program.)  Entries reference the model only through a weak
+# proxy and a ``weakref.finalize`` evicts them when the model dies, so
+# the cache never outlives its models; the LRU bound stays as a backstop
+# against many live models.
+_STEP_CACHE = collections.OrderedDict()
+_STEP_CACHE_MAX = 8
+
+
+class _WeakModel:
+    """Attribute proxy holding the model weakly.  The jitted closures
+    resolve it at trace time only (some engine is mid-construction or
+    mid-retrace, so the model is alive); once compiled, the executable
+    needs no model at all."""
+
+    __slots__ = ("_ref",)
+
+    def __init__(self, model):
+        self._ref = weakref.ref(model)
+
+    def __getattr__(self, name):
+        model = self._ref()
+        if model is None:
+            raise ReferenceError(
+                "shared decode step retraced after its model was "
+                "garbage-collected (the owning engine must outlive "
+                "retraces)")
+        return getattr(model, name)
+
+
+def shared_steps(model, sampler_cfg):
+    key = (id(model), sampler_cfg)
+    if key in _STEP_CACHE:
+        _STEP_CACHE.move_to_end(key)
+        return _STEP_CACHE[key]
+
+    sample = make_sampler(sampler_cfg)
+    axes_tree = model.cache_axes()
+    leaves_axes = jax.tree.leaves(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    batch_axes = [ax.index("batch") for ax in leaves_axes]
+    weak = _WeakModel(model)
+
+    def _single(params, cache, token, position, islot):
+        """One request's decode step: slice slot ``islot``'s cache rows,
+        run a batch-1 model step, write the rows back.  The un-pipelined
+        serving loop — each request pays its own model call (and its own
+        pass over the weights)."""
+        leaves, treedef = jax.tree.flatten(cache)
+        row = jax.tree.unflatten(treedef, [
+            jax.lax.dynamic_slice_in_dim(leaf, islot, 1, axis=bax)
+            for leaf, bax in zip(leaves, batch_axes)])
+        logits, new_row = weak.decode_step(
+            params, row, token[None, None], position[None])
+        row_leaves = jax.tree.leaves(new_row)
+        new_cache = jax.tree.unflatten(treedef, [
+            jax.lax.dynamic_update_slice_in_dim(leaf, new, islot, axis=bax)
+            for leaf, new, bax in zip(leaves, row_leaves, batch_axes)])
+        return _last_logits(logits)[0], new_cache
+
+    _STEP_CACHE[key] = {
+        "fused": jax.jit(make_fused(weak, sample), donate_argnums=(1,)),
+        "single": jax.jit(_single, donate_argnums=(1,)),
+        "sample": jax.jit(sample),
+    }
+    # Evict on model death (runs at deallocation, before the id can be
+    # recycled, so a stale entry can never alias a new model).
+    weakref.finalize(model, _STEP_CACHE.pop, key, None)
+    if len(_STEP_CACHE) > _STEP_CACHE_MAX:
+        _STEP_CACHE.popitem(last=False)
+    return _STEP_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# The layout protocol + its two implementations.
+# ---------------------------------------------------------------------------
+
+
+class KVLayout:
+    """Strategy protocol for the decode-cache layout.
+
+    ``name``              — "contiguous" / "paged" (mirrors
+                            ``BestEffortConfig.kv_layout``).
+    ``supports_step_fn``  — whether a caller-supplied fused step can
+                            drive this layout (the paged step needs the
+                            block-table argument, so it cannot).
+    ``build_manager``     — construct the cache manager, already placed
+                            per the :class:`PlacementPlan`.
+    ``wire_scheduler``    — attach admission gate / lifecycle hooks.
+    ``make_step``         — the jitted fused decode+sample step for
+                            (this layout) x (this placement).
+
+    The engine holds one of each and never branches on layout again; the
+    extra per-tick step inputs (block tables) come from the manager's
+    ``step_extras()`` so the dispatch path is layout-blind too.
+    """
+
+    name: str = "?"
+    supports_step_fn: bool = False
+
+    def build_manager(self, model, batch_size, max_seq, config, placement):
+        raise NotImplementedError
+
+    def wire_scheduler(self, scheduler, manager) -> None:
+        pass
+
+    def make_step(self, model, sampler_cfg, manager, placement):
+        raise NotImplementedError
+
+
+class ContiguousLayout(KVLayout):
+    """One ``batch x max_seq`` cache slice per slot (rungs O0..O5).
+    Placement shards every leaf on its batch axis."""
+
+    name = "contiguous"
+    supports_step_fn = True
+
+    def build_manager(self, model, batch_size, max_seq,
+                      config: BestEffortConfig, placement):
+        return CacheManager(
+            model, batch_size, max_seq, config.level,
+            shardings=placement.cache_shardings(model, batch_size, max_seq))
+
+    def make_step(self, model, sampler_cfg, manager, placement):
+        if not placement.sharded:
+            return shared_steps(model, sampler_cfg)["fused"]
+        # Sharded PE duplication: shardings are part of the program, so
+        # this engine compiles its own instance of the fused step.
+        tok_sh, pos_sh = placement.token_shardings()
+        return jax.jit(
+            make_fused(model, make_sampler(sampler_cfg)),
+            donate_argnums=(1,),
+            in_shardings=(placement.replicated, manager.shardings,
+                          tok_sh, pos_sh, pos_sh),
+            out_shardings=(pos_sh, manager.shardings))
+
+
+class PagedLayout(KVLayout):
+    """Pooled KV-block scratchpad with per-request block tables (O6).
+
+    Placement shards the POOL on its block axis (the pool's leading
+    rows, padded up to a device multiple at construction) while block
+    tables stay replicated; inside the step the gathered per-slot dense
+    view is re-sharded onto the batch axis so the model body runs
+    PE-duplicated exactly like the contiguous O3 path — layout and
+    placement compose instead of excluding each other.
+    """
+
+    name = "paged"
+    supports_step_fn = False
+
+    def build_manager(self, model, batch_size, max_seq,
+                      config: BestEffortConfig, placement):
+        return PagedCacheManager(
+            model, batch_size, max_seq,
+            block_size=config.kv_block_size,
+            pool_blocks=config.kv_pool_blocks,
+            placement=placement)
+
+    def wire_scheduler(self, scheduler, manager) -> None:
+        # The scheduler drives the block lifecycle: admission is gated
+        # on free blocks (a request that fits max_seq but not the pool
+        # queues), admit allocates the reservation, retire returns it
+        # before the next admission wave.
+        scheduler.admission_gate = manager.can_admit
+        scheduler.on_admit = manager.admit_slot
+        scheduler.on_retire = manager.release_slot
+
+    def make_step(self, model, sampler_cfg, manager, placement):
+        # Pool geometry (and any shardings) are part of the program, so
+        # each paged engine compiles its own step.
+        fused = make_paged_fused(
+            model, make_sampler(sampler_cfg), manager.plan,
+            constrain=placement.constrain_axis if placement.sharded
+            else None)
+        if not placement.sharded:
+            return jax.jit(fused, donate_argnums=(1,))
+        pool_sh = manager.pool_shardings(placement)
+        tok_sh, pos_sh = placement.token_shardings()
+        repl = placement.replicated
+        return jax.jit(
+            fused, donate_argnums=(1,),
+            in_shardings=(repl, pool_sh, repl, tok_sh, pos_sh, pos_sh),
+            out_shardings=(pos_sh, pool_sh))
+
+
+def select_layout(config: BestEffortConfig) -> KVLayout:
+    """The layout axis of the config, as a strategy object."""
+    return PagedLayout() if config.kv_layout == "paged" \
+        else ContiguousLayout()

@@ -210,7 +210,7 @@ def _axes_leaves_with_paths(tree, prefix=()):
     return out
 
 
-class PagedLayout:
+class BlockPagingPlan:
     """Per-leaf paging plan derived from the model's ``cache_axes()``.
 
     A leaf is paged iff its logical axes name both "batch" and "kv_seq",
@@ -227,12 +227,16 @@ class PagedLayout:
     """
 
     def __init__(self, model, batch_size: int, max_seq: int,
-                 block_size: int, pool_blocks: int):
+                 block_size: int, pool_blocks: int, *,
+                 row_multiple: int = 1):
         self.B = batch_size
         self.max_seq = max_seq
         self.T = block_size
         self.nb = blocks_for(max_seq, block_size)
-        self.pool_rows = pool_blocks + 1            # + NULL block row
+        # + NULL block row; rounded up so a block-axis PlacementPlan can
+        # shard the rows evenly (padding rows are never in any table, so
+        # gather/scatter never touch them — pure dead memory).
+        self.pool_rows = -(-(pool_blocks + 1) // row_multiple) * row_multiple
         axes_tree = model.cache_axes()
         paths_axes = _axes_leaves_with_paths(axes_tree)
         axes_flat = jax.tree.leaves(axes_tree,
@@ -267,6 +271,14 @@ class PagedLayout:
             shape[bax + 1] = self.T
             out.append(jnp.zeros(tuple(shape), leaf.dtype))
         return jax.tree.unflatten(treedef, out), treedef
+
+    def map_batch_axes(self, dense, fn):
+        """Apply ``fn(leaf, batch_axis)`` to every leaf of a DENSE
+        per-slot view (as produced by :meth:`gather`) — how the sharded
+        paged step re-constrains the view onto the batch axis."""
+        leaves, treedef = jax.tree.flatten(dense)
+        return jax.tree.unflatten(treedef, [
+            fn(leaf, bax) for leaf, (bax, _) in zip(leaves, self.plans)])
 
     # Both halves below are traced inside the jitted decode step.
     def gather(self, pool, tables):
@@ -316,24 +328,68 @@ class PagedCacheManager(PagedAllocator):
     """Block-pooled drop-in for ``cache.CacheManager`` at O6.
 
     Same engine-facing surface — ``.cache`` (the pool tree),
-    ``reset_slots(indices, live)`` — plus the allocator lifecycle the
-    scheduler drives through its ``admission_gate`` / ``on_admit`` /
-    ``on_retire`` hooks.  Slot admission allocates the request's whole
-    reservation (so ``reset_slots`` has nothing left to do: stale block
-    contents are masked, not zeroed — see the module docstring), and
-    retirement returns the blocks before the next admission wave runs.
+    ``reset_slots(indices, live)``, ``step_extras()`` — plus the
+    allocator lifecycle the scheduler drives through its
+    ``admission_gate`` / ``on_admit`` / ``on_retire`` hooks.  Slot
+    admission allocates the request's whole reservation (so
+    ``reset_slots`` has nothing left to do: stale block contents are
+    masked, not zeroed — see the module docstring), and retirement
+    returns the blocks before the next admission wave runs.
+
+    Under a sharded :class:`~repro.parallel.sharding.PlacementPlan` the
+    pool leaves are sharded on their BLOCK axis (rows padded to a device
+    multiple by the plan) and the recurrent-state leaves on their batch
+    axis; block tables stay replicated.
     """
 
     def __init__(self, model, batch_size: int, max_seq: int, *,
                  block_size: int = 16, pool_blocks: int = 0,
-                 defrag: bool = False):
+                 defrag: bool = False, placement=None):
         super().__init__(batch_size, max_seq, block_size=block_size,
                          pool_blocks=pool_blocks, defrag=defrag)
         self.model = model
-        self.layout = PagedLayout(model, batch_size, max_seq,
-                                  self.block_size, self.pool_blocks)
-        self.cache, self._treedef = self.layout.init_pool(model)
+        self.placement = placement
+        self.plan = BlockPagingPlan(
+            model, batch_size, max_seq, self.block_size, self.pool_blocks,
+            row_multiple=placement.n_devices if placement is not None else 1)
+        self.cache, self._treedef = self.plan.init_pool(model)
+        if placement is not None and placement.sharded:
+            self.cache = jax.device_put(self.cache,
+                                        self.pool_shardings(placement))
         self._state_zero = None
+        self._tables_dev = None     # cached device copy of the tables
+
+    # -- step inputs ---------------------------------------------------------
+    def pool_shardings(self, placement):
+        """Sharding tree for the pool: every leaf sharded at its plan
+        axis — the pool-row axis for paged leaves, the batch axis for
+        recurrent-state leaves (both sit at ``bax``)."""
+        leaves = jax.tree.leaves(self.cache)
+        return jax.tree.unflatten(self._treedef, [
+            placement.axis(bax)
+            for _leaf, (bax, _p) in zip(leaves, self.plan.plans)])
+
+    def step_extras(self) -> tuple:
+        """Per-tick step inputs beyond (params, cache, tokens, positions,
+        seeds): the block tables, as a CACHED device array.  Tables only
+        change at admission/retirement/compaction — those paths
+        invalidate — so steady-state decode ticks re-use one upload
+        instead of paying a host->device transfer per tick."""
+        if self._tables_dev is None:
+            if self.placement is not None and self.placement.sharded:
+                self._tables_dev = jax.device_put(
+                    self.tables, self.placement.replicated)
+            else:
+                self._tables_dev = jnp.asarray(self.tables)
+        return (self._tables_dev,)
+
+    def admit_slot(self, i: int, req) -> None:
+        super().admit_slot(i, req)
+        self._tables_dev = None
+
+    def release_slot(self, i: int, req=None) -> None:
+        super().release_slot(i, req)
+        self._tables_dev = None
 
     def reset_slots(self, indices: list, live: list) -> None:
         """Admission reset under paging.
@@ -346,14 +402,14 @@ class PagedCacheManager(PagedAllocator):
         tenant's state would leak straight into the new request's first
         step.  Those leaves get the O5-style packed one-call zeroing.
         """
-        if not indices or all(paged for _, paged in self.layout.plans):
+        if not indices or all(paged for _, paged in self.plan.plans):
             return
         if self._state_zero is None:
             from repro.serving.cache import make_packed_zero
 
             self._state_zero = make_packed_zero(
-                [bax for bax, _ in self.layout.plans],
-                skip=[paged for _, paged in self.layout.plans])
+                [bax for bax, _ in self.plan.plans],
+                skip=[paged for _, paged in self.plan.plans])
         self.cache = self._state_zero(
             self.cache, jnp.asarray(indices, jnp.int32))
 
@@ -373,7 +429,7 @@ class PagedCacheManager(PagedAllocator):
         dst = jnp.asarray(list(moves.values()), jnp.int32)
         leaves = jax.tree.leaves(self.cache)
         out = []
-        for leaf, (bax, paged) in zip(leaves, self.layout.plans):
+        for leaf, (bax, paged) in zip(leaves, self.plan.plans):
             if not paged:
                 out.append(leaf)
                 continue
@@ -384,3 +440,4 @@ class PagedCacheManager(PagedAllocator):
         remap = np.vectorize(lambda b: moves.get(int(b), int(b)))
         self.tables = remap(self.tables).astype(np.int32)
         self.allocator.rebuild(len(held))
+        self._tables_dev = None

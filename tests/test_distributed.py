@@ -235,7 +235,7 @@ def test_serving_pe_sharding_matches_single_device():
         for lvl in (OptLevel.O2, OptLevel.O3, OptLevel.O5):
             eng = DecodeEngine(model, params, batch_size=4, max_seq=32,
                                config=BestEffortConfig(level=lvl, pe=2))
-            sharded = eng._shardings is not None
+            sharded = eng.placement.sharded
             assert sharded == (lvl >= OptLevel.O3), (lvl, sharded)
             for p in ([5, 6, 7], [9], [3, 1, 4, 1], [2, 2], [8, 8, 8]):
                 eng.submit(Request(prompt=list(p), max_new_tokens=4))
@@ -243,4 +243,66 @@ def test_serving_pe_sharding_matches_single_device():
         assert gens[2] == gens[3] == gens[5]
         print("OK sharded serving identical")
     """, n_devices=2)
+    assert "OK" in out
+
+
+def test_sharded_paged_serving_oracle():
+    """The layout x placement composition cell: a paged engine with
+    effective_pe > 1 on 4 devices must build a BLOCK-axis-sharded pool
+    (tables replicated, dense view batch-sharded) and decode a random
+    mix — mid-flight arrivals, a pool small enough that the block gate
+    queues admissions — to greedy tokens bit-identical to the unsharded
+    O6 and the contiguous (batch-sharded) O5 paths."""
+    out = run_py("""
+        import jax, numpy as np
+        from repro.configs import get_smoke
+        from repro.core.optlevel import BestEffortConfig, OptLevel
+        from repro.models import get_model
+        from repro.serving import DecodeEngine, Request
+
+        assert jax.device_count() == 4
+        cfg = get_smoke("qwen3-8b")
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(11)
+        mix = [(rng.integers(1, cfg.vocab,
+                             int(rng.integers(1, 9))).tolist(),
+                int(rng.integers(1, 6))) for _ in range(10)]
+
+        def run(config):
+            eng = DecodeEngine(model, params, batch_size=4, max_seq=32,
+                               config=config)
+            rids = [eng.submit(Request(prompt=list(p), max_new_tokens=n))
+                    for p, n in mix[:6]]
+            for _ in range(2):          # mid-flight arrivals
+                eng.step()
+            rids += [eng.submit(Request(prompt=list(p), max_new_tokens=n))
+                     for p, n in mix[6:]]
+            fin = {r.rid: r.generated for r in eng.run()}
+            return eng, [fin[rid] for rid in rids]
+
+        # kv_pool_blocks=20 < 4 slots x 8 blocks/seq: the admission gate
+        # queues under load (never rejects), on the sharded path too.
+        e5, g5 = run(BestEffortConfig(level=OptLevel.O5, pe=4))
+        e6, g6 = run(BestEffortConfig(level=OptLevel.O6, pe=1,
+                                      kv_block_size=4, kv_pool_blocks=20))
+        e6s, g6s = run(BestEffortConfig(level=OptLevel.O6, pe=4,
+                                        kv_block_size=4,
+                                        kv_pool_blocks=20))
+        assert e5.placement.n_devices == 4 and e5.layout.name == \\
+            "contiguous"
+        assert e6.placement.n_devices == 1 and e6.layout.name == "paged"
+        assert e6s.placement.n_devices == 4 and e6s.layout.name == "paged"
+        # the pool really is sharded on its BLOCK axis, rows padded to a
+        # device multiple
+        leaves = jax.tree.leaves(e6s.cache_mgr.cache)
+        paged_leaf, (bax, _) = next(
+            (leaf, plan) for leaf, plan
+            in zip(leaves, e6s.cache_mgr.plan.plans) if plan[1])
+        assert paged_leaf.shape[bax] % 4 == 0, paged_leaf.shape
+        assert paged_leaf.sharding.spec[bax] == "data", \\
+            paged_leaf.sharding.spec
+        assert g5 == g6 == g6s, "sharded-paged tokens diverged"
+        print("OK sharded paged oracle", len(g6s))
+    """, n_devices=4)
     assert "OK" in out

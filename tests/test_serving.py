@@ -239,6 +239,87 @@ def test_paged_step_fn_combination_rejected():
                      step_fn=lambda p, c, t, pos: (t, c))
 
 
+def test_paged_pe_degrades_gracefully_on_single_device():
+    """Layout x placement: a paged engine asking for pe>1 on one device
+    must degrade to the replicated plan (pe=1) — no exception, no silent
+    layout downgrade — and still decode bit-identically to O5.  (The
+    sharded cell itself is pinned by the dist-tier oracle.)"""
+    mix = [([5, 6, 7], 4), ([9], 5), ([3, 1, 4, 1], 3)]
+    ref = _run_mix(mix, OptLevel.O5)
+    eng, _ = _engine(B=3, max_seq=32,
+                     config=BestEffortConfig(level=OptLevel.O6, pe=4,
+                                             kv_block_size=4))
+    assert eng.layout.name == "paged"
+    assert eng.config.kv_layout == "paged"
+    assert not eng.placement.sharded
+    assert eng.placement.n_devices == 1
+    rids = [eng.submit(Request(prompt=list(p), max_new_tokens=n))
+            for p, n in mix]
+    fin = {r.rid: r.generated for r in eng.run()}
+    assert [fin[rid] for rid in rids] == ref
+
+
+def test_paged_tables_device_cache_invalidated_on_lifecycle():
+    """``step_extras`` re-uses one device upload of the block tables
+    across steady-state ticks and drops it whenever admission /
+    retirement / compaction rewrites the tables — a stale table would
+    scatter a live request's KV into a retired request's blocks."""
+    eng, _ = _engine(B=2, max_seq=16,
+                     config=BestEffortConfig(level=OptLevel.O6,
+                                             kv_block_size=4))
+    mgr = eng.cache_mgr
+    assert mgr.step_extras()[0] is mgr.step_extras()[0]   # cached
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=2))
+    eng.step()                                            # admits
+    dev0 = mgr.step_extras()[0]
+    np.testing.assert_array_equal(np.asarray(dev0), mgr.tables)
+    assert mgr.step_extras()[0] is dev0                   # still cached
+    eng.run()                                             # retires
+    dev1 = mgr.step_extras()[0]
+    assert dev1 is not dev0                               # invalidated
+    np.testing.assert_array_equal(np.asarray(dev1), mgr.tables)
+
+    # A REAL compaction move must drop the cache too: fresh manager,
+    # slot 0 takes block 1, slot 1 block 2; releasing slot 0 leaves a
+    # gap so compact() relocates slot 1's block down to id 1.
+    _, model, _ = _model()
+    from repro.serving import PagedCacheManager
+    mgr2 = PagedCacheManager(model, 2, 16, block_size=4)
+    mgr2.admit_slot(0, Request(prompt=[1], max_new_tokens=2))
+    mgr2.admit_slot(1, Request(prompt=[1], max_new_tokens=2))
+    mgr2.release_slot(0)
+    dev2 = mgr2.step_extras()[0]
+    mgr2.compact()
+    assert mgr2.tables[1, 0] == 1                         # block moved
+    dev3 = mgr2.step_extras()[0]
+    assert dev3 is not dev2                               # invalidated
+    np.testing.assert_array_equal(np.asarray(dev3), mgr2.tables)
+
+
+def test_step_cache_does_not_pin_dead_models():
+    """The shared-step cache is weakref-keyed: constructing and dropping
+    more than _STEP_CACHE_MAX engines (each with its own model) must not
+    keep any dead model alive — the old id()-keyed cache pinned every
+    model until LRU churn evicted it."""
+    import gc
+    import weakref
+
+    from repro.serving import layout as layout_mod
+
+    refs = []
+    for k in range(layout_mod._STEP_CACHE_MAX + 2):
+        cfg = get_smoke("qwen3-8b")
+        model = get_model(cfg)
+        params = model.init(RNG)
+        eng = DecodeEngine(model, params, batch_size=2, max_seq=16,
+                           config=BestEffortConfig(level=OptLevel.O5))
+        refs.append(weakref.ref(model))
+        del cfg, model, params, eng
+    gc.collect()
+    assert all(r() is None for r in refs), (
+        f"{sum(r() is not None for r in refs)} dead models still pinned")
+
+
 def test_paged_compact_mid_flight_preserves_tokens():
     """Copy-on-admit defrag: after churn fragments the pool, ``compact``
     relocates live blocks to the lowest ids (physically copying pool
