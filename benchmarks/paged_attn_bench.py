@@ -1,0 +1,161 @@
+"""Microbenchmark: paged decode attention — gather step vs gather-free
+kernel — across a (max_seq, block_size, batch) grid.
+
+Each cell builds a block pool with realistic occupancy (every slot holds
+a random prefix of its reservation), then times two jitted formulations
+of one decode-attention tick:
+
+  gather — materialize the dense (B, nb*T, KV, D) view from the pool
+           (``jnp.take``, what ``serving/paged.BlockPagingPlan.gather``
+           does every tick) and run dense masked attention on it;
+  kernel — ``repro.kernels.paged_attention`` walking the block tables
+           directly (O(blocks touched) KV traffic).
+
+Methodology follows the serving-ladder noise memo: jit compiles outside
+the timed region, measurement rounds interleave the two variants (so
+container drift cancels), and each variant's floor is the trimmed min
+(mean of its 3 fastest rounds).  Never run this under concurrent load.
+
+Rows are appended as JSONL to ``experiments/autotune/paged_attn_bench.jsonl``
+(one row per cell x variant, with the analytic bytes estimate alongside
+the measured floor) so the perf trajectory tooling can track the
+kernel-vs-gather frontier over time.
+
+CPU caveat: on this container the kernel runs in Pallas interpret mode —
+every grid step is emulated with traced jax ops — so its WALL-CLOCK
+carries a large constant emulation toll and gather wins the stopwatch;
+the ``kv_bytes_est`` column is the hardware-relevant axis (the kernel
+moves O(blocks touched), the gather step O(B * max_seq)).  This is
+exactly why the serving autotuner *measures* the two and keeps gather on
+a tie/loss instead of assuming the kernel wins: on a real TPU
+(``interpret=False``) the bytes column is the stopwatch.
+
+  PYTHONPATH=src python -m benchmarks.paged_attn_bench
+"""
+
+import json
+import os
+import time
+
+TRAJ = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                    "autotune", "paged_attn_bench.jsonl")
+
+# (max_seq, block_size, batch) cells; heads/dims fixed at a small GQA
+# shape so the sweep isolates the KV-traffic axes the kernel changes.
+GRID = [
+    (64, 8, 4), (64, 16, 4),
+    (256, 16, 4), (256, 16, 8),
+    (512, 16, 8), (512, 32, 8),
+]
+H, KV, D = 4, 2, 32
+
+
+def build_cell(max_seq: int, block: int, batch: int, seed: int = 0):
+    """Pool + tables + lengths with random prefix occupancy, plus the
+    per-variant jitted callables."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    rng = np.random.default_rng(seed)
+    nb = -(-max_seq // block)
+    rows = batch * nb + 1
+    lengths = rng.integers(1, max_seq + 1, batch)
+    tables = np.zeros((batch, nb), np.int32)
+    free = list(range(1, rows))
+    rng.shuffle(free)
+    for b in range(batch):
+        for j in range(-(-int(lengths[b]) // block)):
+            tables[b, j] = free.pop()
+    key = jax.random.PRNGKey(seed)
+    kp, vp, q = (jax.random.normal(k, s, jnp.bfloat16) for k, s in zip(
+        jax.random.split(key, 3),
+        [(rows, block, KV, D), (rows, block, KV, D), (batch, H, D)]))
+    tables = jnp.asarray(tables)
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    @jax.jit
+    def gather_step(q, kp, vp, tables, lengths):
+        flat = tables.reshape(-1)
+        dk = jnp.take(kp, flat, axis=0).reshape(batch, nb * block, KV, D)
+        dv = jnp.take(vp, flat, axis=0).reshape(batch, nb * block, KV, D)
+        qg = q.reshape(batch, KV, H // KV, D)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, dk) * (D ** -0.5)
+        s = s.astype(jnp.float32)
+        idx = jnp.arange(nb * block)
+        s = jnp.where(idx[None, None, None, :]
+                      < lengths[:, None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgs,bskd->bkgd", p, dv)
+        return o.reshape(batch, H, D)
+
+    @jax.jit
+    def kernel_step(q, kp, vp, tables, lengths):
+        return paged_attention(q, kp, vp, tables, lengths)
+
+    args = (q, kp, vp, tables, lengths)
+    token_bytes = 2 * KV * D * jnp.bfloat16.dtype.itemsize    # k + v
+    blocks = int(sum(-(-int(x) // block) for x in lengths))
+    return {
+        "gather": (gather_step, args,
+                   3 * batch * nb * block * token_bytes),
+        "kernel": (kernel_step, args,
+                   (blocks * block + batch) * token_bytes),
+    }
+
+
+def bench(rounds: int = 7, iters: int = 20) -> list:
+    import jax
+
+    rows = []
+    for max_seq, block, batch in GRID:
+        variants = build_cell(max_seq, block, batch)
+        # warmup: compile + first-run costs outside the timed region
+        for fn, args, _ in variants.values():
+            jax.block_until_ready(fn(*args))
+        samples = {v: [] for v in variants}
+        for _ in range(rounds):
+            for v, (fn, args, _) in variants.items():   # interleaved
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    out = fn(*args)
+                jax.block_until_ready(out)
+                samples[v].append((time.perf_counter() - t0) / iters)
+        for v, (fn, args, est) in variants.items():
+            floor = sum(sorted(samples[v])[:3]) / 3       # trimmed min
+            rows.append({
+                "max_seq": max_seq, "block_size": block, "batch": batch,
+                "heads": H, "kv_heads": KV, "head_dim": D,
+                "variant": v, "wall_us": floor * 1e6,
+                "kv_bytes_est": int(est),
+            })
+    return rows
+
+
+def main():
+    rows = bench()
+    os.makedirs(os.path.dirname(TRAJ), exist_ok=True)
+    with open(TRAJ, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+    by_cell = {}
+    for r in rows:
+        by_cell.setdefault(
+            (r["max_seq"], r["block_size"], r["batch"]), {})[
+                r["variant"]] = r
+    print("max_seq block batch | gather_us kernel_us speedup | "
+          "gather_KB kernel_KB")
+    for (ms, bl, ba), cell in sorted(by_cell.items()):
+        g, k = cell["gather"], cell["kernel"]
+        print(f"{ms:7d} {bl:5d} {ba:5d} | {g['wall_us']:9.1f} "
+              f"{k['wall_us']:9.1f} {g['wall_us'] / k['wall_us']:7.2f}x | "
+              f"{g['kv_bytes_est'] / 1024:9.1f} "
+              f"{k['kv_bytes_est'] / 1024:9.1f}")
+    print(f"wrote {os.path.relpath(TRAJ)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,13 @@ STAGES = {
     # the block-axis-sharded composition cell) it re-runs O6 pinned to
     # pe=1 — the placement ablation within the paged layout.
     7: "O6 placement ablation: same paged pool, replicated (pe=1)",
+    # Key 8 is not a level either: the O6 attention-implementation
+    # ablation — the same paged pool driven by the gather-free
+    # block-table Pallas kernel (paged_attn=kernel) instead of the
+    # per-tick dense gather.  Its bytes-moved column is the point:
+    # O(blocks touched), not O(B * max_seq).
+    8: "O6 attn ablation: gather-free block-table kernel "
+       "(paged_attn=kernel)",
 }
 
 MD_PATH = os.path.join(os.path.dirname(__file__), "SERVING_LADDER.md")
@@ -66,16 +73,54 @@ def ladder_variants(devices: int):
     OptLevels at their default configs — on >= 2 devices every O3+ row
     shards, so O5->O6 compares MATCHED placements and the O6 row itself
     is the layout x placement composition cell (block-axis-sharded paged
-    pool).  Key 7, added only on multi-device runs, is the placement
-    ablation: the same paged engine pinned to pe=1, isolating what
-    sharding buys (or costs) within the paged layout."""
+    pool).  Key 8 (always present, adjacent to the O6 row it ablates) is
+    the attention-implementation ablation: the same paged pool driven by
+    the gather-free block-table kernel, so O6->O6k reads as the pure
+    gather-elimination delta.  Key 7, added only on multi-device runs,
+    is the placement ablation: the same paged engine pinned to pe=1,
+    isolating what sharding buys (or costs) within the paged layout."""
     from repro.core.optlevel import ALL_LEVELS, BestEffortConfig, OptLevel
 
     out = [(int(lvl), f"O{int(lvl)}", BestEffortConfig(level=lvl))
            for lvl in ALL_LEVELS]
+    out.append((8, "O6k", BestEffortConfig(level=OptLevel.O6,
+                                           paged_attn="kernel")))
     if devices > 1:
         out.append((7, "O6pe1", BestEffortConfig(level=OptLevel.O6, pe=1)))
     return out
+
+
+def _traced_kernel_bytes(eng, workload) -> int:
+    """One untimed replay that accumulates the kernel step's per-tick
+    KV-bytes estimate (sum over slots of the blocks their tables
+    reference, via ``PagedCacheManager.slot_lengths``) — the gather-free
+    path's traffic depends on the live lengths, so it is measured off
+    the actual schedule, not a formula.  Lengths are sampled BEFORE each
+    step: the slots that will attend this tick, including ones that
+    retire on it (their final, longest walk counts); on the cold-start
+    tick, where admission happens inside the step, they are read back
+    post-step instead.  Run AFTER the timed rounds (never under
+    concurrent load)."""
+    from repro.serving import Request
+
+    mgr = eng.cache_mgr
+    for p, n in workload:
+        eng.submit(Request(prompt=list(p), max_new_tokens=n))
+    total = ticks = 0
+    for _ in range(10_000):
+        lengths = mgr.slot_lengths(
+            [s.pos if s.active else 0 for s in eng.slots])
+        steps_before = eng.n_steps
+        stepped = eng.step()
+        if eng.n_steps > steps_before:
+            if not any(lengths):         # cold start: admitted in-step;
+                lengths = mgr.slot_lengths(     # pos already advanced
+                    [s.pos - 1 if s.active else 0 for s in eng.slots])
+            total += mgr.plan.kernel_bytes_per_tick(lengths)
+            ticks += 1
+        if not stepped and not eng.queue:
+            break
+    return total // max(1, ticks)
 
 
 def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
@@ -113,6 +158,7 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
     kv_capacity = {}      # key -> persistent cache capacity (tokens)
     devices_used = {}     # key -> placement device count
     layouts = {}          # key -> cache layout name
+    attn_impls = {}       # key -> paged attention impl (None: contiguous)
 
     def add_instance(k):
         _, vcfg = by_key[k]
@@ -125,6 +171,7 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         kv_capacity[k] = eng.cache_mgr.capacity_tokens
         devices_used[k] = eng.placement.n_devices
         layouts[k] = eng.layout.name
+        attn_impls[k] = getattr(eng.layout, "attn_impl", None)
         engines.append((k, eng))
         return eng
 
@@ -183,9 +230,14 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         # (1.5 MADs, floored at 1%), give both variants the pooled floor.
         # A real regression (beyond noise) is left standing and renders
         # as non-monotone — the harness never papers over mechanism.
+        # The ablation rows are NOT paired positionally: both O6k (attn
+        # impl) and O6pe1 (placement) ablate the O6 row itself, so each
+        # is paired against key 6, never against the other ablation.
+        tie_baseline = {7: 6, 8: 6}
         noise_ties.clear()
         for i in range(1, len(keys)):
-            k, prev = keys[i], keys[i - 1]
+            k = keys[i]
+            prev = tie_baseline.get(k, keys[i - 1])
             if est[k] <= est[prev]:
                 continue
             n = min(len(round_best[k]), len(round_best[prev]))
@@ -221,13 +273,41 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         best = floors()
         extra += 1
 
+    # Per-tick KV-cache bytes estimate (the gather-vs-kernel delta the
+    # O6k row exists to show).  Contiguous rungs: dense attention streams
+    # the whole (B, max_seq) cache each tick.  Paged gather: the dense
+    # view is materialized AND read (plan.gather_bytes_per_tick).  Paged
+    # kernel: O(blocks touched), measured off a replay of the actual
+    # schedule.  Computed after the timed rounds so the replay can't
+    # perturb them.
+    first_eng = {}
+    for k, eng in engines:
+        first_eng.setdefault(k, eng)
+    tb = first_eng[6].cache_mgr.geometry["token_bytes"]
+    kv_bytes = {}
+    for k in keys:
+        eng = first_eng[k]
+        if eng.layout.name == "contiguous":
+            kv_bytes[k] = batch_size * max_seq * tb
+        elif getattr(eng.layout, "attn_impl", "gather") == "kernel":
+            kv_bytes[k] = _traced_kernel_bytes(eng, workload)
+        else:
+            kv_bytes[k] = eng.cache_mgr.plan.gather_bytes_per_tick()
+
     tokens = sum(len(g) for g in generated[0])
+    tie_partner = {k: p for p, k in noise_ties}
     rows = []
     for i, k in enumerate(keys):
+        stage = STAGES[k]
+        if k == 8 and attn_impls[k] != "kernel":
+            # A family without a paged decode step degrades the kernel
+            # row to gather — say so instead of mislabeling the cell.
+            stage += (" — DEGRADED to gather (this family has no paged "
+                      "decode step)")
         rows.append({
             "level": min(k, 6),
             "label": by_key[k][0],
-            "stage": STAGES[k],
+            "stage": stage,
             "wall_s": best[k],
             "tok_per_s": tokens / best[k],
             "tick_ms": best[k] / ticks[k] * 1e3,
@@ -235,11 +315,16 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
             "tokens": tokens,
             "speedup_vs_o0": best[0] / best[k],
             "identical": generated[k] == generated[0],
-            "noise_tie_with_prev": i > 0 and (keys[i - 1], k) in noise_ties,
+            # the baseline this row pooled floors with (each ablation row
+            # ties against the O6 row it ablates, not its table neighbor)
+            "noise_tie_with": (by_key[tie_partner[k]][0]
+                               if k in tie_partner else None),
             "extra_rounds": extra,
             "kv_capacity": kv_capacity[k],
             "layout": layouts[k],
             "devices": devices_used[k],
+            "paged_attn": attn_impls[k],
+            "kv_bytes_per_tick": int(kv_bytes[k]),
         })
     return rows
 
@@ -341,16 +426,19 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
         "output-equivalence matrix).",
         "",
         "| level | serving stage (paper step) | tok/s | tick (ms) | "
-        "wall (s) | speedup vs O0 | KV capacity (tok) | devices | "
-        "identical tokens |",
-        "|---|---|---|---|---|---|---|---|---|",
+        "wall (s) | speedup vs O0 | KV capacity (tok) | KV bytes/tick | "
+        "devices | identical tokens |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
+        kb = r.get("kv_bytes_per_tick")
+        kb = f"{kb / 1024:.1f}K" if kb else "-"
         lines.append(
             f"| {r['label']} | {r['stage']} | {r['tok_per_s']:.0f} "
             f"| {r['tick_ms']:.3f} | {r['wall_s']:.4f} "
             f"| {r['speedup_vs_o0']:.2f}x "
             f"| {r.get('kv_capacity', '-')} "
+            f"| {kb} "
             f"| {r.get('devices', 1)} "
             f"| {'yes' if r['identical'] else 'NO'} |")
     # The monotonicity contract covers the mechanism rungs O0..O5 only —
@@ -360,8 +448,8 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
     mtop = min(5, len(rows) - 1)
     mono = all(rows[i]["tok_per_s"] >= rows[i - 1]["tok_per_s"]
                for i in range(1, mtop + 1))
-    ties = [f"{rows[i - 1]['label']}={rows[i]['label']}"
-            for i, r in enumerate(rows) if r.get("noise_tie_with_prev")]
+    ties = [f"{r['noise_tie_with']}={r['label']}"
+            for r in rows if r.get("noise_tie_with")]
     lines += [
         "",
         f"tok/s monotone non-decreasing O0->O{mtop}: "
@@ -377,7 +465,16 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
             "O6 runs this speed table at EQUAL worst-case capacity"
             " (auto-sized pool), so any delta vs O5 is the pure"
             " gather/scatter toll of block indirection; the rung's win is"
-            " the capacity table below.",
+            " the capacity table below.  The `O6k` row is the same paged"
+            " pool driven by the gather-free block-table Pallas kernel"
+            " (`paged_attn=kernel`): no dense view is ever materialized,"
+            " which is what the `KV bytes/tick` column shows — the gather"
+            " step stages O(B x max_seq) KV bytes per tick (3x the dense"
+            " view: pool read, dense write, attention read) while the"
+            " kernel touches only the blocks each slot's table references"
+            " (measured off a replay of the actual schedule).  The"
+            " autotuner (`--serve`, `paged_attn=auto`) measures both and"
+            " keeps the winner — gather on tie/loss.",
             "",
             "## Layout x placement matrix",
             "",
@@ -398,6 +495,13 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
             "| per-engine step; pool sharded on the BLOCK axis (rows "
             "padded to a device multiple), block tables replicated, "
             "gathered dense view re-sharded onto the batch axis |",
+            "| paged (O6, `paged_attn=kernel`) | per-engine step; the "
+            "gather-free block-table Pallas kernel reads the pool "
+            "directly (no dense view, no scatter — the current token's "
+            "K/V is appended in place) "
+            "| per-engine step; pool sharded on the BLOCK axis, "
+            "replicated in-graph around the kernel call, written pool "
+            "re-sharded by out_shardings |",
             "",
             "On a multi-device run every O3+ row shards (the `devices` "
             "column shows the placement each engine actually landed "
@@ -453,7 +557,10 @@ def main(arch: str = "qwen3-8b", write_md: bool = True, **kw):
         write_trajectory(rows, arch)
     out = [(f"serving_ladder_{r['label']}", r["wall_s"] * 1e6,
             f"{r['tok_per_s']:.0f}tok/s {r['speedup_vs_o0']:.2f}x "
-            f"{r['layout']}x{r['devices']}dev "
+            f"{r['layout']}"
+            f"{'/' + r['paged_attn'] if r.get('paged_attn') else ''}"
+            f"x{r['devices']}dev "
+            f"kv={r['kv_bytes_per_tick'] // 1024}K/tick "
             f"identical={r['identical']}") for r in rows]
     cc = capacity["contiguous"]["peak_concurrency"]
     cp = capacity["paged"]["peak_concurrency"]

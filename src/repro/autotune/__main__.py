@@ -77,6 +77,11 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
                     help="O6 pool size in blocks (0 = auto: equal "
                          "worst-case capacity to the contiguous cache)")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=("auto", "gather", "kernel"),
+                    help="O6 attention implementation: auto measures "
+                         "gather vs the gather-free block-table kernel "
+                         "and keeps the winner (gather on tie/loss)")
     args = ap.parse_args(argv)
 
     if args.serve:
@@ -89,7 +94,8 @@ def main(argv=None) -> int:
             n_requests=args.requests, max_new=args.max_new,
             repeats=args.repeats, policy=args.policy,
             kv_block_size=args.kv_block,
-            kv_pool_blocks=args.kv_pool_blocks)
+            kv_pool_blocks=args.kv_pool_blocks,
+            paged_attn=args.paged_attn)
         result = _run_one(backend, args, ladder=True)
         levels = [r.measurement.meta for r in result.rounds]
         gens = [m["generated"] for m in levels]
@@ -100,6 +106,12 @@ def main(argv=None) -> int:
         cells = {m["level"]: f"{m.get('layout')}x{m.get('devices')}dev"
                  for m in levels}
         print(f"layout x placement per level: {cells}")
+        for m in levels:
+            if m.get("paged_attn_walls"):
+                walls = {k: f"{v:.4f}s"
+                         for k, v in m["paged_attn_walls"].items()}
+                print(f"O{m['level']} paged_attn measured {walls} -> "
+                      f"kept {m['paged_attn']!r}")
         return 0 if same else 1
 
     if args.kernel:

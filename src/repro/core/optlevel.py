@@ -150,6 +150,15 @@ class BestEffortConfig:
     # memory for queueing).
     kv_block_size: int = 16
     kv_pool_blocks: int = 0
+    # O6 attention implementation: "gather" re-materializes each slot's
+    # dense KV view from the pool every tick (jnp.take) and runs dense
+    # decode attention on it; "kernel" runs the block-table-aware Pallas
+    # kernel straight on the pool — gather-free, O(blocks touched) KV
+    # traffic per tick instead of O(B * max_seq).  Best-effort contract:
+    # families without a paged decode step (rwkv/mamba/hybrid/enc-dec)
+    # fall back to gather, and the autotuner measures both and keeps
+    # the winner (gather on tie/loss).
+    paged_attn: str = "gather"
 
     def with_level(self, level: OptLevel) -> "BestEffortConfig":
         return dataclasses.replace(self, level=level)

@@ -79,14 +79,30 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "block_q", "block_k", "interpret"),
+    static_argnames=("causal", "block_q", "block_k", "interpret",
+                     "n_heads", "n_kv_heads"),
 )
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True):
-    """q, k, v: (BH, S, D) -> (BH, S, D), same dtype as q."""
+                           interpret: bool = True, n_heads: int = 0,
+                           n_kv_heads: int = 0):
+    """q: (B*H, S, D) -> (B*H, S, D), same dtype as q.
+
+    GQA runs on the grid, not on copied data: with ``n_heads`` /
+    ``n_kv_heads`` given, k and v are the UN-repeated (B*Hkv, S, D)
+    streams and each q stream's k-block index map points at its kv
+    group's stream (``(b // H) * Hkv + (b % H) // G``) — the kernel body
+    is untouched, so the output is bit-identical to feeding it repeated
+    K/V, without ever materializing the H/Hkv copies.  Defaulting both
+    to 0 keeps the legacy H == Hkv contract.
+    """
     BH, S, D = q.shape
-    assert k.shape == v.shape == (BH, S, D), (q.shape, k.shape, v.shape)
+    H = n_heads or BH
+    Hkv = n_kv_heads or H
+    assert H % Hkv == 0 and BH % H == 0, (BH, H, Hkv)
+    group = H // Hkv
+    BHkv = (BH // H) * Hkv
+    assert k.shape == v.shape == (BHkv, S, D), (q.shape, k.shape, v.shape)
     block_q = min(block_q, S)
     block_k = min(block_k, S)
     assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
@@ -96,6 +112,9 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal=causal,
         block_q=block_q, block_k=block_k)
+
+    def kv_stream(b):
+        return (b // H) * Hkv + (b % H) // group
 
     kw = {}
     if not interpret:
@@ -107,8 +126,10 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda b, i, j: (kv_stream(b), j, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda b, i, j: (kv_stream(b), j, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),

@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
 
@@ -11,19 +9,21 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, interpret: bool = True):
     """q: (B, S, H, D); k, v: (B, S, Hkv, D) with H % Hkv == 0.
 
-    Returns (B, S, H, D).  KV heads are repeated to H (the wrapper's job;
-    the kernel sees flat (B*H, S, D) streams).
+    Returns (B, S, H, D).  GQA is resolved on the kernel grid (each q
+    stream's block-index map points at its kv group's stream) — K/V are
+    flattened to (B*Hkv, S, D) as-is, never repeated to H first, so GQA
+    models stop copying KV ``H/Hkv``x before every call.
     """
     B, S, H, D = q.shape
     Hkv = k.shape[2]
     assert H % Hkv == 0, (H, Hkv)
-    if Hkv != H:
-        rep = H // Hkv
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
 
-    to_flat = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    def to_flat(t):
+        h = t.shape[2]
+        return t.transpose(0, 2, 1, 3).reshape(B * h, S, D)
+
     out = flash_attention_pallas(
         to_flat(q), to_flat(k), to_flat(v), causal=causal,
-        block_q=block_q, block_k=block_k, interpret=interpret)
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        n_heads=H, n_kv_heads=Hkv)
     return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

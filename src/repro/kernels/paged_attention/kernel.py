@@ -1,0 +1,181 @@
+"""Block-table-aware paged decode attention — the gather-free O6 step.
+
+The paged serving rung's original step re-materializes a dense
+``(B, max_seq, ...)`` view of every KV leaf from the block pool on every
+decode tick (``serving/paged.BlockPagingPlan.gather``) just so dense
+attention can read it — O(B * max_seq) HBM traffic per generated token.
+This kernel is the *explicit data caching* / *scratchpad reorganization*
+answer: it consumes the pool, the block tables and the per-slot lengths
+directly, so the only KV bytes moved are the blocks each slot's table
+actually references.
+
+Ladder mapping: streaming K/V one physical block at a time with
+VMEM-resident ``(m, l, acc)`` online-softmax state is the same blocked
+discipline as ``kernels/flash_attention`` (explicit caching +
+pipelining); the (batch, kv-head) grid dims are PE duplication.  GQA is
+handled by the grid, not by materializing repeated K/V: each kv-head
+program attends its ``G = H // KV`` query heads against one shared
+``(T, D)`` block slice.
+
+Grid: ``(B, KV, 2 * nb)`` with the block walk innermost (sequential).
+The walk is TWO passes over the slot's block list, phase = j // nb:
+
+  phase 0 — online-softmax statistics: running row-max ``m`` (exact)
+            and rescaled denominator ``l``;
+  phase 1 — the weighted-value accumulation, with the probabilities
+            rounded to the query dtype before the PV product.
+
+The two-pass structure is what makes the serving ladder's bit-identity
+contract *hold in practice*: the dense decode path computes bf16 scores
+(einsum output dtype), masks/softmaxes in f32, then rounds the
+probabilities back to bf16 before the PV einsum.  Phase 1 applies the
+same roundings in the same order (scores -> dt, probs -> dt, one final
+output round), so kernel-path logits track the gather-path logits to
+reduction-order noise (~1e-7) instead of bf16-rounding noise (~1e-2) —
+greedy argmax cannot realistically flip.  The extra K stream per tick is
+still O(blocks touched), nowhere near the gather step's dense copy.
+
+The block tables and lengths ride in as scalar-prefetch operands so the
+``BlockSpec`` index maps can turn a *logical* block index ``j % nb``
+into the *physical* pool row ``tables[b, j % nb]`` before the DMA is
+issued — the indirection happens in the index map, never as a gathered
+copy.
+
+Masking uses -1e30 like the flash kernel: position ``idx = jj*T + t`` is
+valid iff ``idx < lengths[b]``.  Blocks entirely past ``lengths[b]`` are
+skipped (their table entries may be the NULL block; its DMA is cheap and
+its values are never read).  Callers guarantee ``lengths >= 1`` (the
+engine writes position ``p`` before attending, so the length is
+``p + 1``); the ``1e-30`` guard only protects the skipped-slot case.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _scores(q_ref, k_ref, jj, length, *, scale, block_size):
+    """Masked f32 scores for one (G, T) block, with the SAME rounding
+    discipline as the dense decode path: the qk product and the scale
+    multiply are rounded to the query dtype (the dense path's einsum
+    output dtype) before the f32 mask/softmax."""
+    dt = q_ref.dtype
+    q = q_ref[0].astype(jnp.float32)                # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)          # (T, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (G, T)
+    s = (s.astype(dt) * scale).astype(dt).astype(jnp.float32)
+    idx = jj * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    return jnp.where(idx < length, s, NEG_INF)
+
+
+def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, scale: float,
+                       block_size: int, n_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    jj = j % n_blocks                # logical block within the pass
+    phase = j // n_blocks            # 0: (m, l) stats; 1: PV accumulate
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+
+    # Skip blocks entirely past this slot's valid prefix (no compute;
+    # the NULL-block rows inactive table tails point at are never read).
+    in_range = jj * block_size < length
+
+    @pl.when((phase == 0) & in_range)
+    def _stats():
+        s = _scores(q_ref, k_ref, jj, length, scale=scale,
+                    block_size=block_size)
+        m_prev = m_ref[...]                          # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+
+    @pl.when((phase == 1) & in_range)
+    def _accumulate():
+        s = _scores(q_ref, k_ref, jj, length, scale=scale,
+                    block_size=block_size)
+        v = v_ref[0, :, 0].astype(jnp.float32)       # (T, D)
+        p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
+        # Round the probabilities to the query dtype — the dense path's
+        # ``softmax(s).astype(dt)`` — so the PV product sees identical
+        # inputs to the gather step's einsum.
+        p = p.astype(q_ref.dtype).astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
+                           interpret: bool = True):
+    """q: (B, H, D); k_pool/v_pool: (R, T, KV, D); tables: (B, nb) int32
+    physical pool rows per logical block; lengths: (B,) int32 valid
+    positions per slot.  Returns (B, H, D) in q's dtype."""
+    B, H, D = q.shape
+    R, T, KV, Dk = k_pool.shape
+    assert Dk == D and v_pool.shape == k_pool.shape, (q.shape, k_pool.shape)
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    nb = tables.shape[1]
+    assert tables.shape == (B, nb) and lengths.shape == (B,), (
+        tables.shape, lengths.shape)
+    scale = 1.0 / (D ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, 2 * nb),
+        in_specs=[
+            # q heads for kv-head h: rows h*G .. h*G+G-1
+            pl.BlockSpec((1, G, D), lambda b, h, j, tbl, lens: (b, h, 0)),
+            # ONE physical pool block, selected through the table
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, h, j, tbl, lens:
+                         (tbl[b, j % nb], 0, h, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, h, j, tbl, lens:
+                         (tbl[b, j % nb], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D),
+                               lambda b, h, j, tbl, lens: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_attn_kernel, scale=scale,
+                               block_size=T, n_blocks=nb)
+    kw = {}
+    if not interpret:
+        kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+        **kw,
+    )(tables, lengths, q, k_pool, v_pool)

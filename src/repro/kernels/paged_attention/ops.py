@@ -1,0 +1,40 @@
+"""Public wrapper: block-table-aware paged decode attention.
+
+Unlike the flash wrapper there is no GQA repeat here at all: the kernel
+grid is (batch, kv-head, block), so each kv-head's ``G`` query heads
+share one streamed ``(T, D)`` block slice and the pool is never copied
+``H / Hkv`` times.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+
+
+def paged_attention(q, k_pool, v_pool, tables, lengths, *,
+                    interpret: bool = True):
+    """Decode attention straight off a paged KV block pool.
+
+    q: (B, H, D) — one query token per slot.
+    k_pool, v_pool: (R, T, KV, D) — the physical block pool (row 0 is
+        the NULL block; its contents are write-garbage by design).
+    tables: (B, nb) int — physical pool row of each logical block.
+    lengths: (B,) int — valid positions per slot (the engine passes
+        ``positions + 1``: the current token's K/V is already appended).
+
+    Returns (B, H, D) in q's dtype.  Every block the table references
+    inside ``lengths[b]`` must be a real (non-NULL) block — the
+    allocator's up-front reservation guarantees it.
+    """
+    B, H, D = q.shape
+    R, T, KV, Dk = k_pool.shape
+    if H % KV != 0:
+        raise ValueError(f"H={H} must be a multiple of KV={KV}")
+    if Dk != D or v_pool.shape != k_pool.shape:
+        raise ValueError(f"pool/query shape mismatch: q {q.shape}, "
+                         f"k {k_pool.shape}, v {v_pool.shape}")
+    return paged_attention_pallas(
+        q, k_pool, v_pool, tables.astype(jnp.int32),
+        lengths.astype(jnp.int32), interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: gather to a dense view, then masked softmax.
+
+This IS the semantics of the serving engine's gather step
+(``serving/paged.BlockPagingPlan.gather`` followed by dense masked
+decode attention) — the reference the kernel is diffed against, and the
+reference the gather/scatter round-trip property test pins.  Positions
+``>= lengths[b]`` (stale block contents, NULL-block garbage, the padded
+tail of the last block) are masked to -1e30 before the softmax exactly
+like the dense path, so nothing unmasked can differ.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pool, v_pool, tables, lengths):
+    """q: (B, H, D); k_pool/v_pool: (R, T, KV, D); tables: (B, nb);
+    lengths: (B,) valid positions per slot (callers keep >= 1)."""
+    B, H, D = q.shape
+    _, T, KV, _ = k_pool.shape
+    nb = tables.shape[1]
+    G = H // KV
+
+    dk = k_pool[tables].reshape(B, nb * T, KV, D).astype(jnp.float32)
+    dv = v_pool[tables].reshape(B, nb * T, KV, D).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, dk) / (D ** 0.5)
+    idx = jnp.arange(nb * T)
+    s = jnp.where(idx[None, None, None, :] < lengths[:, None, None, None],
+                  s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, dv)
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -36,7 +36,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                seed: int = 0, prompt_len=(2, 12), max_new=(4, 16),
                level: OptLevel = OptLevel.O5, policy: str = "fcfs",
                sampler: SamplerConfig = None, pe: int = 8,
-               kv_block_size: int = 16, kv_pool_blocks: int = 0) -> dict:
+               kv_block_size: int = 16, kv_pool_blocks: int = 0,
+               paged_attn: str = "gather") -> dict:
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     engine = DecodeEngine(model, params, batch_size=batch_size,
@@ -44,7 +45,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                           config=BestEffortConfig(
                               level=level, pe=pe,
                               kv_block_size=kv_block_size,
-                              kv_pool_blocks=kv_pool_blocks),
+                              kv_pool_blocks=kv_pool_blocks,
+                              paged_attn=paged_attn),
                           policy=policy, sampler=sampler)
 
     rng = np.random.default_rng(seed)
@@ -66,6 +68,7 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
         "tok_per_s": total_new / wall if wall > 0 else 0.0,
         "layout": engine.layout.name,
         "devices": engine.placement.n_devices,
+        "paged_attn": getattr(engine.layout, "attn_impl", None),
     }
 
 
@@ -92,6 +95,13 @@ def main():
                     help="O6 paged-cache block size in tokens")
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
                     help="O6 pool size in blocks (0 = auto)")
+    ap.add_argument("--paged-attn", default="gather",
+                    choices=("gather", "kernel"),
+                    help="O6 attention implementation: gather "
+                         "re-materializes the dense KV view per tick; "
+                         "kernel runs the gather-free block-table "
+                         "Pallas kernel on the raw pool (families "
+                         "without a paged decode step fall back)")
     ap.add_argument("--expect-devices", type=int, default=0,
                     help="exit 1 unless the engine's placement landed on "
                          "exactly this many devices (CI smoke)")
@@ -105,12 +115,14 @@ def main():
                      level=OptLevel(args.level), policy=args.policy,
                      sampler=sampler, pe=args.pe,
                      kv_block_size=args.kv_block,
-                     kv_pool_blocks=args.kv_pool_blocks)
+                     kv_pool_blocks=args.kv_pool_blocks,
+                     paged_attn=args.paged_attn)
     for r in out["finished"][:4]:
         print(f"[serve] req {r.rid}: prompt[{r.n_prompt}] -> "
               f"{r.generated}")
+    attn = f"/{out['paged_attn']}" if out["paged_attn"] else ""
     print(f"[serve] O{args.level}/{args.policy} "
-          f"[{out['layout']} x {out['devices']} device(s)]: "
+          f"[{out['layout']}{attn} x {out['devices']} device(s)]: "
           f"{len(out['finished'])} requests, {out['tokens']} new "
           f"tokens in {out['ticks']} ticks / {out['wall_s']:.2f}s "
           f"({out['tok_per_s']:.1f} tok/s batched)")

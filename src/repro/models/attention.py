@@ -206,6 +206,13 @@ def decode_attention(params, x, cache, positions, *, n_heads, n_kv, head_dim,
                      update_cache=True):
     """Single-token attention against a KV cache.
 
+    This is the DENSE decode-attention implementation — one of the two
+    pluggable decode hooks a model's ``decode_step`` can run: dense
+    attention over a per-slot ``(B, S_max, ...)`` cache view (this
+    function; the paged serving rung feeds it a gathered view), or
+    :func:`paged_decode_attention`, which consumes a paged block pool +
+    block tables directly and never builds the dense view at all.
+
     x: (B, 1, d); positions: (B,) current index per sequence.
     cache: {"k","v"} of (B, S_max, KV, dh), sequence-sharded for long ctx.
     Returns (out (B, 1, d), new_cache).
@@ -250,3 +257,49 @@ def decode_attention(params, x, cache, positions, *, n_heads, n_kv, head_dim,
     o = o.reshape(B, T, n_heads, head_dim)
     out = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(dt))
     return out, new_cache
+
+
+def paged_decode_attention(params, x, cache, tables, positions, *, n_heads,
+                           n_kv, head_dim, qk_norm=False, rope_theta=1e4):
+    """Gather-free decode attention against a paged KV block pool.
+
+    The paged-decode counterpart of :func:`decode_attention` (the other
+    pluggable hook): instead of a per-slot dense cache view it takes the
+    raw pool leaves plus each slot's block table, appends the current
+    token's K/V into the slot's active block IN PLACE — one (KV, dh)
+    vector per slot, O(B) traffic, not the O(B * max_seq) dense gather —
+    and runs the block-table-aware Pallas kernel, which walks the table
+    and streams only the blocks the slot actually references.
+
+    x: (B, 1, d); cache: {"k","v"} of (R, T, KV, dh) pool leaves (row 0
+    is the NULL block); tables: (B, nb); positions: (B,) current index
+    per slot.  Inactive slots point every table entry at the NULL block,
+    whose contents are write-garbage by design — their outputs are
+    discarded by the engine.  Returns (out (B, 1, d), new pool leaves).
+    """
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    B, _, d = x.shape
+    dt = x.dtype
+    T = cache["k"].shape[1]
+
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = rope(q, positions[:, None], rope_theta)
+    k = rope(k, positions[:, None], rope_theta)
+
+    # In-place append: position p lives in logical block p // T at
+    # offset p % T; the table maps it to a physical pool row.
+    row = jnp.take_along_axis(tables, (positions // T)[:, None],
+                              axis=1)[:, 0]
+    off = positions % T
+    ck = cache["k"].at[row, off].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[row, off].set(v[:, 0].astype(cache["v"].dtype))
+
+    o = paged_attention(q[:, 0], ck, cv, tables, positions + 1)
+    out = jnp.einsum("bhk,hkd->bd", o.astype(dt), params["wo"].astype(dt))
+    return out[:, None], {"k": ck, "v": cv}

@@ -30,6 +30,11 @@ class ModelAPI:
     cache_spec: Callable      # (batch, max_seq) -> spec tree
     init_cache: Callable      # (batch, max_seq) -> cache tree
     cache_axes: Callable      # () -> logical-axes tree matching cache_spec
+    # Gather-free paged decode (params, pool, tables, tokens, positions)
+    # -> (logits, pool): the serving O6 kernel path.  None for families
+    # without it (recurrent-state rwkv/mamba, hybrid, enc-dec) — the
+    # paged layout then falls back to the gather step.
+    paged_decode_step: Callable = None
 
 
 def get_model(cfg: ArchConfig) -> ModelAPI:
@@ -44,6 +49,12 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
     else:
         raise ValueError(f"unknown family {cfg.family}")
 
+    paged_step = None
+    if hasattr(mod, "paged_decode_step"):
+        paged_step = (lambda params, pool, tables, tokens, positions:
+                      mod.paged_decode_step(cfg, params, pool, tables,
+                                            tokens, positions))
+
     return ModelAPI(
         cfg=cfg,
         init=lambda rng: mod.init(cfg, rng),
@@ -57,6 +68,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         init_cache=lambda batch, max_seq:
             mod.init_cache(cfg, batch, max_seq),
         cache_axes=lambda: mod.cache_axes(cfg),
+        paged_decode_step=paged_step,
     )
 
 

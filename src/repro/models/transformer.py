@@ -153,20 +153,21 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
                         cache_spec(cfg, batch, max_seq, dtype))
 
 
-def decode_step(cfg: ArchConfig, params, cache, tokens, positions):
-    """One decode step. tokens (B, 1) int32; positions (B,) int32.
-    Returns (logits (B, vocab_padded), new_cache)."""
+def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body):
+    """Shared decode skeleton: embed -> scan layers -> final norm ->
+    logits.  ``attn_body`` is the pluggable decode-attention hook applied
+    per layer — dense attention on a per-slot cache view
+    (:func:`decode_step`), or the paged Pallas kernel on the raw block
+    pool (:func:`paged_decode_step`); ``kv_leaves`` are the matching
+    (k, v) stacked-over-layers cache leaves it consumes and rewrites."""
     dt = jnp.dtype(cfg.compute_dtype)
     h = params["embedding"].astype(dt)[tokens]           # (B, 1, d)
 
     def body(h, xs):
         layer_params, ck, cv = xs
-        a, new_c = attn.decode_attention(
-            layer_params["attn"], rms_norm(h, layer_params["attn_norm"]),
-            {"k": ck, "v": cv}, positions,
-            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
-            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
-        )
+        a, new_c = attn_body(layer_params,
+                             rms_norm(h, layer_params["attn_norm"]),
+                             ck, cv)
         h = h + a
         hn = rms_norm(h, layer_params["mlp_norm"])
         if cfg.n_experts:
@@ -179,12 +180,49 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, positions):
         return h + m, (new_c["k"], new_c["v"])
 
     from repro.models.loops import scan_or_unroll
-    h, (nk, nv) = scan_or_unroll(body, h,
-                                 (params["layers"], cache["k"], cache["v"]),
+    h, (nk, nv) = scan_or_unroll(body, h, (params["layers"],) + kv_leaves,
                                  unroll=cfg.unroll_layers)
     h = rms_norm(h, params["final_norm"])
     logits = (h[:, 0] @ params["lm_head"].astype(dt)).astype(jnp.float32)
     return logits, {"k": nk, "v": nv}
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, positions):
+    """One decode step. tokens (B, 1) int32; positions (B,) int32.
+    Returns (logits (B, vocab_padded), new_cache)."""
+
+    def attn_body(layer_params, hn, ck, cv):
+        return attn.decode_attention(
+            layer_params["attn"], hn, {"k": ck, "v": cv}, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        )
+
+    return _decode_layers(cfg, params, (cache["k"], cache["v"]), tokens,
+                          attn_body)
+
+
+def paged_decode_step(cfg: ArchConfig, params, pool, tables, tokens,
+                      positions):
+    """Gather-free paged decode step (the serving O6 kernel path).
+
+    Identical layer structure to :func:`decode_step`, but each layer's
+    attention consumes the raw block-pool leaves (R, T, KV, dh) plus the
+    per-slot block tables via ``attn.paged_decode_attention`` — the
+    dense (B, max_seq, ...) view is never materialized; the current
+    token's K/V is appended into the active block in place and the
+    Pallas kernel streams only the blocks each slot's table references.
+    """
+
+    def attn_body(layer_params, hn, ck, cv):
+        return attn.paged_decode_attention(
+            layer_params["attn"], hn, {"k": ck, "v": cv}, tables, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        )
+
+    return _decode_layers(cfg, params, (pool["k"], pool["v"]), tokens,
+                          attn_body)
 
 
 # ---------------------------------------------------------------------------

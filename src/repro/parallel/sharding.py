@@ -195,6 +195,18 @@ class PlacementPlan:
             return leaf
         return jax.lax.with_sharding_constraint(leaf, self.axis(ax))
 
+    def constrain_replicated(self, leaf):
+        """In-graph re-shard of ``leaf`` to fully replicated (identity
+        when unsharded) — how the gather-free paged KERNEL step keeps a
+        BLOCK-axis-sharded pool working: the Pallas kernel is a
+        single-device program, so the step replicates the pool for the
+        kernel call and its ``out_shardings`` re-shard the written pool
+        back onto the block axis.  Correctness everywhere, measured
+        profitability decides (the best-effort contract)."""
+        if self.mesh is None:
+            return leaf
+        return jax.lax.with_sharding_constraint(leaf, self.replicated)
+
 
 def plan_pe_placement(config, batch_size: int,
                       devices=None) -> PlacementPlan:

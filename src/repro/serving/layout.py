@@ -23,13 +23,19 @@ Every (layout, placement) cell compiles a decode step:
   contiguous x sharded     — per-engine step; cache/tokens sharded on
                              the batch axis (classic O3)
   paged      x replicated  — per-engine step (pool geometry is part of
-                             the program); gather -> decode -> scatter
+                             the program); gather -> decode -> scatter,
+                             or — ``paged_attn="kernel"`` — the
+                             gather-free block-table Pallas kernel on
+                             the raw pool (no dense view at all)
   paged      x sharded     — per-engine step; the pool is sharded on the
                              BLOCK axis (rows padded to a device
                              multiple), block tables replicated, and the
                              gathered dense view is re-sharded onto the
                              batch axis so the model itself runs
-                             PE-duplicated (O3 x O6 composed)
+                             PE-duplicated (O3 x O6 composed); the
+                             kernel variant replicates the pool
+                             in-graph for the (single-device) kernel
+                             call and re-shards the written pool
 
 Greedy tokens are bit-identical across all four cells: sharding touches
 only non-contraction axes (batch, pool rows), so no reduction is ever
@@ -74,10 +80,11 @@ def make_fused(model, sample):
 
 
 def make_paged_fused(model, sample, plan, constrain=None):
-    """The paged step: block-table gather -> the SAME ``decode_step`` the
-    dense rungs run -> single-block scatter.  The dense view the model
-    sees is bit-identical at every unmasked position (see ``paged``
-    docstring), so greedy tokens cannot drift from the contiguous path.
+    """The paged GATHER step: block-table gather -> the SAME
+    ``decode_step`` the dense rungs run -> single-block scatter.  The
+    dense view the model sees is bit-identical at every unmasked
+    position (see ``paged`` docstring), so greedy tokens cannot drift
+    from the contiguous path.
 
     ``constrain`` (from the sharded placement) re-shards the gathered
     dense view onto the batch axis in-graph, so under a mesh the model
@@ -91,6 +98,33 @@ def make_paged_fused(model, sample, plan, constrain=None):
             params, dense, tokens, positions)
         toks = sample(_last_logits(logits), seeds)
         return toks, plan.scatter(pool, tables, new_dense, positions)
+
+    return _fused
+
+
+def make_paged_kernel_fused(model, sample, replicate=None):
+    """The paged KERNEL step (``paged_attn="kernel"``): the model's
+    ``paged_decode_step`` consumes the block pool + tables + positions
+    DIRECTLY — the per-tick O(B * max_seq) dense gather/scatter of
+    :func:`make_paged_fused` is gone; each layer appends the current
+    token's K/V into the active block in place and the block-table-aware
+    Pallas kernel streams only the blocks each slot references
+    (O(blocks touched) KV traffic per tick).
+
+    ``replicate`` (from a sharded placement): the Pallas kernel is a
+    single-device program, so under a BLOCK-axis-sharded pool the step
+    re-constrains the pool leaves to replicated in-graph for the kernel
+    call and ``out_shardings`` re-shards the written pool back onto the
+    block axis.  Correct everywhere; whether it *wins* there is the
+    autotuner's call, like every best-effort rung.
+    """
+    def _fused(params, pool, tables, tokens, positions, seeds):
+        if replicate is not None:
+            pool = jax.tree.map(replicate, pool)
+        logits, new_pool = model.paged_decode_step(
+            params, pool, tables, tokens, positions)
+        toks = sample(_last_logits(logits), seeds)
+        return toks, new_pool
 
     return _fused
 
@@ -250,10 +284,25 @@ class PagedLayout(KVLayout):
     view is re-sharded onto the batch axis so the model body runs
     PE-duplicated exactly like the contiguous O3 path — layout and
     placement compose instead of excluding each other.
+
+    ``paged_attn`` selects the step's attention implementation
+    (``BestEffortConfig.paged_attn``): "gather" re-materializes the
+    dense per-slot view every tick; "kernel" runs the block-table-aware
+    Pallas decode kernel straight on the pool.  ``attn_impl`` records
+    what :meth:`make_step` actually built — a model without a paged
+    decode step (recurrent families) degrades to gather, never fails.
     """
 
     name = "paged"
     supports_step_fn = False
+
+    def __init__(self, paged_attn: str = "gather"):
+        if paged_attn not in ("gather", "kernel"):
+            raise ValueError(
+                f"paged_attn must be 'gather' or 'kernel' "
+                f"(got {paged_attn!r})")
+        self.paged_attn = paged_attn
+        self.attn_impl = paged_attn      # updated by make_step
 
     def build_manager(self, model, batch_size, max_seq,
                       config: BestEffortConfig, placement):
@@ -275,10 +324,20 @@ class PagedLayout(KVLayout):
     def make_step(self, model, sampler_cfg, manager, placement):
         # Pool geometry (and any shardings) are part of the program, so
         # each paged engine compiles its own step.
-        fused = make_paged_fused(
-            model, make_sampler(sampler_cfg), manager.plan,
-            constrain=placement.constrain_axis if placement.sharded
-            else None)
+        use_kernel = (self.paged_attn == "kernel"
+                      and model.paged_decode_step is not None)
+        self.attn_impl = "kernel" if use_kernel else "gather"
+        sample = make_sampler(sampler_cfg)
+        if use_kernel:
+            fused = make_paged_kernel_fused(
+                model, sample,
+                replicate=placement.constrain_replicated
+                if placement.sharded else None)
+        else:
+            fused = make_paged_fused(
+                model, sample, manager.plan,
+                constrain=placement.constrain_axis if placement.sharded
+                else None)
         if not placement.sharded:
             return jax.jit(fused, donate_argnums=(1,))
         pool_sh = manager.pool_shardings(placement)
@@ -292,5 +351,5 @@ class PagedLayout(KVLayout):
 
 def select_layout(config: BestEffortConfig) -> KVLayout:
     """The layout axis of the config, as a strategy object."""
-    return PagedLayout() if config.kv_layout == "paged" \
+    return PagedLayout(config.paged_attn) if config.kv_layout == "paged" \
         else ContiguousLayout()

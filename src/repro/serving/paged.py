@@ -178,6 +178,21 @@ class PagedAllocator:
         return self.allocator.free_blocks
 
     @property
+    def held_blocks(self) -> list:
+        """Blocks currently held per slot (the up-front reservation) —
+        the per-slot upper bound on blocks a decode tick can touch; the
+        kernel's actual per-tick walk is ``ceil(position + 1 / T)``."""
+        return list(self._held)
+
+    def slot_lengths(self, positions) -> list:
+        """Per-slot valid KV lengths for a tick at ``positions`` (the
+        engine's per-slot write positions): length = position + 1,
+        clipped to the slot's reservation; slots holding nothing
+        (inactive — every table entry NULL) report 0."""
+        return [min(int(p) + 1, h * self.block_size) if h else 0
+                for p, h in zip(positions, self._held)]
+
+    @property
     def capacity_tokens(self) -> int:
         return self.pool_blocks * self.block_size
 
@@ -245,6 +260,7 @@ class BlockPagingPlan:
         specs = jax.tree.leaves(model.cache_spec(batch_size, max_seq))
         assert len(paths_axes) == len(specs), "cache axes drift"
         self.plans = []          # (bax, paged) per leaf
+        self.token_bytes = 0     # paged-leaf bytes per token position
         for (path, ax), spec in zip(paths_axes, specs):
             bax = ax.index("batch")
             cross = any("cross" in str(k) for k in path)
@@ -253,6 +269,11 @@ class BlockPagingPlan:
             if paged:
                 assert ax.index("kv_seq") == bax + 1, (
                     f"paged leaf needs seq right after batch, got {ax}")
+                n = 1
+                for d in spec.shape:
+                    n *= d
+                self.token_bytes += (n // (batch_size * max_seq)
+                                     * jnp.dtype(spec.dtype).itemsize)
             self.plans.append((bax, paged))
 
     def init_pool(self, model) -> tuple:
@@ -271,6 +292,31 @@ class BlockPagingPlan:
             shape[bax + 1] = self.T
             out.append(jnp.zeros(tuple(shape), leaf.dtype))
         return jax.tree.unflatten(treedef, out), treedef
+
+    @property
+    def geometry(self) -> dict:
+        """Pool geometry for kernels / benchmarks / bytes accounting."""
+        return {"block_size": self.T, "blocks_per_seq": self.nb,
+                "pool_rows": self.pool_rows, "batch": self.B,
+                "max_seq": self.max_seq, "token_bytes": self.token_bytes}
+
+    # -- per-tick KV traffic estimates (the gather-vs-kernel delta) ----------
+    def gather_bytes_per_tick(self) -> int:
+        """KV bytes the GATHER step moves per decode tick: the dense
+        (B, nb*T) view is materialized from the pool (read + write),
+        read again by dense attention, and one block per slot scattered
+        back — O(B * max_seq) no matter how short the live requests."""
+        dense = self.B * self.nb * self.T * self.token_bytes
+        return 3 * dense + self.B * self.T * self.token_bytes
+
+    def kernel_bytes_per_tick(self, lengths) -> int:
+        """KV bytes the gather-free KERNEL step touches for the given
+        per-slot valid lengths: only the blocks each slot's table
+        references (streamed once), plus the one-position in-place
+        append per slot — O(blocks touched)."""
+        lengths = [int(x) for x in lengths]
+        blocks = sum(blocks_for(x, self.T) for x in lengths)
+        return (blocks * self.T + len(lengths)) * self.token_bytes
 
     def map_batch_axes(self, dense, fn):
         """Apply ``fn(leaf, batch_axis)`` to every leaf of a DENSE
@@ -360,6 +406,14 @@ class PagedCacheManager(PagedAllocator):
         self._tables_dev = None     # cached device copy of the tables
 
     # -- step inputs ---------------------------------------------------------
+    @property
+    def geometry(self) -> dict:
+        """Pool geometry (block size / blocks-per-seq / pool rows /
+        per-token bytes) — what the KV-bytes accounting in
+        ``benchmarks/serving_ladder.py`` and ad-hoc tooling consume
+        instead of reaching into the plan."""
+        return self.plan.geometry
+
     def pool_shardings(self, placement):
         """Sharding tree for the pool: every leaf sharded at its plan
         axis — the pool-row axis for paged leaves, the batch axis for

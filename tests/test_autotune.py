@@ -190,6 +190,50 @@ def test_serving_backend_ladder_state_machine():
     # paper-scoped backends still top out at O5
     kb = KernelModelBackend(costmodel.MACHSUITE_PROFILES["gemm"])
     assert kb.candidate_steps(OptLevel.O5) == []
+    with pytest.raises(ValueError, match="paged_attn"):
+        ServingBackend("qwen3-8b", paged_attn="flash")
+
+
+def test_serving_backend_measures_paged_attn_by_race():
+    """At the paged rung with ``paged_attn="auto"`` the backend measures
+    BOTH the gather step and the gather-free kernel step on interleaved
+    repeats, keeps the winner (gather on tie/loss), and records the race
+    in meta — the AutoDSE keep-only-when-it-wins rule applied to the
+    attention implementation knob."""
+    b = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
+                       max_new=3, repeats=1, kv_block_size=4)
+    m = b.measure(OptLevel.O6)
+    walls = m.meta["paged_attn_walls"]
+    assert set(walls) == {"gather", "kernel"}
+    assert all(w > 0 for w in walls.values())
+    assert m.meta["paged_attn"] in ("gather", "kernel")
+    # the winner rule: kernel only displaces gather beyond the 1% floor
+    if walls["kernel"] < 0.99 * walls["gather"]:
+        assert m.meta["paged_attn"] == "kernel"
+    else:
+        assert m.meta["paged_attn"] == "gather"
+    assert m.total_s == walls[m.meta["paged_attn"]]
+    # below the paged rung there is no race and no race meta
+    m5 = b.measure(OptLevel.O5)
+    assert "paged_attn_walls" not in m5.meta
+
+    # pinning the knob skips the race but still records the impl
+    bk = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
+                        max_new=3, repeats=1, kv_block_size=4,
+                        paged_attn="kernel")
+    mk = bk.measure(OptLevel.O6)
+    assert mk.meta["paged_attn"] == "kernel"
+    assert list(mk.meta["paged_attn_walls"]) == ["kernel"]
+    assert mk.meta["generated"] == m.meta["generated"]
+
+    # pinning "kernel" on a family WITHOUT a paged decode step degrades
+    # to gather — and the walls record what actually ran, not the request
+    br = ServingBackend("rwkv6-3b", batch_size=2, max_seq=16, n_requests=2,
+                        max_new=3, repeats=1, kv_block_size=4,
+                        paged_attn="kernel")
+    mr = br.measure(OptLevel.O6)
+    assert mr.meta["paged_attn"] == "gather"
+    assert list(mr.meta["paged_attn_walls"]) == ["gather"]
 
 
 @pytest.mark.slow

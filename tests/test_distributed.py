@@ -289,20 +289,30 @@ def test_sharded_paged_serving_oracle():
         e6s, g6s = run(BestEffortConfig(level=OptLevel.O6, pe=4,
                                         kv_block_size=4,
                                         kv_pool_blocks=20))
+        # the gather-free kernel on the SAME block-axis-sharded pool:
+        # the step replicates the pool in-graph for the kernel call and
+        # out_shardings re-shard the written pool onto the block axis
+        e6k, g6k = run(BestEffortConfig(level=OptLevel.O6, pe=4,
+                                        kv_block_size=4,
+                                        kv_pool_blocks=20,
+                                        paged_attn="kernel"))
         assert e5.placement.n_devices == 4 and e5.layout.name == \\
             "contiguous"
         assert e6.placement.n_devices == 1 and e6.layout.name == "paged"
         assert e6s.placement.n_devices == 4 and e6s.layout.name == "paged"
+        assert e6k.placement.n_devices == 4 and \\
+            e6k.layout.attn_impl == "kernel"
         # the pool really is sharded on its BLOCK axis, rows padded to a
-        # device multiple
-        leaves = jax.tree.leaves(e6s.cache_mgr.cache)
-        paged_leaf, (bax, _) = next(
-            (leaf, plan) for leaf, plan
-            in zip(leaves, e6s.cache_mgr.plan.plans) if plan[1])
-        assert paged_leaf.shape[bax] % 4 == 0, paged_leaf.shape
-        assert paged_leaf.sharding.spec[bax] == "data", \\
-            paged_leaf.sharding.spec
-        assert g5 == g6 == g6s, "sharded-paged tokens diverged"
+        # device multiple — on the kernel cell too
+        for eng in (e6s, e6k):
+            leaves = jax.tree.leaves(eng.cache_mgr.cache)
+            paged_leaf, (bax, _) = next(
+                (leaf, plan) for leaf, plan
+                in zip(leaves, eng.cache_mgr.plan.plans) if plan[1])
+            assert paged_leaf.shape[bax] % 4 == 0, paged_leaf.shape
+            assert paged_leaf.sharding.spec[bax] == "data", \\
+                paged_leaf.sharding.spec
+        assert g5 == g6 == g6s == g6k, "sharded-paged tokens diverged"
         print("OK sharded paged oracle", len(g6s))
     """, n_devices=4)
     assert "OK" in out

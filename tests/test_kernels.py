@@ -11,6 +11,8 @@ from repro.kernels.tiled_matmul.ops import matmul, pick_blocks
 from repro.kernels.tiled_matmul.ref import matmul_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.rwkv6_wkv.ops import wkv
 from repro.kernels.rwkv6_wkv.ref import wkv_ref
 from repro.kernels.mamba2_ssd.ops import ssd
@@ -111,6 +113,132 @@ def test_flash_attention_bf16():
     assert out.dtype == jnp.bfloat16
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref), rtol=0.06, atol=0.03)
+
+
+def test_flash_attention_gqa_no_repeat_bitwise_matches_repeated():
+    """The GQA fix: the per-KV-head grid (k-block index maps pointing at
+    the kv group's stream) must be BITWISE identical to feeding the
+    kernel explicitly repeated K/V — same per-stream compute, minus the
+    H/Hkv materialized copies the old wrapper paid before every call."""
+    for B, S, H, Hkv, D in [(2, 64, 4, 2, 16), (1, 128, 6, 2, 32),
+                            (2, 64, 4, 1, 16)]:
+        q = jax.random.normal(KEYS[0], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(KEYS[1], (B, S, Hkv, D), jnp.float32)
+        v = jax.random.normal(KEYS[2], (B, S, Hkv, D), jnp.float32)
+        rep = H // Hkv
+        out = flash_attention(q, k, v, block_q=32, block_k=32)
+        ref = flash_attention(q, jnp.repeat(k, rep, 2),
+                              jnp.repeat(v, rep, 2),
+                              block_q=32, block_k=32)
+        assert np.array_equal(np.asarray(out), np.asarray(ref)), (B, H, Hkv)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (block-table-aware, gather-free)
+# ---------------------------------------------------------------------------
+
+def _paged_case(B, H, KV, D, T, nb, *, extra_rows=2, dtype=jnp.float32,
+                seed=1, full_lengths=False):
+    """Random pool/tables/lengths with real blocks covering each slot's
+    valid prefix and NULL (row 0) entries past it — the allocator's
+    invariant.  ``extra_rows`` leaves unreferenced pool rows (the padded
+    rows a sharded placement adds) holding garbage that must not leak."""
+    r = np.random.default_rng(seed)
+    lengths = (np.full(B, nb * T) if full_lengths
+               else r.integers(1, nb * T + 1, B))
+    R = 1 + B * nb + extra_rows
+    kp = r.normal(size=(R, T, KV, D)).astype(np.float32)
+    vp = r.normal(size=(R, T, KV, D)).astype(np.float32)
+    tables = np.zeros((B, nb), np.int32)
+    free = list(range(1, R))
+    r.shuffle(free)
+    for b in range(B):
+        for j in range(-(-int(lengths[b]) // T)):
+            tables[b, j] = free.pop()
+    q = r.normal(size=(B, H, D)).astype(np.float32)
+    return (jnp.asarray(q, dtype), jnp.asarray(kp, dtype),
+            jnp.asarray(vp, dtype), jnp.asarray(tables),
+            jnp.asarray(lengths, jnp.int32))
+
+
+@pytest.mark.parametrize("dims", [
+    (3, 4, 2, 16, 4, 8),     # GQA, partial final blocks
+    (2, 2, 2, 32, 8, 4),     # MHA
+    (1, 3, 1, 16, 4, 3),     # single kv head, odd group
+    (4, 8, 2, 16, 16, 2),    # wide groups, big blocks
+])
+def test_paged_attention_vs_ref(dims):
+    q, kp, vp, tables, lengths = _paged_case(*dims)
+    out = paged_attention(q, kp, vp, tables, lengths)
+    ref = paged_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_paged_attention_full_lengths_and_block_invariance():
+    """Full sequences (no partial block) agree with the ref, and the
+    same logical content paged at different block sizes agrees with
+    itself (block size is layout, not math)."""
+    q, kp, vp, tables, lengths = _paged_case(2, 4, 2, 16, 4, 8,
+                                             full_lengths=True)
+    out = paged_attention(q, kp, vp, tables, lengths)
+    ref = paged_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+    # repage T=4 content into T=8 blocks: dense views identical
+    B, nb, T = 2, 8, 4
+    dense_k = np.asarray(kp)[np.asarray(tables)].reshape(B, nb * T, 2, 16)
+    dense_v = np.asarray(vp)[np.asarray(tables)].reshape(B, nb * T, 2, 16)
+    kp2 = np.concatenate([np.zeros((1, 8, 2, 16), np.float32),
+                          dense_k.reshape(B * 4, 8, 2, 16)])
+    vp2 = np.concatenate([np.zeros((1, 8, 2, 16), np.float32),
+                          dense_v.reshape(B * 4, 8, 2, 16)])
+    tables2 = np.arange(1, B * 4 + 1, dtype=np.int32).reshape(B, 4)
+    out2 = paged_attention(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                           jnp.asarray(tables2), lengths)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_paged_attention_bf16():
+    q, kp, vp, tables, lengths = _paged_case(3, 4, 2, 16, 4, 6,
+                                             dtype=jnp.bfloat16)
+    out = paged_attention(q, kp, vp, tables, lengths)
+    ref = paged_attention_ref(q, kp, vp, tables, lengths)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0.06, atol=0.03)
+
+
+def test_paged_attention_null_block_garbage_never_leaks():
+    """Mutating the NULL block (row 0) and every unreferenced pool row
+    must not change any output — the length mask plus the in-range block
+    skip are what make paging safe."""
+    q, kp, vp, tables, lengths = _paged_case(3, 4, 2, 16, 4, 6, seed=9)
+    out = np.asarray(paged_attention(q, kp, vp, tables, lengths))
+    referenced = set()
+    for b in range(3):
+        for j in range(-(-int(lengths[b]) // 4)):
+            referenced.add(int(tables[b, j]))
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    for row in range(kp2.shape[0]):
+        if row not in referenced:
+            kp2[row] = 1e3
+            vp2[row] = -1e3
+    out2 = np.asarray(paged_attention(q, jnp.asarray(kp2),
+                                      jnp.asarray(vp2), tables, lengths))
+    assert np.array_equal(out, out2)
+
+
+def test_paged_attention_rejects_bad_shapes():
+    q, kp, vp, tables, lengths = _paged_case(2, 3, 2, 16, 4, 4)
+    with pytest.raises(ValueError, match="multiple"):
+        paged_attention(q, kp, vp, tables, lengths)   # 3 heads, 2 kv
+    q, kp, vp, tables, lengths = _paged_case(2, 4, 2, 16, 4, 4)
+    with pytest.raises(ValueError, match="mismatch"):
+        paged_attention(q, kp, vp[..., :8], tables, lengths)
 
 
 # ---------------------------------------------------------------------------

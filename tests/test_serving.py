@@ -186,8 +186,9 @@ def _run_mix(mix, level, *, arch="qwen3-8b", policy="fcfs", B=3,
 def test_differential_fuzz_paged_vs_contiguous(seed, policy):
     """Random request mixes (prompt lengths, budgets, eos positions,
     mid-flight arrivals, fcfs/spf) decode to bit-identical greedy tokens
-    on the contiguous O5 path and the paged O6 path — including a pool
-    small enough that the block gate queues admissions."""
+    on the contiguous O5 path and BOTH paged O6 steps — the gather step
+    and the gather-free block-table kernel — including a pool small
+    enough that the block gate queues admissions."""
     cfg, _, _ = _model()
     mix = _random_mix(seed, cfg.vocab)
     ref = _run_mix(mix, OptLevel.O5, policy=policy)
@@ -199,6 +200,10 @@ def test_differential_fuzz_paged_vs_contiguous(seed, policy):
     paged = _run_mix(mix, OptLevel.O6, policy=policy, eos=eos, late_from=5,
                      kv_block_size=4, kv_pool_blocks=14)
     assert paged == ref, f"paged diverged (seed={seed}, {policy})"
+    kernel = _run_mix(mix, OptLevel.O6, policy=policy, eos=eos,
+                      late_from=5, kv_block_size=4, kv_pool_blocks=14,
+                      paged_attn="kernel")
+    assert kernel == ref, f"paged kernel diverged (seed={seed}, {policy})"
     # and the naive O0 rebuild path computes the same function
     if seed == 1:
         naive = _run_mix(mix, OptLevel.O0, policy=policy, eos=eos,
@@ -227,6 +232,170 @@ def test_paged_recurrent_state_zeroed_on_slot_reuse(arch):
     ref = [_run_mix(mix, lvl, arch=arch, B=2, max_seq=24, kv_block_size=8)
            for lvl in (OptLevel.O5, OptLevel.O6)]
     assert ref[0] == ref[1], arch
+
+
+def test_paged_kernel_attn_impl_recorded_and_fallback():
+    """``paged_attn="kernel"`` builds the gather-free step for
+    transformer families and records ``attn_impl="kernel"``; a family
+    without a paged decode step (recurrent rwkv) degrades to the gather
+    step — recorded, never an exception, and still bit-identical to O5
+    (the best-effort degradation contract)."""
+    eng, _ = _engine(B=2, max_seq=16,
+                     config=BestEffortConfig(level=OptLevel.O6,
+                                             kv_block_size=4,
+                                             paged_attn="kernel"))
+    assert eng.layout.paged_attn == "kernel"
+    assert eng.layout.attn_impl == "kernel"
+
+    mix = [([5, 6, 7], 4), ([9, 9], 5), ([3, 1, 4], 3)]
+    ref = [_run_mix(mix, lvl, arch="rwkv6-3b", B=2, max_seq=24,
+                    kv_block_size=8,
+                    **({"paged_attn": "kernel"}
+                       if lvl is OptLevel.O6 else {}))
+           for lvl in (OptLevel.O5, OptLevel.O6)]
+    assert ref[0] == ref[1]
+    eng2, _ = _engine("rwkv6-3b", B=2, max_seq=24,
+                      config=BestEffortConfig(level=OptLevel.O6,
+                                              kv_block_size=8,
+                                              paged_attn="kernel"))
+    assert eng2.layout.attn_impl == "gather"      # degraded, recorded
+
+    with pytest.raises(ValueError, match="paged_attn"):
+        _engine(B=2, max_seq=16,
+                config=BestEffortConfig(level=OptLevel.O6,
+                                        paged_attn="flash"))
+
+
+def test_paged_manager_geometry_and_slot_lengths():
+    """The manager's pool-introspection surface (what the serving-ladder
+    bytes accounting replays the schedule with): geometry mirrors the
+    plan, slot_lengths clips to each slot's reservation and reports 0
+    for slots holding nothing, and held_blocks tracks admissions."""
+    _, model, _ = _model()
+    from repro.serving import PagedCacheManager
+
+    mgr = PagedCacheManager(model, 3, 16, block_size=4)
+    geo = mgr.geometry
+    assert geo["block_size"] == 4 and geo["blocks_per_seq"] == 4
+    assert geo["batch"] == 3 and geo["max_seq"] == 16
+    assert geo["pool_rows"] == mgr.plan.pool_rows
+    assert geo["token_bytes"] == mgr.plan.token_bytes > 0
+
+    assert mgr.held_blocks == [0, 0, 0]
+    assert mgr.slot_lengths([5, 5, 5]) == [0, 0, 0]     # nothing held
+    mgr.admit_slot(1, Request(prompt=[1, 2, 3], max_new_tokens=2))
+    assert mgr.held_blocks == [0, 2, 0]                 # ceil(5 / 4)
+    # position 3 -> length 4; position 9 clips to the 2-block (8-token)
+    # reservation; unheld slots stay 0 whatever position is passed
+    assert mgr.slot_lengths([7, 3, 7]) == [0, 4, 0]
+    assert mgr.slot_lengths([0, 9, 0]) == [0, 8, 0]
+    # the bytes estimate is blocks-touched + one append per slot
+    tb = geo["token_bytes"]
+    assert mgr.plan.kernel_bytes_per_tick([0, 4, 0]) == (4 + 3) * tb
+    assert mgr.plan.gather_bytes_per_tick() == (3 * 3 * 16 + 3 * 4) * tb
+
+
+def test_paged_kernel_compact_mid_flight_preserves_tokens():
+    """The kernel path reads whatever rows the (rewritten) tables point
+    at, so copy-on-admit defrag must be transparent to it exactly as it
+    is to the gather path."""
+    mix = _random_mix(13, _model()[0].vocab, n=6)
+    ref = _run_mix(mix, OptLevel.O6, kv_block_size=4)
+
+    eng, _ = _engine(B=3, max_seq=32,
+                     config=BestEffortConfig(level=OptLevel.O6,
+                                             kv_block_size=4,
+                                             paged_attn="kernel"))
+    rids = [eng.submit(Request(prompt=list(p), max_new_tokens=n))
+            for p, n in mix]
+    for _ in range(4):
+        eng.step()
+        eng.cache_mgr.compact()
+        eng.cache_mgr.check_conservation()
+    fin = {r.rid: r.generated for r in eng.run()}
+    assert [fin[rid] for rid in rids] == ref
+
+
+# ---------------------------------------------------------------------------
+# Property test: gather/scatter round-trips bit-exactly (the reference
+# semantics the paged kernel is diffed against)
+# ---------------------------------------------------------------------------
+
+from tests._hypothesis_compat import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(1, 4))
+def test_paged_gather_scatter_round_trip(seed, block, row_multiple):
+    """``BlockPagingPlan.gather`` o ``scatter`` round-trips bit-exactly:
+    with the dense view unmodified, scattering it back must leave every
+    real pool row (and the padding rows a sharded placement adds — they
+    are never in any table) bit-identical; only the NULL row may absorb
+    garbage.  Holds under partially-filled final blocks and positions
+    anywhere in the slot's reservation.  This pins the reference
+    semantics the gather-free kernel is differentially fuzzed against."""
+    from repro.serving.paged import NULL_BLOCK, BlockPagingPlan, blocks_for
+
+    rng = np.random.default_rng(seed)
+    _, model, _ = _model()
+    B, max_seq = 3, 24
+    nb = blocks_for(max_seq, block)
+    pool_blocks = B * nb
+    plan = BlockPagingPlan(model, B, max_seq, block, pool_blocks,
+                           row_multiple=row_multiple)
+    assert plan.pool_rows % row_multiple == 0
+
+    key = jax.random.PRNGKey(seed)
+    pool, _ = plan.init_pool(model)
+    pool = jax.tree.map(
+        lambda leaf: jax.random.normal(key, leaf.shape).astype(leaf.dtype),
+        pool)
+
+    # random occupancy: each slot holds a random token reservation
+    held_tokens = rng.integers(1, max_seq + 1, B)
+    tables = np.full((B, nb), NULL_BLOCK, np.int32)
+    free = list(range(1, pool_blocks + 1))
+    rng.shuffle(free)
+    for b in range(B):
+        for j in range(blocks_for(int(held_tokens[b]), block)):
+            tables[b, j] = free.pop()
+    positions = jnp.asarray([int(rng.integers(0, h)) for h in held_tokens],
+                            jnp.int32)
+    tables_dev = jnp.asarray(tables)
+
+    dense = plan.gather(pool, tables_dev)
+    pool2 = plan.scatter(pool, tables_dev, dense, positions)
+
+    for before, after, (bax, paged) in zip(jax.tree.leaves(pool),
+                                           jax.tree.leaves(pool2),
+                                           plan.plans):
+        b_np, a_np = np.asarray(before), np.asarray(after)
+        if not paged:
+            np.testing.assert_array_equal(a_np, b_np)   # state: replaced
+            continue
+        for row in range(plan.pool_rows):
+            if row == NULL_BLOCK:
+                continue                  # garbage sink, by design
+            idx = [slice(None)] * b_np.ndim
+            idx[bax] = row
+            np.testing.assert_array_equal(
+                a_np[tuple(idx)], b_np[tuple(idx)],
+                err_msg=f"row {row} changed (referenced: "
+                        f"{row in set(tables.flatten())})")
+
+    # and the re-gathered view matches the original at every position
+    # inside each slot's reservation (outside it the view reads NULL)
+    dense2 = plan.gather(pool2, tables_dev)
+    for g1, g2, (bax, paged) in zip(jax.tree.leaves(dense),
+                                    jax.tree.leaves(dense2), plan.plans):
+        if not paged:
+            continue
+        g1, g2 = np.asarray(g1), np.asarray(g2)
+        for b in range(B):
+            idx = [slice(None)] * g1.ndim
+            idx[bax] = b
+            idx[bax + 1] = slice(0, int(held_tokens[b]))
+            np.testing.assert_array_equal(g1[tuple(idx)], g2[tuple(idx)])
 
 
 def test_paged_step_fn_combination_rejected():
@@ -337,7 +506,7 @@ def test_paged_compact_mid_flight_preserves_tokens():
         eng.cache_mgr.compact()
         eng.cache_mgr.check_conservation()
         held = sorted({b for row, n in zip(eng.cache_mgr.tables,
-                                           eng.cache_mgr._held)
+                                           eng.cache_mgr.held_blocks)
                        for b in row[:n].tolist()})
         assert held == list(range(1, len(held) + 1))   # packed prefix
     fin = {r.rid: r.generated for r in eng.run()}
