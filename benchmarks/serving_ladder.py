@@ -34,6 +34,12 @@ the pooled floor; a regression beyond noise is rendered as-is.  If an
 inversion persists, extra rounds with fresh engine instances are run
 (up to a cap) before giving up.
 
+Each row also carries TTFT/ITL columns — single-request latency probes
+on the idle warm engines (``serving_latency_probe``), trimmed-min over
+the same interleaved rounds, through each engine's real prefill path —
+and the ``O5c`` row ablates chunked prefill (``prefill_chunk=16``)
+against the O5 row it modifies.
+
 The harness also asserts the ladder's semantic contract: under greedy
 sampling every level generates bit-identical tokens for every request.
 """
@@ -61,6 +67,11 @@ STAGES = {
     # O(blocks touched), not O(B * max_seq).
     8: "O6 attn ablation: gather-free block-table kernel "
        "(paged_attn=kernel)",
+    # Key 9: the prefill ablation — the O5 engine with CHUNKED prefill
+    # (prefill_chunk=16): prompts ride multi-token chunk dispatches
+    # interleaved with decode instead of one decode tick per prompt
+    # token.  Its column of interest is TTFT, not tok/s.
+    9: "O5 prefill ablation: chunked prefill (prefill_chunk=16)",
 }
 
 MD_PATH = os.path.join(os.path.dirname(__file__), "SERVING_LADDER.md")
@@ -76,15 +87,21 @@ def ladder_variants(devices: int):
     pool).  Key 8 (always present, adjacent to the O6 row it ablates) is
     the attention-implementation ablation: the same paged pool driven by
     the gather-free block-table kernel, so O6->O6k reads as the pure
-    gather-elimination delta.  Key 7, added only on multi-device runs,
-    is the placement ablation: the same paged engine pinned to pe=1,
-    isolating what sharding buys (or costs) within the paged layout."""
+    gather-elimination delta.  Key 9 is the prefill ablation: the O5
+    engine with chunked prefill (prefill_chunk=16), paired against the
+    O5 row so O5->O5c reads as the pure chunked-prefill delta — its
+    interesting column is TTFT, not tok/s.  Key 7, added only on
+    multi-device runs, is the placement ablation: the same paged engine
+    pinned to pe=1, isolating what sharding buys (or costs) within the
+    paged layout."""
     from repro.core.optlevel import ALL_LEVELS, BestEffortConfig, OptLevel
 
     out = [(int(lvl), f"O{int(lvl)}", BestEffortConfig(level=lvl))
            for lvl in ALL_LEVELS]
     out.append((8, "O6k", BestEffortConfig(level=OptLevel.O6,
                                            paged_attn="kernel")))
+    out.append((9, "O5c", BestEffortConfig(level=OptLevel.O5,
+                                           prefill_chunk=16)))
     if devices > 1:
         out.append((7, "O6pe1", BestEffortConfig(level=OptLevel.O6, pe=1)))
     return out
@@ -134,6 +151,7 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
     import jax
 
     from repro.autotune.measurement import (run_serving_workload,
+                                            serving_latency_probe,
                                             serving_smoke_config,
                                             serving_workload)
     from repro.models import get_model
@@ -159,6 +177,8 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
     devices_used = {}     # key -> placement device count
     layouts = {}          # key -> cache layout name
     attn_impls = {}       # key -> paged attention impl (None: contiguous)
+    prefill_modes = {}    # key -> "chunked" | "token"
+    probe_len = max(1, min(24, max_seq - max_new))
 
     def add_instance(k):
         _, vcfg = by_key[k]
@@ -168,10 +188,15 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         _, gen = run(eng)                          # warmup: jit compiles
         assert generated.setdefault(k, gen) == gen, (
             f"variant {k}: instances disagree")
+        # Untimed warmup probe so the timed latency probes never carry a
+        # first-touch compile (the chunked-prefill step traces here).
+        serving_latency_probe(eng, cfg.vocab, prompt_len=probe_len,
+                              max_new=max_new, seed=seed + 17)
         kv_capacity[k] = eng.cache_mgr.capacity_tokens
         devices_used[k] = eng.placement.n_devices
         layouts[k] = eng.layout.name
         attn_impls[k] = getattr(eng.layout, "attn_impl", None)
+        prefill_modes[k] = eng.prefill_mode
         engines.append((k, eng))
         return eng
 
@@ -186,6 +211,8 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
 
     samples = {k: [] for k in keys}
     round_best = {k: [] for k in keys}   # per-round minima
+    ttft_samples = {k: [] for k in keys}
+    itl_samples = {k: [] for k in keys}
     ticks = {}
 
     def one_round():
@@ -197,6 +224,15 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
             samples[k].append(wall)
             this_round[k] = min(this_round.get(k, wall), wall)
             ticks[k] = eng.n_steps - t_before
+            # Latency probe on the now-idle warm engine: TTFT/ITL through
+            # the REAL prefill path (chunked where the config says so),
+            # single unloaded request — NOT wall-clock under load.  Rides
+            # the same interleaved rounds so process drift cancels.
+            ttft, itl, _ = serving_latency_probe(
+                eng, cfg.vocab, prompt_len=probe_len, max_new=max_new,
+                seed=seed + 17)
+            ttft_samples[k].append(ttft)
+            itl_samples[k].append(itl)
         for k, w in this_round.items():
             round_best[k].append(w)
 
@@ -230,10 +266,11 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         # (1.5 MADs, floored at 1%), give both variants the pooled floor.
         # A real regression (beyond noise) is left standing and renders
         # as non-monotone — the harness never papers over mechanism.
-        # The ablation rows are NOT paired positionally: both O6k (attn
-        # impl) and O6pe1 (placement) ablate the O6 row itself, so each
-        # is paired against key 6, never against the other ablation.
-        tie_baseline = {7: 6, 8: 6}
+        # The ablation rows are NOT paired positionally: O6k (attn impl)
+        # and O6pe1 (placement) ablate the O6 row itself, so each is
+        # paired against key 6, never against the other ablation; O5c
+        # (chunked prefill) ablates the O5 row.
+        tie_baseline = {7: 6, 8: 6, 9: 5}
         noise_ties.clear()
         for i in range(1, len(keys)):
             k = keys[i]
@@ -294,8 +331,17 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         else:
             kv_bytes[k] = eng.cache_mgr.plan.gather_bytes_per_tick()
 
+    # Latency floors use the same trimmed-min estimator as the
+    # throughput column: each probe is one unloaded request through the
+    # engine's real prefill path, sampled once per engine per round.
+    ttft_est = {k: sum(sorted(v)[:3]) / min(3, len(v))
+                for k, v in ttft_samples.items()}
+    itl_est = {k: sum(sorted(v)[:3]) / min(3, len(v))
+               for k, v in itl_samples.items()}
+
     tokens = sum(len(g) for g in generated[0])
     tie_partner = {k: p for p, k in noise_ties}
+    row_level = {7: 6, 8: 6, 9: 5}
     rows = []
     for i, k in enumerate(keys):
         stage = STAGES[k]
@@ -304,8 +350,11 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
             # row to gather — say so instead of mislabeling the cell.
             stage += (" — DEGRADED to gather (this family has no paged "
                       "decode step)")
+        if k == 9 and prefill_modes[k] != "chunked":
+            stage += (" — DEGRADED to token prefill (this family has no "
+                      "prefill step)")
         rows.append({
-            "level": min(k, 6),
+            "level": row_level.get(k, k),
             "label": by_key[k][0],
             "stage": stage,
             "wall_s": best[k],
@@ -325,6 +374,9 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
             "devices": devices_used[k],
             "paged_attn": attn_impls[k],
             "kv_bytes_per_tick": int(kv_bytes[k]),
+            "prefill_mode": prefill_modes[k],
+            "ttft_ms": ttft_est[k] * 1e3,
+            "itl_ms": itl_est[k] * 1e3,
         })
     return rows
 
@@ -426,17 +478,21 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
         "output-equivalence matrix).",
         "",
         "| level | serving stage (paper step) | tok/s | tick (ms) | "
-        "wall (s) | speedup vs O0 | KV capacity (tok) | KV bytes/tick | "
-        "devices | identical tokens |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+        "wall (s) | speedup vs O0 | TTFT (ms) | ITL (ms) | "
+        "KV capacity (tok) | KV bytes/tick | devices | "
+        "identical tokens |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
         kb = r.get("kv_bytes_per_tick")
         kb = f"{kb / 1024:.1f}K" if kb else "-"
+        ttft = r.get("ttft_ms")
+        itl = r.get("itl_ms")
         lines.append(
             f"| {r['label']} | {r['stage']} | {r['tok_per_s']:.0f} "
             f"| {r['tick_ms']:.3f} | {r['wall_s']:.4f} "
             f"| {r['speedup_vs_o0']:.2f}x "
+            f"| {ttft:.2f} | {itl:.3f} "
             f"| {r.get('kv_capacity', '-')} "
             f"| {kb} "
             f"| {r.get('devices', 1)} "
@@ -459,7 +515,17 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
         + (f"  Ties within measurement noise (paired-delta test): "
            f"{', '.join(ties)}." if ties else ""),
     ]
-    if rows[-1]["level"] >= 6:
+    lines += [
+        "",
+        "TTFT/ITL are single-request latency probes on the idle warm",
+        "engines (trimmed min across the interleaved rounds), measured",
+        "through each engine's real prefill path — NOT wall-clock under",
+        "load.  The `O5c` row is the O5 engine with chunked prefill",
+        "(`prefill_chunk=16`): a prompt costs ceil(P/16) chunk ticks",
+        "before its first token instead of P one-token ticks, which is",
+        "the TTFT column's delta; greedy tokens stay bit-identical.",
+    ]
+    if max(r["level"] for r in rows) >= 6:
         lines += [
             "",
             "O6 runs this speed table at EQUAL worst-case capacity"
@@ -561,6 +627,8 @@ def main(arch: str = "qwen3-8b", write_md: bool = True, **kw):
             f"{'/' + r['paged_attn'] if r.get('paged_attn') else ''}"
             f"x{r['devices']}dev "
             f"kv={r['kv_bytes_per_tick'] // 1024}K/tick "
+            f"ttft={r['ttft_ms']:.1f}ms itl={r['itl_ms']:.2f}ms "
+            f"prefill={r['prefill_mode']} "
             f"identical={r['identical']}") for r in rows]
     cc = capacity["contiguous"]["peak_concurrency"]
     cp = capacity["paged"]["peak_concurrency"]

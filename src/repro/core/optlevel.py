@@ -159,6 +159,14 @@ class BestEffortConfig:
     # fall back to gather, and the autotuner measures both and keeps
     # the winner (gather on tie/loss).
     paged_attn: str = "gather"
+    # Chunked prefill: 0 keeps the legacy prestaged path (each prompt
+    # token rides one decode tick); > 0 processes prompts in chunks of
+    # this many tokens, one chunk per tick, interleaved with in-flight
+    # decode — TTFT drops from O(prompt_len) ticks to
+    # O(ceil(prompt_len / chunk)).  Best-effort contract: families
+    # without a prefill step (MoE, recurrent-state) degrade to the
+    # legacy path, and greedy tokens are bit-identical either way.
+    prefill_chunk: int = 0
 
     def with_level(self, level: OptLevel) -> "BestEffortConfig":
         return dataclasses.replace(self, level=level)

@@ -27,7 +27,8 @@ NEG_INF = -1e30
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                 *, scale: float, causal: bool, block_q: int, block_k: int):
+                 *, scale: float, causal: bool, block_q: int, block_k: int,
+                 offset: int = 0):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -47,11 +48,14 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             preferred_element_type=jnp.float32) * scale   # (bq, bk)
 
         if causal:
+            # query row r sits at absolute kv position r + offset (the
+            # chunked-prefill case: S_kv = prefix + S_q, offset = S_kv -
+            # S_q; offset == 0 is the classic square mask).
             rows = qi * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 0)
             cols = ki * block_k + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 1)
-            s = jnp.where(cols <= rows, s, NEG_INF)
+            s = jnp.where(cols <= rows + offset, s, NEG_INF)
 
         m_prev = m_ref[...]                       # (bq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
@@ -64,8 +68,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         m_ref[...] = m_new
 
     if causal:
-        # skip blocks strictly above the diagonal (no data touched)
-        @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+        # skip blocks strictly above the (offset) diagonal
+        @pl.when(ki * block_k <= qi * block_q + block_q - 1 + offset)
         def _():
             _block()
     else:
@@ -89,29 +93,36 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     """q: (B*H, S, D) -> (B*H, S, D), same dtype as q.
 
     GQA runs on the grid, not on copied data: with ``n_heads`` /
-    ``n_kv_heads`` given, k and v are the UN-repeated (B*Hkv, S, D)
+    ``n_kv_heads`` given, k and v are the UN-repeated (B*Hkv, S_kv, D)
     streams and each q stream's k-block index map points at its kv
     group's stream (``(b // H) * Hkv + (b % H) // G``) — the kernel body
     is untouched, so the output is bit-identical to feeding it repeated
     K/V, without ever materializing the H/Hkv copies.  Defaulting both
     to 0 keeps the legacy H == Hkv contract.
+
+    ``S_kv >= S_q`` is allowed (the chunked-prefill query mode): the
+    causal mask shifts by ``offset = S_kv - S_q``, i.e. query row r
+    attends kv positions ``<= r + offset`` — with S_kv == S_q this is
+    the classic square causal mask, unchanged.
     """
     BH, S, D = q.shape
+    Skv = k.shape[1]
     H = n_heads or BH
     Hkv = n_kv_heads or H
     assert H % Hkv == 0 and BH % H == 0, (BH, H, Hkv)
     group = H // Hkv
     BHkv = (BH // H) * Hkv
-    assert k.shape == v.shape == (BHkv, S, D), (q.shape, k.shape, v.shape)
+    assert Skv >= S, (S, Skv)
+    assert k.shape == v.shape == (BHkv, Skv, D), (q.shape, k.shape, v.shape)
     block_q = min(block_q, S)
-    block_k = min(block_k, S)
-    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    block_k = min(block_k, Skv)
+    assert S % block_q == 0 and Skv % block_k == 0, (S, Skv, block_q, block_k)
     scale = 1.0 / (D ** 0.5)
 
-    grid = (BH, S // block_q, S // block_k)
+    grid = (BH, S // block_q, Skv // block_k)
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal=causal,
-        block_q=block_q, block_k=block_k)
+        block_q=block_q, block_k=block_k, offset=Skv - S)
 
     def kv_stream(b):
         return (b // H) * Hkv + (b % H) // group
@@ -133,6 +144,8 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
         ],
         out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        # NaN guard for rectangular causal: offset >= 0 keeps every query
+        # row's diagonal block in range, so l > 0 always holds here too.
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),

@@ -1,1 +1,2 @@
-from repro.kernels.paged_attention.ops import paged_attention  # noqa: F401
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_attention, paged_prefill_attention)

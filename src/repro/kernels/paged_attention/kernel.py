@@ -127,6 +127,131 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, scale: float,
+                          block_size: int, n_blocks: int, q_len: int):
+    """Multi-query (qlen > 1) variant of ``_paged_attn_kernel``.
+
+    The q block carries ``G * Q`` rows (g-major: row r is query position
+    ``r % Q`` of query head ``r // Q``), and the causal mask is per ROW:
+    query position ``qi`` attends kv positions ``idx <= start + qi``,
+    i.e. ``idx < length - (Q - 1 - qi)`` with ``length = start + Q``.
+    With Q == 1 every expression degenerates to the decode kernel's —
+    same block layout, same mask, same rounding sites — so qlen==1 is
+    bit-identical to ``_paged_attn_kernel`` (locked by a kernel test).
+
+    Row safety: every row's limit is ``start + qi + 1 >= 1``, so logical
+    block 0 (walked first) always contributes at least one valid score
+    per row — ``m`` is real before any fully-masked block is seen, and a
+    fully-masked block then contributes ``exp(-1e30 - m) == 0``.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    jj = j % n_blocks
+    phase = j // n_blocks
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    in_range = jj * block_size < length
+
+    def scores():
+        s = _scores(q_ref, k_ref, jj, length, scale=scale,
+                    block_size=block_size)              # (G*Q, T)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % q_len
+        idx = jj * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        return jnp.where(idx < length - (q_len - 1 - qi), s, NEG_INF)
+
+    @pl.when((phase == 0) & in_range)
+    def _stats():
+        s = scores()
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+
+    @pl.when((phase == 1) & in_range)
+    def _accumulate():
+        s = scores()
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
+        p = p.astype(q_ref.dtype).astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
+                                   interpret: bool = True):
+    """q: (B, Q, H, D) — Q query tokens per slot, causally masked against
+    a paged KV prefix whose last Q positions ARE those tokens;
+    k_pool/v_pool: (R, T, KV, D); tables: (B, nb); lengths: (B,) int32 =
+    start + Q valid positions per slot (the chunk's K/V already
+    appended).  Returns (B, Q, H, D) in q's dtype."""
+    B, Q, H, D = q.shape
+    R, T, KV, Dk = k_pool.shape
+    assert Dk == D and v_pool.shape == k_pool.shape, (q.shape, k_pool.shape)
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    nb = tables.shape[1]
+    assert tables.shape == (B, nb) and lengths.shape == (B,), (
+        tables.shape, lengths.shape)
+    scale = 1.0 / (D ** 0.5)
+
+    # g-major row layout: (B, Q, H, D) -> (B, H*Q, D); kv-head h's block
+    # is rows [h*G*Q, (h+1)*G*Q) — row r is (head h*G + r//Q, query r%Q).
+    qr = q.transpose(0, 2, 1, 3).reshape(B, H * Q, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, 2 * nb),
+        in_specs=[
+            pl.BlockSpec((1, G * Q, D),
+                         lambda b, h, j, tbl, lens: (b, h, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, h, j, tbl, lens:
+                         (tbl[b, j % nb], 0, h, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, h, j, tbl, lens:
+                         (tbl[b, j % nb], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G * Q, D),
+                               lambda b, h, j, tbl, lens: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G * Q, 1), jnp.float32),
+            pltpu.VMEM((G * Q, 1), jnp.float32),
+            pltpu.VMEM((G * Q, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale,
+                               block_size=T, n_blocks=nb, q_len=Q)
+    kw = {}
+    if not interpret:
+        kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H * Q, D), q.dtype),
+        interpret=interpret,
+        **kw,
+    )(tables, lengths, qr, k_pool, v_pool)
+    return out.reshape(B, H, Q, D).transpose(0, 2, 1, 3)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
                            interpret: bool = True):

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_pallas, paged_prefill_attention_pallas)
 
 
 def paged_attention(q, k_pool, v_pool, tables, lengths, *,
@@ -36,5 +37,32 @@ def paged_attention(q, k_pool, v_pool, tables, lengths, *,
         raise ValueError(f"pool/query shape mismatch: q {q.shape}, "
                          f"k {k_pool.shape}, v {v_pool.shape}")
     return paged_attention_pallas(
+        q, k_pool, v_pool, tables.astype(jnp.int32),
+        lengths.astype(jnp.int32), interpret=interpret)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, tables, lengths, *,
+                            interpret: bool = True):
+    """Multi-token (qlen > 1) prefill attention off the paged pool — the
+    chunked-prefill / speculative-decoding query mode.
+
+    q: (B, Q, H, D) — Q consecutive query tokens per slot, causally
+        masked: query position qi attends kv positions <= start + qi.
+    k_pool, v_pool: (R, T, KV, D) — the chunk's K/V must already be
+        appended at positions [start, start + Q).
+    tables: (B, nb) int — physical pool row of each logical block.
+    lengths: (B,) int — ``start + Q`` valid positions per slot.
+
+    Returns (B, Q, H, D) in q's dtype.  Q == 1 is bit-identical to
+    :func:`paged_attention` (same block layout, masks, and roundings).
+    """
+    B, Q, H, D = q.shape
+    R, T, KV, Dk = k_pool.shape
+    if H % KV != 0:
+        raise ValueError(f"H={H} must be a multiple of KV={KV}")
+    if Dk != D or v_pool.shape != k_pool.shape:
+        raise ValueError(f"pool/query shape mismatch: q {q.shape}, "
+                         f"k {k_pool.shape}, v {v_pool.shape}")
+    return paged_prefill_attention_pallas(
         q, k_pool, v_pool, tables.astype(jnp.int32),
         lengths.astype(jnp.int32), interpret=interpret)

@@ -32,3 +32,27 @@ def paged_attention_ref(q, k_pool, v_pool, tables, lengths):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, dv)
     return o.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q, k_pool, v_pool, tables, lengths):
+    """Multi-query oracle: q (B, Q, H, D); lengths = start + Q.  Query
+    position qi attends kv positions <= start + qi (per-row causal mask
+    over the same gathered dense view)."""
+    B, Q, H, D = q.shape
+    _, T, KV, _ = k_pool.shape
+    nb = tables.shape[1]
+    G = H // KV
+
+    dk = k_pool[tables].reshape(B, nb * T, KV, D).astype(jnp.float32)
+    dv = v_pool[tables].reshape(B, nb * T, KV, D).astype(jnp.float32)
+    qg = q.reshape(B, Q, KV, G, D).astype(jnp.float32)
+
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, dk) / (D ** 0.5)
+    idx = jnp.arange(nb * T)
+    # row qi's limit: start + qi + 1 == lengths - (Q - 1 - qi)
+    limit = (lengths[:, None] - (Q - 1 - jnp.arange(Q))[None, :])
+    s = jnp.where(idx[None, None, None, None, :]
+                  < limit[:, :, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, dv)
+    return o.reshape(B, Q, H, D).astype(q.dtype)

@@ -37,7 +37,7 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                level: OptLevel = OptLevel.O5, policy: str = "fcfs",
                sampler: SamplerConfig = None, pe: int = 8,
                kv_block_size: int = 16, kv_pool_blocks: int = 0,
-               paged_attn: str = "gather") -> dict:
+               paged_attn: str = "gather", prefill_chunk: int = 0) -> dict:
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     engine = DecodeEngine(model, params, batch_size=batch_size,
@@ -46,7 +46,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                               level=level, pe=pe,
                               kv_block_size=kv_block_size,
                               kv_pool_blocks=kv_pool_blocks,
-                              paged_attn=paged_attn),
+                              paged_attn=paged_attn,
+                              prefill_chunk=prefill_chunk),
                           policy=policy, sampler=sampler)
 
     rng = np.random.default_rng(seed)
@@ -69,6 +70,7 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
         "layout": engine.layout.name,
         "devices": engine.placement.n_devices,
         "paged_attn": getattr(engine.layout, "attn_impl", None),
+        "prefill_mode": engine.prefill_mode,
     }
 
 
@@ -102,6 +104,13 @@ def main():
                          "kernel runs the gather-free block-table "
                          "Pallas kernel on the raw pool (families "
                          "without a paged decode step fall back)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: consume prompts in chunks of "
+                         "this many tokens, one chunk per tick, "
+                         "interleaved with decode (0 = legacy one-token-"
+                         "per-tick prestaged path; families without a "
+                         "prefill step degrade; greedy tokens identical "
+                         "either way)")
     ap.add_argument("--expect-devices", type=int, default=0,
                     help="exit 1 unless the engine's placement landed on "
                          "exactly this many devices (CI smoke)")
@@ -116,11 +125,14 @@ def main():
                      sampler=sampler, pe=args.pe,
                      kv_block_size=args.kv_block,
                      kv_pool_blocks=args.kv_pool_blocks,
-                     paged_attn=args.paged_attn)
+                     paged_attn=args.paged_attn,
+                     prefill_chunk=args.prefill_chunk)
     for r in out["finished"][:4]:
         print(f"[serve] req {r.rid}: prompt[{r.n_prompt}] -> "
               f"{r.generated}")
     attn = f"/{out['paged_attn']}" if out["paged_attn"] else ""
+    if args.prefill_chunk:
+        attn += f"/prefill={out['prefill_mode']}({args.prefill_chunk})"
     print(f"[serve] O{args.level}/{args.policy} "
           f"[{out['layout']}{attn} x {out['devices']} device(s)]: "
           f"{len(out['finished'])} requests, {out['tokens']} new "

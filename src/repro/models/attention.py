@@ -259,6 +259,96 @@ def decode_attention(params, x, cache, positions, *, n_heads, n_kv, head_dim,
     return out, new_cache
 
 
+def chunk_prefill_attention(params, x, cache, positions, *, n_heads, n_kv,
+                            head_dim, qk_norm=False, rope_theta=1e4):
+    """Multi-token (prompt-chunk) attention against a dense KV cache —
+    the qlen > 1 sibling of :func:`decode_attention`.
+
+    x: (B, C, d) — C consecutive prompt tokens per slot.
+    positions: (B, C) — each token's absolute cache index.  Rows past
+    the prompt (the padded tail of the final chunk) carry clipped
+    positions; their K/V writes land at future positions that are
+    rewritten in-graph before first read (the engine's standing garbage
+    invariant) and their outputs are discarded by the caller.
+    Returns (out (B, C, d), new_cache).  Row arithmetic is identical to
+    the single-token path (per-row projections, rope, masked f32
+    softmax over the same cache rows), which is what keeps chunked
+    prefill bit-identical to feeding the prompt one token at a time.
+    """
+    B, C, d = x.shape
+    dt = x.dtype
+    scale = head_dim ** -0.5
+    group = n_heads // n_kv
+
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+
+    b_idx = jnp.arange(B)[:, None]
+    ck = cache["k"].at[b_idx, positions].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[b_idx, positions].set(v.astype(cache["v"].dtype))
+
+    ck = constrain(ck, "batch", "kv_seq", "kv", None)
+    cv = constrain(cv, "batch", "kv_seq", "kv", None)
+    S = ck.shape[1]
+
+    qg = q.reshape(B, C, n_kv, group, head_dim)
+    s = jnp.einsum("bthgk,bshk->bhgts", qg, ck.astype(dt)) * scale
+    s = s.astype(jnp.float32)
+    kv_pos = jnp.arange(S)[None, None]
+    valid = kv_pos <= positions[:, :, None]              # (B, C, S)
+    s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(dt)
+    o = jnp.einsum("bhgts,bshk->bthgk", p, cv.astype(dt))
+    o = o.reshape(B, C, n_heads, head_dim)
+    out = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(dt))
+    return out, {"k": ck, "v": cv}
+
+
+def paged_chunk_prefill_attention(params, x, cache, tables, positions,
+                                  lengths, *, n_heads, n_kv, head_dim,
+                                  qk_norm=False, rope_theta=1e4):
+    """Prompt-chunk attention straight off the paged block pool — the
+    qlen > 1 sibling of :func:`paged_decode_attention`.
+
+    x: (B, C, d); cache: {"k","v"} pool leaves (R, T, KV, dh);
+    tables: (B, nb); positions: (B, C) absolute index per chunk token
+    (clipped for the padded tail — those writes go to in-reservation
+    blocks or the NULL block, both write-garbage-safe); lengths: (B,)
+    UNCLIPPED ``start + C`` so the kernel's per-row causal limits stay
+    exact for the real rows even when the padded tail clips.
+    Returns (out (B, C, d), new pool leaves).
+    """
+    from repro.kernels.paged_attention.ops import paged_prefill_attention
+
+    B, C, d = x.shape
+    dt = x.dtype
+    T = cache["k"].shape[1]
+
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+
+    rows = jnp.take_along_axis(tables, positions // T, axis=1)   # (B, C)
+    offs = positions % T
+    ck = cache["k"].at[rows, offs].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, offs].set(v.astype(cache["v"].dtype))
+
+    o = paged_prefill_attention(q, ck, cv, tables, lengths)
+    out = jnp.einsum("bthk,hkd->btd", o.astype(dt), params["wo"].astype(dt))
+    return out, {"k": ck, "v": cv}
+
+
 def paged_decode_attention(params, x, cache, tables, positions, *, n_heads,
                            n_kv, head_dim, qk_norm=False, rope_theta=1e4):
     """Gather-free decode attention against a paged KV block pool.

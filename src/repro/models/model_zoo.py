@@ -35,6 +35,17 @@ class ModelAPI:
     # without it (recurrent-state rwkv/mamba, hybrid, enc-dec) — the
     # paged layout then falls back to the gather step.
     paged_decode_step: Callable = None
+    # Chunked prefill (params, cache, tokens (B, C), start (B,), last
+    # (B,)) -> (logits, cache): C prompt tokens per call, logits taken
+    # at each row's ``last`` index.  None for families where a chunk is
+    # not equivalent to C single-token steps — MoE (expert capacity is
+    # token-count-dependent) and recurrent-state families (parked
+    # pad-feeds would corrupt carried state) — the engine then degrades
+    # to the legacy one-token-per-tick prestaged path.
+    prefill_step: Callable = None
+    # Same, straight off the paged pool via the multi-query kernel:
+    # (params, pool, tables, tokens, start, last) -> (logits, pool).
+    paged_prefill_step: Callable = None
 
 
 def get_model(cfg: ArchConfig) -> ModelAPI:
@@ -55,6 +66,18 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
                       mod.paged_decode_step(cfg, params, pool, tables,
                                             tokens, positions))
 
+    prefill = paged_prefill = None
+    if hasattr(mod, "prefill_step") and not cfg.n_experts:
+        prefill = (lambda params, cache, tokens, start, last:
+                   mod.prefill_step(cfg, params, cache, tokens, start,
+                                    last))
+        if hasattr(mod, "paged_prefill_step"):
+            paged_prefill = (lambda params, pool, tables, tokens, start,
+                             last:
+                             mod.paged_prefill_step(cfg, params, pool,
+                                                    tables, tokens, start,
+                                                    last))
+
     return ModelAPI(
         cfg=cfg,
         init=lambda rng: mod.init(cfg, rng),
@@ -69,6 +92,8 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
             mod.init_cache(cfg, batch, max_seq),
         cache_axes=lambda: mod.cache_axes(cfg),
         paged_decode_step=paged_step,
+        prefill_step=prefill,
+        paged_prefill_step=paged_prefill,
     )
 
 

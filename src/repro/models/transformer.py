@@ -153,15 +153,21 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
                         cache_spec(cfg, batch, max_seq, dtype))
 
 
-def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body):
+def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body,
+                   last=None):
     """Shared decode skeleton: embed -> scan layers -> final norm ->
     logits.  ``attn_body`` is the pluggable decode-attention hook applied
     per layer — dense attention on a per-slot cache view
     (:func:`decode_step`), or the paged Pallas kernel on the raw block
     pool (:func:`paged_decode_step`); ``kv_leaves`` are the matching
-    (k, v) stacked-over-layers cache leaves it consumes and rewrites."""
+    (k, v) stacked-over-layers cache leaves it consumes and rewrites.
+
+    ``tokens`` may carry C >= 1 positions per row (chunked prefill).
+    ``last`` (B,) selects the logits row per slot — the chunk's final
+    REAL prompt token, so a padded final chunk still emits the right
+    first token; ``None`` keeps the decode path's row 0 untouched."""
     dt = jnp.dtype(cfg.compute_dtype)
-    h = params["embedding"].astype(dt)[tokens]           # (B, 1, d)
+    h = params["embedding"].astype(dt)[tokens]           # (B, C, d)
 
     def body(h, xs):
         layer_params, ck, cv = xs
@@ -183,7 +189,9 @@ def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body):
     h, (nk, nv) = scan_or_unroll(body, h, (params["layers"],) + kv_leaves,
                                  unroll=cfg.unroll_layers)
     h = rms_norm(h, params["final_norm"])
-    logits = (h[:, 0] @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    hl = h[:, 0] if last is None else jnp.take_along_axis(
+        h, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    logits = (hl @ params["lm_head"].astype(dt)).astype(jnp.float32)
     return logits, {"k": nk, "v": nv}
 
 
@@ -223,6 +231,58 @@ def paged_decode_step(cfg: ArchConfig, params, pool, tables, tokens,
 
     return _decode_layers(cfg, params, (pool["k"], pool["v"]), tokens,
                           attn_body)
+
+
+def prefill_step(cfg: ArchConfig, params, cache, tokens, start, last):
+    """One prompt-chunk step against the dense cache: tokens (B, C)
+    int32 — C consecutive prompt tokens per slot starting at cache
+    position ``start`` (B,); ``last`` (B,) is the row index of the
+    chunk's final real token.  Returns (logits (B, vocab_padded) for the
+    ``last`` rows, new_cache).  The padded tail of a final chunk rides
+    along with clipped positions — its K/V writes land at future
+    positions that are rewritten before first read, its logits rows are
+    never selected.  Not valid for MoE configs (expert capacity is
+    token-count-dependent); the ModelAPI wiring gates that."""
+    C = tokens.shape[1]
+    max_seq = cache["k"].shape[2]
+    positions = jnp.clip(start[:, None] + jnp.arange(C)[None], 0,
+                         max_seq - 1).astype(jnp.int32)
+
+    def attn_body(layer_params, hn, ck, cv):
+        return attn.chunk_prefill_attention(
+            layer_params["attn"], hn, {"k": ck, "v": cv}, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        )
+
+    return _decode_layers(cfg, params, (cache["k"], cache["v"]), tokens,
+                          attn_body, last=last)
+
+
+def paged_prefill_step(cfg: ArchConfig, params, pool, tables, tokens,
+                       start, last):
+    """Prompt-chunk step straight off the paged block pool: the chunk's
+    K/V is scattered into pool blocks through the slot's table and the
+    multi-query Pallas kernel attends the whole prefix — the dense view
+    is never materialized.  Same signature discipline as
+    :func:`prefill_step` plus the tables."""
+    C = tokens.shape[1]
+    T = pool["k"].shape[2]
+    nb = tables.shape[1]
+    positions = jnp.clip(start[:, None] + jnp.arange(C)[None], 0,
+                         nb * T - 1).astype(jnp.int32)
+    lengths = (start + C).astype(jnp.int32)      # unclipped: exact row masks
+
+    def attn_body(layer_params, hn, ck, cv):
+        return attn.paged_chunk_prefill_attention(
+            layer_params["attn"], hn, {"k": ck, "v": cv}, tables,
+            positions, lengths,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        )
+
+    return _decode_layers(cfg, params, (pool["k"], pool["v"]), tokens,
+                          attn_body, last=last)
 
 
 # ---------------------------------------------------------------------------

@@ -77,6 +77,23 @@ class CacheManager:
         dispatch path layout-blind."""
         return ()
 
+    def insert_slot(self, i: int, state):
+        """Install an externally prefilled batch-1 cache tree into slot
+        ``i`` (the INSERT phase of prefill->insert->generate): each leaf
+        of ``state`` matches the engine cache leaf with its batch axis
+        collapsed to 1, and is copied over that slot's slice.  The
+        contiguous copy is exact — the paged manager overrides this to
+        scatter the sequence axis through slot ``i``'s block table."""
+        leaves, treedef = jax.tree.flatten(self.cache)
+        st_leaves = jax.tree.leaves(state)
+        assert len(leaves) == len(st_leaves), "prefill state tree drift"
+        out = []
+        for leaf, st, bax in zip(leaves, st_leaves, self.batch_axes):
+            sel = (slice(None),) * bax + (i,)
+            out.append(leaf.at[sel].set(
+                jnp.take(st, 0, axis=bax).astype(leaf.dtype)))
+        self.cache = jax.tree.unflatten(treedef, out)
+
     def _find_batch_axes(self) -> list:
         axes_tree = self.model.cache_axes()
         leaves_axes = jax.tree.leaves(

@@ -35,12 +35,31 @@ selected here once — the engine itself never branches on them again, so
 O3 x O6 compose (a paged engine with ``effective_pe > 1`` on >= 2
 devices runs a block-axis-sharded step) instead of excluding each other.
 
-Unified prefill/decode: every step feeds one token per active slot — a
-slot still consuming its prompt feeds the next prompt token (its logits
-are discarded), a generating slot feeds its last sampled token.  This
-keeps one jitted step for all families (KV-cache transformers, RWKV/SSM
-state models, enc-dec) and is exactly how slot-based TPU serving engines
-handle heterogeneous request phases.
+Prefill is a first-class phase with two implementations:
+
+  * LEGACY prestaged (``config.prefill_chunk == 0``): every step feeds
+    one token per active slot — a slot still consuming its prompt feeds
+    the next prompt token (its logits are discarded), a generating slot
+    feeds its last sampled token.  One jitted step serves all families
+    (KV-cache transformers, RWKV/SSM state models, enc-dec) and all
+    request phases; TTFT is O(prompt_len) ticks.
+  * CHUNKED (``config.prefill_chunk > 0``): prompts are consumed in
+    fixed-size multi-token chunks — one batch-1 chunk dispatch per tick
+    for the head of the scheduler's prefill queue, interleaved with the
+    batched decode step over the generating slots (prefilling slots are
+    parked in that step: fed their real next prompt token so the row
+    stays harmless, but advanced only by chunks).  TTFT drops to
+    O(ceil(prompt_len / chunk)) ticks.  Families without a model prefill
+    step (MoE, recurrent-state), sharded placements, caller step_fns and
+    the un-pipelined O0/O1 loop degrade to the legacy path
+    (``prefill_mode == "token"``); greedy tokens are bit-identical
+    either way — the same oracle the O0..O6 ladder pins.
+
+The phases are also exposed directly (the JetStream-style serving API):
+``prefill(prompt)`` consumes a prompt on a standalone batch-1 cache and
+samples the first token, ``insert(result)`` installs that KV state into
+a free slot (scattering it through a freshly reserved block table under
+the paged layout), and ``generate()`` drains the decode loop.
 
 Admission, slot bookkeeping and retirement live in ``scheduler``; the
 engine is only the tick loop that wires scheduler, cache manager, sampler
@@ -49,6 +68,7 @@ and overlap together under one config.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import numpy as np
@@ -60,6 +80,18 @@ from repro.serving.layout import select_layout, shared_steps
 from repro.serving.overlap import HostOverlap
 from repro.serving.sampler import SamplerConfig
 from repro.serving.scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass
+class PrefillResult:
+    """Output of the standalone PREFILL phase — everything INSERT needs:
+    the request (rid already assigned, so stochastic sampling seeds are
+    stable), the first sampled token, and the batch-1 dense cache tree
+    holding the prompt's K/V (or recurrent state)."""
+    request: Request
+    first_token: int
+    kv_state: object
+    length: int          # prompt tokens consumed
 
 
 class DecodeEngine:
@@ -124,6 +156,18 @@ class DecodeEngine:
                          if self.level.has(Step.DOUBLE_BUFFERING) else None)
         self._pending = None        # (toks_future, emissions) of last tick
 
+        # Chunked prefill: a single-slot multi-token chunk step, or None
+        # when this (model, layout, placement) cell cannot chunk — the
+        # tick loop then runs the legacy prestaged prompt path.
+        self._prefill_chunk = int(self.config.prefill_chunk)
+        self._prefill_fn = None
+        if (self._prefill_chunk > 0 and self._fused and step_fn is None
+                and not self.placement.sharded):
+            self._prefill_fn = self.layout.make_prefill_step(
+                model, self.sampler_cfg, self.cache_mgr, self.placement)
+        self.prefill_mode = ("chunked" if self._prefill_fn is not None
+                             else "token")
+
     # -- public API -----------------------------------------------------------
     @property
     def cache(self):
@@ -143,6 +187,103 @@ class DecodeEngine:
 
     def submit(self, req: Request) -> int:
         return self.scheduler.submit(req)
+
+    # -- prefill -> insert -> generate ---------------------------------------
+    def prefill(self, prompt, *, max_new_tokens: int = 16,
+                eos_id: Optional[int] = None,
+                chunk: Optional[int] = None) -> PrefillResult:
+        """PREFILL phase: consume ``prompt`` on a standalone batch-1
+        contiguous cache — in multi-token chunks when the model has a
+        prefill step, else one token per step — and sample the first
+        generated token.  No engine slot is touched: :meth:`insert`
+        installs the returned KV state into a free slot (scattering it
+        through a block table under the paged layout) and
+        :meth:`generate` decodes from there.  Greedy tokens are
+        bit-identical to submitting the same request through the
+        engine's internal admission path."""
+        req = Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
+                      eos_id=eos_id)
+        req.rid = next(self.scheduler._rid)
+        if req.n_prompt < 1:
+            raise ValueError(f"req {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"req {req.rid}: prefill needs max_new_tokens >= 1")
+        if req.n_prompt + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"req {req.rid}: prompt ({req.n_prompt}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds engine max_seq "
+                f"({self.max_seq})")
+        cfg = self.sampler_cfg
+        shared = shared_steps(self.model, cfg)
+        cache = self.model.init_cache(1, self.max_seq)
+        P = req.n_prompt
+        seed = cfg.request_seed(req.rid, 0) if cfg.stochastic else 0
+        if self.model.prefill_step is not None:
+            C = int(chunk or self._prefill_chunk or min(P, 64))
+            fn = shared["prefill"]
+            pos = 0
+            tok_dev = None
+            while pos < P:
+                n = min(C, P - pos)
+                toks = np.full((1, C), self.pad_id, np.int32)
+                toks[0, :n] = req.prompt[pos:pos + n]
+                tok_dev, cache = fn(
+                    self.params, cache, jnp.int32(0), jnp.asarray(toks),
+                    jnp.asarray([pos], jnp.int32),
+                    jnp.asarray([n - 1], jnp.int32),
+                    jnp.asarray([seed], jnp.int32))
+                pos += n
+            first = int(np.asarray(tok_dev))
+        else:
+            # Per-token fallback: works for every family (recurrent
+            # state included) — the same batch-1 step the O0 loop runs.
+            single, sample = shared["single"], shared["sample"]
+            logits = None
+            for p in range(P):
+                logits, cache = single(
+                    self.params, cache, jnp.int32(req.prompt[p]),
+                    jnp.int32(p), jnp.int32(0))
+            if cfg.stochastic:
+                first = int(sample(jnp.asarray(logits)[None],
+                                   jnp.asarray([seed], jnp.int32))[0])
+            else:
+                first = int(np.asarray(logits).argmax())
+        return PrefillResult(request=req, first_token=first,
+                             kv_state=cache, length=P)
+
+    def insert(self, result: PrefillResult,
+               slot: Optional[int] = None) -> int:
+        """INSERT phase: occupy a free slot with a prefilled request.
+        Copies the batch-1 KV state over the slot's cache slice
+        (contiguous) or scatters it through the slot's freshly reserved
+        block table (paged), places the scheduler slot at the
+        post-prompt position and records the first token — after which
+        the request decodes like any other.  Raises when no slot is
+        free or (paged) the pool cannot hold the request's reservation
+        right now; callers queue and retry after retirements."""
+        sched = self.scheduler
+        req = result.request
+        if slot is None:
+            free = [i for i, s in enumerate(sched.slots) if not s.active]
+            if not free:
+                raise ValueError("no free slot to insert into")
+            slot = free[0]
+        if (sched.admission_gate is not None
+                and not sched.admission_gate(req)):
+            raise ValueError(
+                "insufficient free KV blocks to insert (retire requests "
+                "or enlarge the pool)")
+        sched.place(req, slot)          # fires on_admit (block reserve)
+        self.cache_mgr.insert_slot(slot, result.kv_state)
+        sched.advance(slot, result.first_token)
+        return slot
+
+    def generate(self, *, max_ticks: int = 10_000) -> list:
+        """GENERATE phase: drain inserted and queued requests — an alias
+        of :meth:`run`, named for the prefill->insert->generate
+        protocol."""
+        return self.run(max_ticks=max_ticks)
 
     def step(self) -> bool:
         """One engine tick: admit, run the batched decode step, retire."""
@@ -166,6 +307,40 @@ class DecodeEngine:
         self.cache_mgr.cache = new_cache
         self.n_steps += 1
         return toks_dev
+
+    def _prefill_tick(self, i: int):
+        """Dispatch one prefill CHUNK for slot ``i`` and do its
+        bookkeeping: up to ``prefill_chunk`` prompt tokens in one
+        batch-1 multi-token step (padded to the fixed chunk width so a
+        single trace serves every chunk).  The chunk that consumes the
+        LAST prompt token also emits the request's first generated token
+        — sampled in-graph from the chunk's closing logits and handed to
+        ``advance`` so all retirement logic is reused; earlier chunks
+        only move the position (``advance_chunk``)."""
+        sched = self.scheduler
+        s = sched.slots[i]
+        r = s.req
+        C = self._prefill_chunk
+        start = s.pos
+        n = min(C, r.n_prompt - start)
+        toks = np.full((1, C), self.pad_id, np.int32)
+        toks[0, :n] = r.prompt[start:start + n]
+        final = start + n == r.n_prompt
+        cfg = self.sampler_cfg
+        seed = cfg.request_seed(r.rid, 0) if cfg.stochastic and final else 0
+        tok_dev, new_cache = self._prefill_fn(
+            self.params, self.cache_mgr.cache,
+            *self.cache_mgr.step_extras(),
+            jnp.int32(i), jnp.asarray(toks),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray([n - 1], jnp.int32),
+            jnp.asarray([seed], jnp.int32))
+        self.cache_mgr.cache = new_cache
+        if final:
+            sched.advance_chunk(i, n - 1)
+            sched.advance(i, int(np.asarray(tok_dev)))
+        else:
+            sched.advance_chunk(i, n)
 
     def _step_serial(self) -> bool:
         """O0..O3: admit -> fill -> dispatch -> wait -> retire, in order.
@@ -204,6 +379,25 @@ class DecodeEngine:
                 sched.advance(i, toks[i])
             return True
 
+        # Chunked prefill: one prompt chunk (head of the prefill queue)
+        # dispatches before the batched step; slots still consuming
+        # their prompt are PARKED in that step — fed their real next
+        # prompt token (so the row's write is the value a later chunk
+        # rewrites) but advanced only by chunks.
+        if self._prefill_fn is not None:
+            pf = sched.prefill_queue()
+            if pf:
+                self._prefill_tick(pf[0])
+                active = sched.active_indices   # chunk may have retired
+            if not active:
+                return True
+            gen = [i for i in active
+                   if slots[i].pos >= slots[i].req.n_prompt]
+            if not gen:
+                return True                     # prefill-only tick
+        else:
+            gen = active
+
         # O2/O3: one batched fused step for every active slot.
         tokens_np = np.asarray(
             [[s.next_token() if s.active else self.pad_id]
@@ -217,7 +411,7 @@ class DecodeEngine:
 
         toks_dev = self._dispatch(tokens_np, positions_np, seeds_np)
         toks = np.asarray(toks_dev).reshape(self.B, -1)[:, -1]
-        for i in active:
+        for i in gen:
             sched.advance(i, toks[i])
         return True
 
@@ -261,7 +455,19 @@ class DecodeEngine:
         toks_dev = self._dispatch(buf.tokens, buf.positions, buf.seeds)
 
         # -- bookkeeping for the next tick, under the running step -----------
-        emissions = sched.tick_advance(active)
+        # Chunked prefill rides the overlap seam: the chunk dispatch is
+        # queued behind the decode step (so the device never idles), and
+        # prefilling slots are parked — excluded from tick_advance; their
+        # positions move through the chunk's own bookkeeping.
+        if self._prefill_fn is not None:
+            gen = [i for i in active
+                   if sched.slots[i].pos >= sched.slots[i].req.n_prompt]
+            pf = sched.prefill_queue()
+            if pf:
+                self._prefill_tick(pf[0])
+        else:
+            gen = active
+        emissions = sched.tick_advance(gen)
         self._pending = (toks_dev, emissions)
         admitted = sched.admit()                 # refills planned-free slots
         if admitted:

@@ -198,9 +198,32 @@ def shared_steps(model, sampler_cfg):
             for leaf, new, bax in zip(leaves, row_leaves, batch_axes)])
         return _last_logits(logits)[0], new_cache
 
+    def _prefill(params, cache, islot, tokens, start, last, seeds):
+        """One slot's prefill CHUNK: slice slot ``islot``'s cache rows,
+        run a batch-1 multi-token prefill step over ``tokens`` (1, C)
+        starting at absolute position ``start``, write the rows back and
+        sample the logits at row ``last`` (the chunk's final real
+        token — only the final chunk's sample is ever used).  Chunks are
+        PADDED to a fixed C, so one trace serves the whole prompt: pad
+        rows write at future (or clipped) positions that are either
+        overwritten in-graph before first read or masked, and their
+        logits are never selected."""
+        leaves, treedef = jax.tree.flatten(cache)
+        row = jax.tree.unflatten(treedef, [
+            jax.lax.dynamic_slice_in_dim(leaf, islot, 1, axis=bax)
+            for leaf, bax in zip(leaves, batch_axes)])
+        logits, new_row = weak.prefill_step(params, row, tokens, start,
+                                            last)
+        row_leaves = jax.tree.leaves(new_row)
+        new_cache = jax.tree.unflatten(treedef, [
+            jax.lax.dynamic_update_slice_in_dim(leaf, new, islot, axis=bax)
+            for leaf, new, bax in zip(leaves, row_leaves, batch_axes)])
+        return sample(logits, seeds)[0], new_cache
+
     _STEP_CACHE[key] = {
         "fused": jax.jit(make_fused(weak, sample), donate_argnums=(1,)),
         "single": jax.jit(_single, donate_argnums=(1,)),
+        "prefill": jax.jit(_prefill, donate_argnums=(1,)),
         "sample": jax.jit(sample),
     }
     # Evict on model death (runs at deallocation, before the id can be
@@ -229,10 +252,16 @@ class KVLayout:
     ``wire_scheduler``    — attach admission gate / lifecycle hooks.
     ``make_step``         — the jitted fused decode+sample step for
                             (this layout) x (this placement).
+    ``make_prefill_step`` — the jitted single-slot prefill-CHUNK step
+                            (or None when this layout x placement x
+                            model cell cannot chunk — the engine then
+                            degrades to the legacy one-token-per-tick
+                            prestaged prefill).
 
     The engine holds one of each and never branches on layout again; the
     extra per-tick step inputs (block tables) come from the manager's
-    ``step_extras()`` so the dispatch path is layout-blind too.
+    ``step_extras()`` so the dispatch path is layout-blind too — the
+    prefill step takes the same extras between cache and slot index.
     """
 
     name: str = "?"
@@ -246,6 +275,15 @@ class KVLayout:
 
     def make_step(self, model, sampler_cfg, manager, placement):
         raise NotImplementedError
+
+    def make_prefill_step(self, model, sampler_cfg, manager, placement):
+        """(params, cache, *extras, islot, tokens (1, C), start (1,),
+        last (1,), seeds (1,)) -> (token, cache), or None when this cell
+        cannot run a chunked prefill (no model prefill step, or a
+        sharded placement — a batch-1 chunk under a batch/block-sharded
+        program would retrace the whole step; the legacy path already
+        serves that cell)."""
+        return None
 
 
 class ContiguousLayout(KVLayout):
@@ -273,6 +311,11 @@ class ContiguousLayout(KVLayout):
             in_shardings=(placement.replicated, manager.shardings,
                           tok_sh, pos_sh, pos_sh),
             out_shardings=(pos_sh, manager.shardings))
+
+    def make_prefill_step(self, model, sampler_cfg, manager, placement):
+        if placement.sharded or model.prefill_step is None:
+            return None
+        return shared_steps(model, sampler_cfg)["prefill"]
 
 
 class PagedLayout(KVLayout):
@@ -347,6 +390,46 @@ class PagedLayout(KVLayout):
             fused, donate_argnums=(1,),
             in_shardings=(repl, pool_sh, repl, tok_sh, pos_sh, pos_sh),
             out_shardings=(pos_sh, pool_sh))
+
+    def make_prefill_step(self, model, sampler_cfg, manager, placement):
+        """The paged prefill chunk, matching ``attn_impl``:
+
+        * gather — slice slot ``islot``'s block-table row, gather its
+          single-slot dense view, run the SAME dense ``prefill_step``
+          the contiguous rungs run, scatter every block of the view
+          back (``scatter_view`` — a chunk spans several blocks).
+        * kernel — the model's ``paged_prefill_step`` writes chunk K/V
+          straight into pool blocks and runs the multi-query
+          block-table Pallas kernel; no dense view is built at all.
+
+        A kernel-mode engine whose model lacks a paged prefill step
+        degrades to gather (same best-effort rule as ``make_step``).
+        """
+        if placement.sharded or model.prefill_step is None:
+            return None
+        sample = make_sampler(sampler_cfg)
+        plan = manager.plan
+        use_kernel = (self.attn_impl == "kernel"
+                      and model.paged_prefill_step is not None)
+        if use_kernel:
+            def _prefill(params, pool, tables, islot, tokens, start, last,
+                         seeds):
+                row = jax.lax.dynamic_slice_in_dim(tables, islot, 1,
+                                                   axis=0)
+                logits, new_pool = model.paged_prefill_step(
+                    params, pool, row, tokens, start, last)
+                return sample(logits, seeds)[0], new_pool
+        else:
+            def _prefill(params, pool, tables, islot, tokens, start, last,
+                         seeds):
+                row = jax.lax.dynamic_slice_in_dim(tables, islot, 1,
+                                                   axis=0)
+                dense = plan.gather(pool, row)
+                logits, new_dense = model.prefill_step(
+                    params, dense, tokens, start, last)
+                new_pool = plan.scatter_view(pool, row, new_dense)
+                return sample(logits, seeds)[0], new_pool
+        return jax.jit(_prefill, donate_argnums=(1,))
 
 
 def select_layout(config: BestEffortConfig) -> KVLayout:

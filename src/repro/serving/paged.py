@@ -160,10 +160,24 @@ class PagedAllocator:
         table (up-front reservation = no mid-flight exhaustion)."""
         if self._held[i]:
             raise RuntimeError(f"slot {i} admitted while holding blocks")
-        n = self.blocks_needed(req)
         self.tables[i, :] = NULL_BLOCK
-        self.tables[i, :n] = self.allocator.allocate(n)
-        self._held[i] = n
+        self.grow_slot(i, self.reserved_tokens(req))
+
+    def grow_slot(self, i: int, total_tokens: int) -> int:
+        """Grow slot ``i``'s table to cover ``total_tokens`` positions,
+        allocating exactly ``blocks_for(total) - held`` new blocks — the
+        chunked-admission arithmetic: a chunk that ends mid-block shares
+        its active block with the next chunk, so growing by totals (not
+        by per-chunk ceil sums) never double-counts it.  Returns the
+        number of blocks added (0 when the reservation already covers
+        the total)."""
+        want = blocks_for(min(total_tokens, self.max_seq), self.block_size)
+        delta = want - self._held[i]
+        if delta <= 0:
+            return 0
+        self.tables[i, self._held[i]:want] = self.allocator.allocate(delta)
+        self._held[i] = want
+        return delta
 
     def release_slot(self, i: int, req=None) -> None:
         n = self._held[i]
@@ -328,19 +342,44 @@ class BlockPagingPlan:
 
     # Both halves below are traced inside the jitted decode step.
     def gather(self, pool, tables):
-        """pool tree + tables (B, nb) -> dense per-slot cache view with a
-        (possibly block-padded) sequence axis of nb*T >= max_seq."""
+        """pool tree + tables (Bv, nb) -> dense per-slot cache view with
+        a (possibly block-padded) sequence axis of nb*T >= max_seq.  Bv
+        is usually the full batch; the chunked-prefill step passes one
+        slot's table row (Bv == 1) to build a single-slot view."""
+        Bv = tables.shape[0]
         leaves, treedef = jax.tree.flatten(pool)
-        flat = tables.reshape(-1)                     # (B*nb,)
+        flat = tables.reshape(-1)                     # (Bv*nb,)
         out = []
         for leaf, (bax, paged) in zip(leaves, self.plans):
             if not paged:
                 out.append(leaf)
                 continue
-            g = jnp.take(leaf, flat, axis=bax)        # bax: B*nb, bax+1: T
-            shape = (g.shape[:bax] + (self.B, self.nb * self.T)
+            g = jnp.take(leaf, flat, axis=bax)        # bax: Bv*nb, bax+1: T
+            shape = (g.shape[:bax] + (Bv, self.nb * self.T)
                      + g.shape[bax + 2:])
             out.append(g.reshape(shape))
+        return jax.tree.unflatten(treedef, out)
+
+    def scatter_view(self, pool, tables, new_dense):
+        """Write back EVERY block of the given slots' dense views — the
+        chunked-prefill counterpart of :meth:`scatter` (a prompt chunk
+        spans several blocks, so the whole per-slot view gathered this
+        same tick is scattered back).  Untouched blocks rewrite their own
+        just-gathered values and NULL table entries absorb the padded
+        tail into the write-garbage NULL row."""
+        Bv, nb = tables.shape
+        pool_leaves, treedef = jax.tree.flatten(pool)
+        dense_leaves = jax.tree.leaves(new_dense)
+        out = []
+        for leaf, dense, (bax, paged) in zip(pool_leaves, dense_leaves,
+                                             self.plans):
+            if not paged:
+                out.append(dense)                     # whole-state replace
+                continue
+            shape = (dense.shape[:bax] + (Bv * nb, self.T)
+                     + dense.shape[bax + 2:])
+            sel = (slice(None),) * bax + (tables.reshape(-1),)
+            out.append(leaf.at[sel].set(dense.reshape(shape)))
         return jax.tree.unflatten(treedef, out)
 
     def scatter(self, pool, tables, new_dense, positions):
@@ -441,6 +480,12 @@ class PagedCacheManager(PagedAllocator):
         super().admit_slot(i, req)
         self._tables_dev = None
 
+    def grow_slot(self, i: int, total_tokens: int) -> int:
+        added = super().grow_slot(i, total_tokens)
+        if added:
+            self._tables_dev = None
+        return added
+
     def release_slot(self, i: int, req=None) -> None:
         super().release_slot(i, req)
         self._tables_dev = None
@@ -466,6 +511,40 @@ class PagedCacheManager(PagedAllocator):
                 skip=[paged for _, paged in self.plan.plans])
         self.cache = self._state_zero(
             self.cache, jnp.asarray(indices, jnp.int32))
+
+    def insert_slot(self, i: int, state) -> None:
+        """Install an externally prefilled batch-1 DENSE cache tree into
+        slot ``i``'s pool blocks (the INSERT phase of
+        prefill->insert->generate).  Paged leaves pad their sequence axis
+        to the table horizon (nb*T), fold it to (nb, T) and scatter
+        through slot ``i``'s block table — ``place``/``admit`` rebuilt
+        the table before this runs, and NULL entries past the reservation
+        absorb the padded tail into the write-garbage NULL row.
+        Recurrent-state leaves copy the batch-1 slice over slot ``i``."""
+        nb, T = self.plan.nb, self.plan.T
+        row = jnp.asarray(self.tables[i], jnp.int32)        # (nb,)
+        leaves, treedef = jax.tree.flatten(self.cache)
+        st_leaves = jax.tree.leaves(state)
+        assert len(leaves) == len(st_leaves), "prefill state tree drift"
+        out = []
+        for leaf, st, (bax, paged) in zip(leaves, st_leaves,
+                                          self.plan.plans):
+            st0 = jnp.take(st, 0, axis=bax).astype(leaf.dtype)
+            if not paged:
+                sel = (slice(None),) * bax + (i,)
+                out.append(leaf.at[sel].set(st0))
+                continue
+            pad = nb * T - st0.shape[bax]         # seq axis now at bax
+            if pad:
+                widths = [(0, 0)] * st0.ndim
+                widths[bax] = (0, pad)
+                st0 = jnp.pad(st0, widths)
+            folded = st0.reshape(
+                st0.shape[:bax] + (nb, T) + st0.shape[bax + 1:])
+            sel = (slice(None),) * bax + (row,)
+            out.append(leaf.at[sel].set(folded))
+        self.cache = jax.tree.unflatten(treedef, out)
+        self._tables_dev = None
 
     def compact(self) -> None:
         """Copy-on-admit defrag: relocate every held block to the lowest

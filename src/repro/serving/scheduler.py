@@ -161,6 +161,49 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(s.active for s in self.slots)
 
+    def advance_chunk(self, i: int, n: int):
+        """Consume ``n`` prompt tokens of slot ``i`` in one chunked-prefill
+        dispatch — position bookkeeping only, no emission.  The chunk must
+        stay strictly inside the prompt: the chunk that consumes prompt
+        token ``n_prompt - 1`` emits the first generated token, so the
+        engine sizes the final chunk one short and hands the closing token
+        to ``advance`` (reusing all retirement logic).
+        """
+        s = self.slots[i]
+        assert n >= 0 and s.pos + n < s.req.n_prompt, \
+            f"chunk overruns prompt: pos={s.pos} n={n} " \
+            f"n_prompt={s.req.n_prompt}"
+        s.pos += n
+
+    def place(self, req: Request, i: int):
+        """Occupy free slot ``i`` with a request whose prompt was already
+        prefilled OUTSIDE the engine (the prefill->insert->generate API):
+        the slot starts at ``pos = n_prompt - 1`` — the position the
+        legacy path reaches when it consumes the last prompt token — and
+        the engine records the externally sampled first token via
+        ``advance``.  Fires ``on_admit`` like a queue admission so cache
+        tenancy hooks see exactly one occupy per occupancy."""
+        if self.slots[i].active:
+            raise ValueError(f"slot {i} is occupied")
+        if req.rid < 0:
+            req.rid = next(self._rid)
+        self.slots[i] = Slot(req=req, pos=req.n_prompt - 1)
+        if self.on_admit is not None:
+            self.on_admit(i, req)
+
+    def prefill_queue(self) -> list:
+        """Active slots still consuming their prompt, in the order the
+        admission policy would serve them: fcfs by arrival (rid), spf by
+        fewest prompt tokens REMAINING (the chunked analog of
+        shortest-prompt-first) with rid as the tiebreak."""
+        pending = [i for i, s in enumerate(self.slots)
+                   if s.active and s.pos < s.req.n_prompt]
+        if self.policy == "spf":
+            return sorted(pending, key=lambda i: (
+                self.slots[i].req.n_prompt - self.slots[i].pos,
+                self.slots[i].req.rid))
+        return sorted(pending, key=lambda i: self.slots[i].req.rid)
+
     def advance(self, i: int, token: int):
         """Post-step bookkeeping for slot ``i`` given its sampled ``token``.
 

@@ -212,7 +212,14 @@ def test_serving_backend_measures_paged_attn_by_race():
         assert m.meta["paged_attn"] == "kernel"
     else:
         assert m.meta["paged_attn"] == "gather"
-    assert m.total_s == walls[m.meta["paged_attn"]]
+    # total_s is the winning cell's floor; the chunked-prefill race may
+    # displace it (prefill_chunk > 0) — otherwise it equals the
+    # attn-race winner's wall (refined in place by the chunk race's
+    # extra interleaved repeats)
+    if m.meta["prefill_chunk"]:
+        assert m.total_s == m.meta["prefill_chunk_walls"][m.meta["prefill_chunk"]]
+    else:
+        assert m.total_s == walls[m.meta["paged_attn"]]
     # below the paged rung there is no race and no race meta
     m5 = b.measure(OptLevel.O5)
     assert "paged_attn_walls" not in m5.meta

@@ -11,8 +11,10 @@ from repro.kernels.tiled_matmul.ops import matmul, pick_blocks
 from repro.kernels.tiled_matmul.ref import matmul_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_prefill_attention)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_prefill_attention_ref)
 from repro.kernels.rwkv6_wkv.ops import wkv
 from repro.kernels.rwkv6_wkv.ref import wkv_ref
 from repro.kernels.mamba2_ssd.ops import ssd
@@ -239,6 +241,150 @@ def test_paged_attention_rejects_bad_shapes():
     q, kp, vp, tables, lengths = _paged_case(2, 4, 2, 16, 4, 4)
     with pytest.raises(ValueError, match="mismatch"):
         paged_attention(q, kp, vp[..., :8], tables, lengths)
+
+
+# ---------------------------------------------------------------------------
+# paged prefill attention (qlen > 1: the chunked-prefill query mode)
+# ---------------------------------------------------------------------------
+
+def _paged_prefill_case(B, H, KV, D, T, nb, Q, *, extra_rows=2,
+                        dtype=jnp.float32, seed=3):
+    """Random pool/tables with Q consecutive query tokens per slot whose
+    K/V are already appended: lengths = start + Q with random starts, so
+    final blocks are partially filled and earlier chunks' history is in
+    the pool.  Real blocks cover each slot's valid prefix; NULL (row 0)
+    past it; ``extra_rows`` unreferenced garbage rows."""
+    r = np.random.default_rng(seed)
+    starts = r.integers(0, nb * T - Q + 1, B)
+    lengths = starts + Q
+    R = 1 + B * nb + extra_rows
+    kp = r.normal(size=(R, T, KV, D)).astype(np.float32)
+    vp = r.normal(size=(R, T, KV, D)).astype(np.float32)
+    tables = np.zeros((B, nb), np.int32)
+    free = list(range(1, R))
+    r.shuffle(free)
+    for b in range(B):
+        for j in range(-(-int(lengths[b]) // T)):
+            tables[b, j] = free.pop()
+    q = r.normal(size=(B, Q, H, D)).astype(np.float32)
+    return (jnp.asarray(q, dtype), jnp.asarray(kp, dtype),
+            jnp.asarray(vp, dtype), jnp.asarray(tables),
+            jnp.asarray(lengths, jnp.int32))
+
+
+@pytest.mark.parametrize("dims", [
+    (3, 4, 2, 16, 4, 8, 5),    # GQA, Q coprime with T: rows cross blocks
+    (2, 2, 2, 32, 8, 4, 8),    # MHA, Q == T
+    (1, 3, 1, 16, 4, 3, 2),    # single kv head, odd group
+    (2, 8, 2, 16, 16, 2, 11),  # big blocks, Q > T/2, partial final block
+])
+def test_paged_prefill_attention_vs_ref(dims):
+    q, kp, vp, tables, lengths = _paged_prefill_case(*dims)
+    out = paged_prefill_attention(q, kp, vp, tables, lengths)
+    ref = paged_prefill_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+from tests._hypothesis_compat import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_paged_prefill_random_shapes(seed):
+    """Random (qlen, kv_len, block size, GQA group) draws against the
+    dense oracle — the shapes the chunked-prefill engine actually emits
+    (arbitrary starts, partial final blocks, ragged per-slot lengths)."""
+    r = np.random.default_rng(seed)
+    B = int(r.integers(1, 4))
+    KV = int(r.integers(1, 3))
+    G = int(r.integers(1, 4))
+    D = int(r.choice([8, 16]))
+    T = int(r.integers(2, 9))
+    nb = int(r.integers(2, 6))
+    Q = int(r.integers(1, min(8, nb * T) + 1))
+    q, kp, vp, tables, lengths = _paged_prefill_case(
+        B, KV * G, KV, D, T, nb, Q, seed=seed + 1)
+    out = paged_prefill_attention(q, kp, vp, tables, lengths)
+    ref = paged_prefill_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5,
+        err_msg=f"B={B} KV={KV} G={G} D={D} T={T} nb={nb} Q={Q}")
+
+
+def test_paged_prefill_qlen1_bitwise_matches_decode():
+    """Q == 1 must degenerate BIT-EXACTLY to the decode kernel: the
+    engine's bit-identity contract rides on the prefill path's final
+    token computing the same floats the per-token path would."""
+    for dims in [(3, 4, 2, 16, 4, 8), (2, 2, 2, 32, 8, 4),
+                 (1, 3, 1, 16, 4, 3)]:
+        q, kp, vp, tables, lengths = _paged_case(*dims, seed=5)
+        dec = paged_attention(q, kp, vp, tables, lengths)
+        pre = paged_prefill_attention(q[:, None], kp, vp, tables, lengths)
+        assert np.array_equal(np.asarray(pre[:, 0]), np.asarray(dec)), dims
+
+
+def test_paged_prefill_null_and_future_garbage_never_leaks():
+    """Mutating every pool row outside each slot's valid prefix — NULL,
+    unreferenced rows, AND positions past ``lengths`` inside referenced
+    final blocks — must not change any output row: the per-row causal
+    limit is what makes writing a whole chunk before reading it safe."""
+    q, kp, vp, tables, lengths = _paged_prefill_case(3, 4, 2, 16, 4, 6, 5,
+                                                     seed=11)
+    out = np.asarray(paged_prefill_attention(q, kp, vp, tables, lengths))
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    T = kp2.shape[1]
+    referenced = {}
+    for b in range(3):
+        for j in range(-(-int(lengths[b]) // T)):
+            row = int(tables[b, j])
+            valid = min(int(lengths[b]) - j * T, T)
+            referenced[row] = max(referenced.get(row, 0), valid)
+    for row in range(kp2.shape[0]):
+        vfrom = referenced.get(row, 0)
+        kp2[row, vfrom:] = 1e3
+        vp2[row, vfrom:] = -1e3
+    out2 = np.asarray(paged_prefill_attention(q, jnp.asarray(kp2),
+                                              jnp.asarray(vp2), tables,
+                                              lengths))
+    assert np.array_equal(out, out2)
+
+
+def test_paged_prefill_bf16():
+    q, kp, vp, tables, lengths = _paged_prefill_case(2, 4, 2, 16, 4, 6, 5,
+                                                     dtype=jnp.bfloat16)
+    out = paged_prefill_attention(q, kp, vp, tables, lengths)
+    ref = paged_prefill_attention_ref(q, kp, vp, tables, lengths)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0.06, atol=0.03)
+
+
+def test_flash_attention_rectangular_prefill_offset():
+    """S_kv > S (chunked prefill against a dense cache): the causal mask
+    shifts by ``S_kv - S`` — query row qi attends kv positions
+    <= offset + qi — and S_kv == S stays the plain square case."""
+    B, H, Hkv, D = 2, 4, 2, 16
+    for S_kv, S in [(64, 16), (48, 48), (96, 32)]:
+        q = jax.random.normal(KEYS[0], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(KEYS[1], (B, S_kv, Hkv, D), jnp.float32)
+        v = jax.random.normal(KEYS[2], (B, S_kv, Hkv, D), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+        # dense oracle with the shifted causal mask
+        rep = H // Hkv
+        kr = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)
+        vr = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
+        qt = q.transpose(0, 2, 1, 3)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qt, kr) / (D ** 0.5)
+        mask = (jnp.arange(S_kv)[None, :]
+                <= (S_kv - S) + jnp.arange(S)[:, None])
+        s = jnp.where(mask[None, None], s, -1e30)
+        ref = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1), vr)
+        ref = ref.transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5,
+                                   err_msg=f"S_kv={S_kv} S={S}")
 
 
 # ---------------------------------------------------------------------------

@@ -188,6 +188,206 @@ def test_random_traffic_spf_split(seed):
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill bookkeeping: random chunked-prefill + decode traffic
+# through the exact protocol the engine drives (one chunk grant per tick
+# to the head of ``prefill_queue``; the final chunk ends in ``advance``).
+# ---------------------------------------------------------------------------
+
+def _run_chunked_scenario(seed: int, policy: str):
+    rng = np.random.default_rng(seed)
+    n_slots = int(rng.integers(1, 5))
+    block_size = int(rng.integers(1, 6))
+    max_seq = int(rng.integers(8, 33))
+    C = int(rng.integers(1, 9))                   # prefill chunk width
+    per_seq = blocks_for(max_seq, block_size)
+    pool = int(rng.integers(per_seq, n_slots * per_seq + 1))
+    pa = PagedAllocator(n_slots, max_seq, block_size=block_size,
+                        pool_blocks=pool)
+    sched = Scheduler(n_slots, max_seq, policy=policy)
+    sched.admission_gate = pa.can_admit
+    sched.on_admit = pa.admit_slot
+    sched.on_retire = pa.release_slot
+
+    grants = {}          # rid -> prefill chunk grants received
+    admit_tick = {}      # rid -> tick the slot was admitted
+    first_emit = {}      # rid -> tick of the first generated token
+    submitted = 0
+    tick = 0
+
+    def serve_one_tick():
+        nonlocal tick
+        tick += 1
+        sched.admit()
+        for i, s in enumerate(sched.slots):
+            if s.active and s.req.rid not in admit_tick:
+                admit_tick[s.req.rid] = tick
+        _check_invariants(sched, pa)
+        # prefill-queue ordering respects the admission policy
+        pf = sched.prefill_queue()
+        assert all(sched.slots[i].active
+                   and sched.slots[i].pos < sched.slots[i].req.n_prompt
+                   for i in pf)
+        if policy == "fcfs":
+            rids = [sched.slots[i].req.rid for i in pf]
+            assert rids == sorted(rids), "fcfs prefill queue out of order"
+        else:
+            rem = [(sched.slots[i].req.n_prompt - sched.slots[i].pos,
+                    sched.slots[i].req.rid) for i in pf]
+            assert rem == sorted(rem), "spf prefill queue out of order"
+        # one chunk grant to the head (the engine's _prefill_tick)
+        if pf:
+            i = pf[0]
+            s = sched.slots[i]
+            r = s.req
+            grants[r.rid] = grants.get(r.rid, 0) + 1
+            n = min(C, r.n_prompt - s.pos)
+            if s.pos + n == r.n_prompt:
+                sched.advance_chunk(i, n - 1)
+                sched.advance(i, int(rng.integers(1, 10)))
+                first_emit.setdefault(r.rid, tick)
+            else:
+                sched.advance_chunk(i, n)
+        # decode tick for every generating slot (pos past the prompt)
+        for i in sched.active_indices:
+            s = sched.slots[i]
+            if s.req is not None and s.pos >= s.req.n_prompt:
+                sched.advance(i, int(rng.integers(1, 10)))
+        _check_invariants(sched, pa)
+
+    EOS = 7
+    for _ in range(int(rng.integers(10, 40))):
+        for _ in range(int(rng.integers(0, 3))):
+            plen = int(rng.integers(1, max_seq))
+            new = int(rng.integers(1, max_seq - plen + 1))
+            sched.submit(Request(
+                prompt=[int(t) for t in rng.integers(1, 50, plen)],
+                max_new_tokens=new,
+                eos_id=EOS if rng.random() < 0.5 else None))
+            submitted += 1
+        serve_one_tick()
+
+    for _ in range(10_000):
+        if not sched.has_work():
+            break
+        serve_one_tick()
+    assert not sched.has_work(), "chunked scenario failed to drain"
+    assert len(sched.finished) == submitted
+    assert pa.free_blocks == pool, "blocks leaked after chunked drain"
+    # the stall bound: a slot's prefill occupies EXACTLY
+    # ceil(n_prompt / C) chunk grants — no slot re-enters the prefill
+    # queue once generating, none is starved into extra grants
+    by_rid = {r.rid: r for r in sched.finished}
+    for rid, g in grants.items():
+        P = by_rid[rid].n_prompt
+        assert g == -(-P // C), (
+            f"rid {rid}: {g} chunk grants for prompt {P} at chunk {C}")
+    # every admitted slot emitted within (queue-serialized) bound: its
+    # own grants plus every grant spent on other slots while it waited
+    for rid, t0 in admit_tick.items():
+        assert rid in first_emit, f"rid {rid} admitted but never emitted"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_chunked_traffic_fcfs(seed):
+    _run_chunked_scenario(seed, "fcfs")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_chunked_traffic_spf(seed):
+    _run_chunked_scenario(seed, "spf")
+
+
+def test_advance_chunk_rejects_overrun():
+    sched = Scheduler(1, 16)
+    sched.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
+    sched.admit()
+    with pytest.raises(AssertionError, match="overruns"):
+        sched.advance_chunk(0, 3)          # chunk may not consume token 2
+    sched.advance_chunk(0, 2)
+    assert sched.slots[0].pos == 2
+
+
+def test_place_occupies_at_post_prompt_position():
+    """``place`` (the insert phase) occupies a free slot at
+    ``pos = n_prompt - 1`` — the next ``advance`` emits — fires
+    ``on_admit`` exactly once, and refuses occupied slots."""
+    pa = PagedAllocator(2, 16, block_size=4, pool_blocks=8)
+    sched = Scheduler(2, 16)
+    sched.on_admit = pa.admit_slot
+    sched.on_retire = pa.release_slot
+    req = Request(prompt=[1, 2, 3], max_new_tokens=2)
+    req.rid = 0
+    sched.place(req, 1)
+    assert sched.slots[1].pos == 2 and pa.held_blocks == [0, 2]
+    assert sched.prefill_queue() == [1]    # last prompt token pending
+    sched.advance(1, 5)                    # emits the first token
+    assert req.generated == [5] and sched.prefill_queue() == []
+    with pytest.raises(ValueError, match="occupied"):
+        sched.place(Request(prompt=[9], max_new_tokens=1, rid=1), 1)
+    sched.advance(1, 6)                    # budget reached: retires
+    assert req.done and pa.free_blocks == 8
+
+
+# ---------------------------------------------------------------------------
+# grow_slot: the chunked-admission block arithmetic
+# ---------------------------------------------------------------------------
+
+def test_grow_slot_never_double_counts_shared_block():
+    """Growing by TOTALS: a chunk ending mid-block shares its active
+    block with the next chunk, so consecutive grows allocate
+    ``blocks_for(total) - held`` — never per-chunk ceil sums."""
+    pa = PagedAllocator(1, 32, block_size=4, pool_blocks=8)
+    assert pa.grow_slot(0, 6) == 2         # covers tokens 0..5
+    assert pa.grow_slot(0, 7) == 0         # same final block: no alloc
+    assert pa.grow_slot(0, 9) == 1         # one more block
+    assert pa._held[0] == 3 and pa.free_blocks == 5
+    assert pa.grow_slot(0, 9) == 0         # idempotent
+    assert pa.grow_slot(0, 100) == 5       # clips to max_seq (32 tokens)
+    assert pa._held[0] == 8
+    pa.check_conservation()
+
+
+def test_grow_slot_queue_then_admit_neither_leaks_nor_deadlocks():
+    """Queue-then-admit under a constrained pool: a reservation the gate
+    defers admits after retirements free blocks, and a full drain
+    returns every block (the reservation arithmetic leaks nothing)."""
+    pa = PagedAllocator(2, 16, block_size=4, pool_blocks=5)
+    sched = Scheduler(2, 16, policy="fcfs")
+    sched.admission_gate = pa.can_admit
+    sched.on_admit = pa.admit_slot
+    sched.on_retire = pa.release_slot
+    sched.submit(Request(prompt=[1] * 10, max_new_tokens=2))  # 3 blocks
+    sched.submit(Request(prompt=[2] * 10, max_new_tokens=2))  # must queue
+    assert sched.admit() == [0] and sched.admit() == []
+    # chunked prefill (C=4) on the admitted slot; the queued request
+    # stays gated throughout
+    C = 4
+    for _ in range(20):
+        pf = sched.prefill_queue()
+        if pf:
+            i = pf[0]
+            s = sched.slots[i]
+            n = min(C, s.req.n_prompt - s.pos)
+            if s.pos + n == s.req.n_prompt:
+                sched.advance_chunk(i, n - 1)
+                sched.advance(i, 3)
+            else:
+                sched.advance_chunk(i, n)
+        else:
+            for i in sched.active_indices:
+                sched.advance(i, 3)
+        _check_invariants(sched, pa)
+        sched.admit()
+        if not sched.has_work():
+            break
+    assert not sched.has_work(), "constrained pool deadlocked"
+    assert len(sched.finished) == 2
+    assert pa.free_blocks == 5, "blocks leaked"
+
+
+# ---------------------------------------------------------------------------
 # The block-granularity admission gate (the satellite fix): a request that
 # fits max_seq but not the free blocks queues — never raises — and admits
 # once retirements free the pool.

@@ -211,6 +211,143 @@ def test_differential_fuzz_paged_vs_contiguous(seed, policy):
         assert naive == ref
 
 
+@pytest.mark.parametrize("seed,policy,chunk", [(21, "fcfs", 2),
+                                               (22, "spf", 4),
+                                               (23, "fcfs", 16)])
+def test_differential_fuzz_chunked_prefill(seed, policy, chunk):
+    """Chunked prefill (prompts consumed in multi-token chunks, one
+    chunk per tick, interleaved with decode) is a pure scheduling
+    change: random mixes with mid-flight arrivals and planted eos stops
+    decode to bit-identical greedy tokens on the legacy prestaged O5
+    path and every chunked cell — contiguous O5, paged O6 gather, and
+    the paged O6 prefill kernel — including a pool small enough to
+    queue admissions."""
+    cfg, _, _ = _model()
+    mix = _random_mix(seed, cfg.vocab)
+    ref = _run_mix(mix, OptLevel.O5, policy=policy)
+    eos = {k: g[len(g) // 2] for k, g in enumerate(ref) if k % 2 == 0
+           and len(g) > 1}
+    ref = _run_mix(mix, OptLevel.O5, policy=policy, eos=eos, late_from=5)
+    cells = [(OptLevel.O5, {}),
+             (OptLevel.O6, dict(kv_block_size=4, kv_pool_blocks=14)),
+             (OptLevel.O6, dict(kv_block_size=4, kv_pool_blocks=14,
+                                paged_attn="kernel"))]
+    for level, kw in cells:
+        out = _run_mix(mix, level, policy=policy, eos=eos, late_from=5,
+                       prefill_chunk=chunk, **kw)
+        assert out == ref, (f"chunked prefill diverged (seed={seed}, "
+                            f"{policy}, chunk={chunk}, O{int(level)}, {kw})")
+    if seed == 21:
+        # unfused O0 accepts the knob but degrades to token prefill —
+        # same tokens, never an exception
+        out = _run_mix(mix, OptLevel.O0, policy=policy, eos=eos,
+                       late_from=5, prefill_chunk=chunk)
+        assert out == ref
+
+
+def test_prefill_chunk_mode_recorded_and_degrades():
+    """``prefill_mode`` is the best-effort record: "chunked" at fused
+    rungs for families with a prefill step, "token" when the knob is off,
+    below O2, or for families without one (recurrent rwkv) — recorded,
+    never an exception, and the degraded engine still decodes."""
+    eng, _ = _engine(config=BestEffortConfig(level=OptLevel.O5,
+                                             prefill_chunk=4))
+    assert eng.prefill_mode == "chunked"
+    eng2, _ = _engine(config=BestEffortConfig(level=OptLevel.O5))
+    assert eng2.prefill_mode == "token"
+    eng3, _ = _engine(config=BestEffortConfig(level=OptLevel.O0,
+                                              prefill_chunk=4))
+    assert eng3.prefill_mode == "token"
+    eng4, _ = _engine("rwkv6-3b", B=2, max_seq=24,
+                      config=BestEffortConfig(level=OptLevel.O5,
+                                              prefill_chunk=4))
+    assert eng4.prefill_mode == "token"
+    eng4.submit(Request(prompt=[5, 6, 7], max_new_tokens=3))
+    assert len(eng4.run()) == 1
+
+
+@pytest.mark.parametrize("level,kw", [
+    (OptLevel.O5, dict(prefill_chunk=4)),
+    (OptLevel.O6, dict(prefill_chunk=4, kv_block_size=4)),
+    (OptLevel.O6, dict(prefill_chunk=4, kv_block_size=4,
+                       paged_attn="kernel")),
+    (OptLevel.O0, {}),
+], ids=["O5c", "O6c", "O6kc", "O0"])
+def test_prefill_insert_generate_matches_prestaged(level, kw):
+    """The public prefill->insert->generate phases: prompts prefilled on
+    a standalone batch-1 cache, inserted into engine slots (scattered
+    through block tables under the paged layout), then drained — greedy
+    tokens bit-identical to submitting the same requests through the
+    engine's internal admission path."""
+    mix = _WORKLOAD[:3]
+    ref = _run_mix(mix, level, **kw)
+    eng, _ = _engine(B=3, max_seq=32,
+                     config=BestEffortConfig(level=level, **kw))
+    results = [eng.prefill(p, max_new_tokens=n) for p, n in mix]
+    assert [r.length for r in results] == [len(p) for p, _ in mix]
+    slots = [eng.insert(r) for r in results]
+    assert sorted(slots) == [0, 1, 2]
+    fin = {r.rid: r.generated for r in eng.generate()}
+    got = [fin[r.request.rid] for r in results]
+    assert got == ref, f"prefill->insert->generate diverged ({kw})"
+    # first_token is the request's first greedy emission
+    assert [r.first_token for r in results] == [g[0] for g in ref]
+
+
+def test_prefill_insert_mid_flight_and_validation():
+    """Insert while other requests decode (continuous batching across
+    the API seam), plus the error contract: inserting with no free slot
+    raises, a paged pool too full to reserve raises, and prefill
+    validates like submit."""
+    eng, _ = _engine(B=2, max_seq=32,
+                     config=BestEffortConfig(level=OptLevel.O5,
+                                             prefill_chunk=4))
+    r0 = eng.submit(Request(prompt=[5, 6, 7], max_new_tokens=6))
+    for _ in range(3):
+        eng.step()
+    res = eng.prefill([9, 9], max_new_tokens=4)
+    eng.insert(res)
+    fin = {r.rid: r.generated for r in eng.generate()}
+    assert len(fin[r0]) == 6 and len(fin[res.request.rid]) == 4
+    # in-flight tokens match an undisturbed run of each request
+    solo = _run_mix([([5, 6, 7], 6), ([9, 9], 4)], OptLevel.O5)
+    assert [fin[r0], fin[res.request.rid]] == solo
+
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.prefill([], max_new_tokens=2)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.prefill([1, 2], max_new_tokens=0)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.prefill([1] * 30, max_new_tokens=6)
+
+    # no free slot: fill both slots with long decodes, then insert
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=8))
+    eng.submit(Request(prompt=[3, 4], max_new_tokens=8))
+    eng.step()
+    spare = eng.prefill([7, 7], max_new_tokens=2)
+    with pytest.raises(ValueError, match="no free slot"):
+        eng.insert(spare)
+    eng.generate()
+    eng.insert(spare)                      # slot freed: insert succeeds
+    fin2 = {r.rid: r.generated for r in eng.generate()}
+    assert len(fin2[spare.request.rid]) == 2
+
+    # paged: a pool that cannot hold the reservation refuses the insert
+    engp, _ = _engine(B=3, max_seq=16,
+                      config=BestEffortConfig(level=OptLevel.O6,
+                                              kv_block_size=4,
+                                              kv_pool_blocks=5))
+    engp.submit(Request(prompt=[1] * 8, max_new_tokens=4))   # 3 blocks
+    engp.step()
+    big = engp.prefill([2] * 8, max_new_tokens=4)            # 3 more
+    with pytest.raises(ValueError, match="insufficient free KV blocks"):
+        engp.insert(big)
+    engp.generate()
+    engp.insert(big)                       # blocks freed: fits now
+    fin3 = {r.rid: r.generated for r in engp.generate()}
+    assert len(fin3[big.request.rid]) == 4
+
+
 def test_paged_capacity_queues_and_drains():
     """A pool holding ~2 reservations with B=3 slots must queue (never
     reject) the overflow and still finish everything, bit-identically."""
