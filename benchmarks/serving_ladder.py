@@ -1,6 +1,6 @@
 """The serving ladder — the paper's Table 1 analog for the decode engine.
 
-Measures ``repro.serving.DecodeEngine`` at every OptLevel O0..O6 on one
+Measures ``repro.serving.DecodeEngine`` at every OptLevel O0..O7 on one
 fixed continuous-batching workload (smoke config) and renders the
 per-level throughput/latency table to ``benchmarks/SERVING_LADDER.md``,
 plus a JSONL trajectory compatible with the autotune tooling (every row
@@ -40,6 +40,15 @@ the same interleaved rounds, through each engine's real prefill path —
 and the ``O5c`` row ablates chunked prefill (``prefill_chunk=16``)
 against the O5 row it modifies.
 
+The O7 row (speculative decoding) additionally reports ``accept %`` and
+``eff tok/step`` — the fraction of drafted tokens the target's argmax
+accepted and the tokens emitted per slot per verify window.  With the
+smoke zoo's random-weight drafter acceptance is near zero, so the row
+reads as speculation's OVERHEAD floor (drafter forwards + a K+1-wide
+verify that mostly emits one token); the acceptance column is what
+turns it into a win when the drafter approximates the target.  Tokens
+stay bit-identical regardless — greedy rejection guarantees it.
+
 The harness also asserts the ladder's semantic contract: under greedy
 sampling every level generates bit-identical tokens for every request.
 """
@@ -48,6 +57,8 @@ import json
 import os
 import time
 
+# Keys 0..7 are the OptLevels; keys >= 90 are ablation rows (they were
+# 7/8/9 before the ladder grew the O7 rung, which collided with level 7).
 STAGES = {
     0: "naive: per-request B=1 decode calls + per-request cache rebuild",
     1: "+ data caching: persistent device cache, in-place slot zeroing",
@@ -56,23 +67,28 @@ STAGES = {
     4: "+ double buffering: bookkeeping runs under the in-flight step",
     5: "+ scratchpad reorg: packed one-call zeroing of admitted slots",
     6: "+ paged scratchpad: KV block pool + per-request block tables",
-    # Key 7 is not a level: on >= 2 devices (where the O6 row itself runs
-    # the block-axis-sharded composition cell) it re-runs O6 pinned to
-    # pe=1 — the placement ablation within the paged layout.
-    7: "O6 placement ablation: same paged pool, replicated (pe=1)",
-    # Key 8 is not a level either: the O6 attention-implementation
+    7: "+ speculative decoding: drafter proposes K=4, one verify forward",
+    # Key 91 is not a level: on >= 2 devices (where the O6 row itself
+    # runs the block-axis-sharded composition cell) it re-runs O6 pinned
+    # to pe=1 — the placement ablation within the paged layout.
+    91: "O6 placement ablation: same paged pool, replicated (pe=1)",
+    # Key 92 is not a level either: the O6 attention-implementation
     # ablation — the same paged pool driven by the gather-free
     # block-table Pallas kernel (paged_attn=kernel) instead of the
     # per-tick dense gather.  Its bytes-moved column is the point:
     # O(blocks touched), not O(B * max_seq).
-    8: "O6 attn ablation: gather-free block-table kernel "
-       "(paged_attn=kernel)",
-    # Key 9: the prefill ablation — the O5 engine with CHUNKED prefill
+    92: "O6 attn ablation: gather-free block-table kernel "
+        "(paged_attn=kernel)",
+    # Key 93: the prefill ablation — the O5 engine with CHUNKED prefill
     # (prefill_chunk=16): prompts ride multi-token chunk dispatches
     # interleaved with decode instead of one decode tick per prompt
     # token.  Its column of interest is TTFT, not tok/s.
-    9: "O5 prefill ablation: chunked prefill (prefill_chunk=16)",
+    93: "O5 prefill ablation: chunked prefill (prefill_chunk=16)",
 }
+
+# The drafter the O7 row pairs with the target (``model_zoo.
+# DRAFTER_PAIRS`` validated at engine build) and its window size.
+LADDER_DRAFT = {"draft_model": "smollm-360m", "draft_k": 4}
 
 MD_PATH = os.path.join(os.path.dirname(__file__), "SERVING_LADDER.md")
 TRAJ_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -80,30 +96,33 @@ TRAJ_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
 
 
 def ladder_variants(devices: int):
-    """The measured (key, label, config) cells.  Keys 0..6 are the
-    OptLevels at their default configs — on >= 2 devices every O3+ row
-    shards, so O5->O6 compares MATCHED placements and the O6 row itself
-    is the layout x placement composition cell (block-axis-sharded paged
-    pool).  Key 8 (always present, adjacent to the O6 row it ablates) is
-    the attention-implementation ablation: the same paged pool driven by
-    the gather-free block-table kernel, so O6->O6k reads as the pure
-    gather-elimination delta.  Key 9 is the prefill ablation: the O5
-    engine with chunked prefill (prefill_chunk=16), paired against the
-    O5 row so O5->O5c reads as the pure chunked-prefill delta — its
-    interesting column is TTFT, not tok/s.  Key 7, added only on
-    multi-device runs, is the placement ablation: the same paged engine
-    pinned to pe=1, isolating what sharding buys (or costs) within the
-    paged layout."""
+    """The measured (key, label, config) cells.  Keys 0..7 are the
+    OptLevels at their default configs (the O7 row adds the
+    ``LADDER_DRAFT`` drafter pairing — speculation needs one) — on >= 2
+    devices every O3+ row shards, so O5->O6 compares MATCHED placements
+    and the O6 row itself is the layout x placement composition cell
+    (block-axis-sharded paged pool).  Key 92 (always present, adjacent
+    to the O6 row it ablates) is the attention-implementation ablation:
+    the same paged pool driven by the gather-free block-table kernel, so
+    O6->O6k reads as the pure gather-elimination delta.  Key 93 is the
+    prefill ablation: the O5 engine with chunked prefill
+    (prefill_chunk=16), paired against the O5 row so O5->O5c reads as
+    the pure chunked-prefill delta — its interesting column is TTFT, not
+    tok/s.  Key 91, added only on multi-device runs, is the placement
+    ablation: the same paged engine pinned to pe=1, isolating what
+    sharding buys (or costs) within the paged layout."""
     from repro.core.optlevel import ALL_LEVELS, BestEffortConfig, OptLevel
 
-    out = [(int(lvl), f"O{int(lvl)}", BestEffortConfig(level=lvl))
+    out = [(int(lvl), f"O{int(lvl)}",
+            BestEffortConfig(level=lvl, **(LADDER_DRAFT
+                                           if lvl == OptLevel.O7 else {})))
            for lvl in ALL_LEVELS]
-    out.append((8, "O6k", BestEffortConfig(level=OptLevel.O6,
-                                           paged_attn="kernel")))
-    out.append((9, "O5c", BestEffortConfig(level=OptLevel.O5,
-                                           prefill_chunk=16)))
+    out.append((92, "O6k", BestEffortConfig(level=OptLevel.O6,
+                                            paged_attn="kernel")))
+    out.append((93, "O5c", BestEffortConfig(level=OptLevel.O5,
+                                            prefill_chunk=16)))
     if devices > 1:
-        out.append((7, "O6pe1", BestEffortConfig(level=OptLevel.O6, pe=1)))
+        out.append((91, "O6pe1", BestEffortConfig(level=OptLevel.O6, pe=1)))
     return out
 
 
@@ -270,7 +289,7 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
         # and O6pe1 (placement) ablate the O6 row itself, so each is
         # paired against key 6, never against the other ablation; O5c
         # (chunked prefill) ablates the O5 row.
-        tie_baseline = {7: 6, 8: 6, 9: 5}
+        tie_baseline = {91: 6, 92: 6, 93: 5}
         noise_ties.clear()
         for i in range(1, len(keys)):
             k = keys[i]
@@ -320,6 +339,9 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
     first_eng = {}
     for k, eng in engines:
         first_eng.setdefault(k, eng)
+    # Speculation telemetry (O7 row): counters accumulate over the same
+    # deterministic workload every round, so the rate is the workload's.
+    spec_stats = {k: first_eng[k].spec_stats for k in keys}
     tb = first_eng[6].cache_mgr.geometry["token_bytes"]
     kv_bytes = {}
     for k in keys:
@@ -341,18 +363,21 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
 
     tokens = sum(len(g) for g in generated[0])
     tie_partner = {k: p for p, k in noise_ties}
-    row_level = {7: 6, 8: 6, 9: 5}
+    row_level = {91: 6, 92: 6, 93: 5}
     rows = []
     for i, k in enumerate(keys):
         stage = STAGES[k]
-        if k == 8 and attn_impls[k] != "kernel":
+        if k == 92 and attn_impls[k] != "kernel":
             # A family without a paged decode step degrades the kernel
             # row to gather — say so instead of mislabeling the cell.
             stage += (" — DEGRADED to gather (this family has no paged "
                       "decode step)")
-        if k == 9 and prefill_modes[k] != "chunked":
+        if k == 93 and prefill_modes[k] != "chunked":
             stage += (" — DEGRADED to token prefill (this family has no "
                       "prefill step)")
+        if k == 7 and spec_stats[k]["spec_mode"] != "draft":
+            stage += (" — DEGRADED to plain decode (this cell cannot "
+                      "speculate)")
         rows.append({
             "level": row_level.get(k, k),
             "label": by_key[k][0],
@@ -377,6 +402,10 @@ def measure_ladder(arch: str = "qwen3-8b", *, batch_size: int = 4,
             "prefill_mode": prefill_modes[k],
             "ttft_ms": ttft_est[k] * 1e3,
             "itl_ms": itl_est[k] * 1e3,
+            "spec_mode": spec_stats[k]["spec_mode"],
+            "draft_k": spec_stats[k]["draft_k"],
+            "accept_rate": spec_stats[k]["accept_rate"],
+            "eff_tok_per_step": spec_stats[k]["eff_tok_per_step"],
         })
     return rows
 
@@ -480,14 +509,17 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
         "| level | serving stage (paper step) | tok/s | tick (ms) | "
         "wall (s) | speedup vs O0 | TTFT (ms) | ITL (ms) | "
         "KV capacity (tok) | KV bytes/tick | devices | "
-        "identical tokens |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "accept % | eff tok/step | identical tokens |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
         kb = r.get("kv_bytes_per_tick")
         kb = f"{kb / 1024:.1f}K" if kb else "-"
         ttft = r.get("ttft_ms")
         itl = r.get("itl_ms")
+        spec = r.get("spec_mode") == "draft"
+        acc = f"{r['accept_rate'] * 100:.0f}%" if spec else "-"
+        eff = f"{r['eff_tok_per_step']:.2f}" if spec else "-"
         lines.append(
             f"| {r['label']} | {r['stage']} | {r['tok_per_s']:.0f} "
             f"| {r['tick_ms']:.3f} | {r['wall_s']:.4f} "
@@ -496,6 +528,7 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
             f"| {r.get('kv_capacity', '-')} "
             f"| {kb} "
             f"| {r.get('devices', 1)} "
+            f"| {acc} | {eff} "
             f"| {'yes' if r['identical'] else 'NO'} |")
     # The monotonicity contract covers the mechanism rungs O0..O5 only —
     # the O6 capacity rung (and the O6+pe composition row) may
@@ -525,6 +558,23 @@ def render_md(rows, arch: str, capacity: dict = None) -> str:
         "before its first token instead of P one-token ticks, which is",
         "the TTFT column's delta; greedy tokens stay bit-identical.",
     ]
+    if any(r.get("spec_mode") == "draft" for r in rows):
+        lines += [
+            "",
+            "The O7 row is speculative decoding: a small drafter",
+            f"(`{LADDER_DRAFT['draft_model']}`) proposes",
+            f"K={LADDER_DRAFT['draft_k']} tokens per slot per tick and the",
+            "target verifies the whole window in ONE batched forward,",
+            "accepting exactly its own argmax prefix (greedy rejection) —",
+            "so tokens stay bit-identical to O5/O6 by construction.  The",
+            "`accept %` / `eff tok/step` columns are the mechanism's",
+            "telemetry: effective tokens per verify window is",
+            "1 + accept x K.  On the smoke zoo the drafter's weights are",
+            "random, acceptance is near zero, and the row shows the",
+            "overhead floor; the autotuner (`--serve`, `draft_k=auto`)",
+            "races K in {0,2,4,8} and keeps speculation only when it",
+            "actually wins.",
+        ]
     if max(r["level"] for r in rows) >= 6:
         lines += [
             "",
@@ -629,7 +679,10 @@ def main(arch: str = "qwen3-8b", write_md: bool = True, **kw):
             f"kv={r['kv_bytes_per_tick'] // 1024}K/tick "
             f"ttft={r['ttft_ms']:.1f}ms itl={r['itl_ms']:.2f}ms "
             f"prefill={r['prefill_mode']} "
-            f"identical={r['identical']}") for r in rows]
+            + (f"spec=K{r['draft_k']} accept={r['accept_rate']:.2f} "
+               f"eff={r['eff_tok_per_step']:.2f} "
+               if r.get("spec_mode") == "draft" else "")
+            + f"identical={r['identical']}") for r in rows]
     cc = capacity["contiguous"]["peak_concurrency"]
     cp = capacity["paged"]["peak_concurrency"]
     out.append(("serving_capacity_paged_vs_contig", cp * 1e6 / max(cc, 1),

@@ -9,8 +9,9 @@ LM configs (lowered-HLO cost twin on the production mesh; compile-heavy):
 
   PYTHONPATH=src python -m repro.autotune --arch qwen3-8b --shape train_4k
 
-The serving engine itself (measured tokens/sec, smoke config, full O0->O6
-ladder walk — O6 is the paged KV-block rung):
+The serving engine itself (measured tokens/sec, smoke config, full O0->O7
+ladder walk — O6 is the paged KV-block rung, O7 speculative decoding with
+the draft window raced K in {0,2,4,8} and kept only when it wins):
 
   PYTHONPATH=src python -m repro.autotune --serve --arch qwen3-8b
 
@@ -52,9 +53,10 @@ def main(argv=None) -> int:
     target.add_argument("--arch", help="LM architecture (repro.configs)")
     ap.add_argument("--shape", help="LM shape cell (e.g. train_4k)")
     ap.add_argument("--serve", action="store_true",
-                    help="walk the serving engine itself O0->O6 on "
+                    help="walk the serving engine itself O0->O7 on "
                          "measured tokens/sec (requires --arch; smoke "
-                         "config; O6 = paged KV blocks)")
+                         "config; O6 = paged KV blocks, O7 = speculative "
+                         "decoding)")
     ap.add_argument("--frontier", action="store_true",
                     help="AutoDSE-style mode: measure every remaining "
                          "candidate step per round, keep the best")
@@ -82,7 +84,19 @@ def main(argv=None) -> int:
                     help="O6 attention implementation: auto measures "
                          "gather vs the gather-free block-table kernel "
                          "and keeps the winner (gather on tie/loss)")
+    ap.add_argument("--draft", default="smollm-360m", dest="draft_model",
+                    help="O7 drafter arch (must share the target's vocab)")
+    ap.add_argument("--draft-k", default="auto",
+                    help="O7 speculation window: 'auto' races K in "
+                         "{0,2,4,8} and keeps the winner; an int pins it "
+                         "(0 disables speculation)")
     args = ap.parse_args(argv)
+    if args.draft_k != "auto":
+        try:
+            args.draft_k = int(args.draft_k)
+        except ValueError:
+            ap.error(f"--draft-k must be 'auto' or an int "
+                     f"(got {args.draft_k!r})")
 
     if args.serve:
         if not args.arch:
@@ -95,7 +109,8 @@ def main(argv=None) -> int:
             repeats=args.repeats, policy=args.policy,
             kv_block_size=args.kv_block,
             kv_pool_blocks=args.kv_pool_blocks,
-            paged_attn=args.paged_attn)
+            paged_attn=args.paged_attn, draft_model=args.draft_model,
+            draft_k=args.draft_k)
         result = _run_one(backend, args, ladder=True)
         levels = [r.measurement.meta for r in result.rounds]
         gens = [m["generated"] for m in levels]
@@ -112,6 +127,12 @@ def main(argv=None) -> int:
                          for k, v in m["paged_attn_walls"].items()}
                 print(f"O{m['level']} paged_attn measured {walls} -> "
                       f"kept {m['paged_attn']!r}")
+            if m.get("draft_k_walls"):
+                walls = {k: f"{v:.4f}s"
+                         for k, v in m["draft_k_walls"].items()}
+                print(f"O{m['level']} draft_k measured {walls} -> kept "
+                      f"K={m['draft_k']} (accept {m['accept_rate']:.2f}, "
+                      f"{m['eff_tok_per_step']:.2f} tok/step)")
         return 0 if same else 1
 
     if args.kernel:

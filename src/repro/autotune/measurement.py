@@ -442,10 +442,11 @@ class ServingBackend(CumulativeLadderState):
     walk can assert bit-identical generations across levels under greedy
     sampling — the serving analog of MachSuite's O0..O5 output-equivalence
     matrix.  This surface's ladder extends past the paper's five to the
-    paged-scratchpad rung (``top_level = O6``); ``meta['kv_capacity']``
-    records each level's persistent decode-cache token capacity so the
-    walk shows the paged rung's actual win (capacity at equal memory, not
-    raw tok/s), and ``meta['layout']`` / ``meta['devices']`` record each
+    paged-scratchpad and speculative rungs (``top_level = O7``);
+    ``meta['kv_capacity']`` records each level's persistent decode-cache
+    token capacity so the walk shows the paged rung's actual win
+    (capacity at equal memory, not raw tok/s), and ``meta['layout']`` /
+    ``meta['devices']`` record each
     rung's (cache layout, device count) cell — on a multi-device host the
     O3+ rungs shard (including the paged pool on its block axis at O6;
     layout and placement compose, see ``repro.serving.layout``).
@@ -459,16 +460,27 @@ class ServingBackend(CumulativeLadderState):
     step.  ``meta['paged_attn']`` records the chosen implementation and
     ``meta['paged_attn_walls']`` both measured floors, AutoDSE-style:
     the rung is kept because it measured faster, not assumed so.
+
+    The speculative rung (``top_level = O7``) follows the same rule with
+    the window size as the knob: ``draft_k="auto"`` races K in {0,2,4,8}
+    on interleaved repeats (K=0 is the incumbent O6-equivalent engine —
+    speculation off) and keeps a K only when it WINS beyond the 1% noise
+    floor.  Greedy rejection makes every K bit-identical, so the race is
+    pure wall-clock; ``meta['draft_k_walls']`` records every measured
+    floor keyed by the K that actually RAN, and ``meta['accept_rate']``
+    / ``meta['eff_tok_per_step']`` the chosen engine's acceptance
+    telemetry.
     """
 
-    top_level = OptLevel.O6
+    top_level = OptLevel.O7
 
     def __init__(self, arch: str = "qwen3-8b", *, batch_size: int = 4,
                  max_seq: int = 48, n_requests: int = 12, max_new: int = 8,
                  repeats: int = 3, policy: str = "fcfs", pe: int = 8,
                  vocab: int = 0, seed: int = 0, kv_block_size: int = 16,
                  kv_pool_blocks: int = 0, paged_attn: str = "auto",
-                 prefill_chunk="auto"):
+                 prefill_chunk="auto", draft_model: str = "smollm-360m",
+                 draft_k="auto"):
         if paged_attn not in ("auto", "gather", "kernel"):
             raise ValueError(f"paged_attn must be auto|gather|kernel "
                              f"(got {paged_attn!r})")
@@ -476,7 +488,13 @@ class ServingBackend(CumulativeLadderState):
                                         or prefill_chunk < 0):
             raise ValueError(f"prefill_chunk must be 'auto' or an int >= 0 "
                              f"(got {prefill_chunk!r})")
+        if draft_k != "auto" and (not isinstance(draft_k, int)
+                                  or draft_k < 0):
+            raise ValueError(f"draft_k must be 'auto' or an int >= 0 "
+                             f"(got {draft_k!r})")
         self.prefill_chunk = prefill_chunk
+        self.draft_model = draft_model
+        self.draft_k = draft_k
         self.arch = arch
         self.batch_size = batch_size
         self.max_seq = max_seq
@@ -492,6 +510,7 @@ class ServingBackend(CumulativeLadderState):
         self.paged_attn = paged_attn
         self._model = None
         self._params = None
+        self._draft = None          # (ModelAPI, params) once built
 
     @property
     def name(self) -> str:
@@ -515,20 +534,46 @@ class ServingBackend(CumulativeLadderState):
                                 n_requests=self.n_requests,
                                 max_new=self.max_new, seed=self.seed)
 
+    def _ensure_drafter(self):
+        """Build the drafter (api, params) ONCE and share it across every
+        engine in the draft_k race — drafter weights are not a knob, and
+        re-initializing per K would race different random drafters.  The
+        drafter gets the same smoke config (and ``vocab`` override) as
+        the target: this surface's token space is synthetic, so the two
+        share it by construction — ``compatible_drafter`` still
+        validates the pairing."""
+        if self._draft is None:
+            import jax
+            from repro.models import get_model
+            from repro.models.model_zoo import compatible_drafter
+
+            model, _ = self._ensure_model()
+            dcfg = serving_smoke_config(self.draft_model, self.vocab)
+            dcfg = compatible_drafter(model.cfg, dcfg)
+            api = get_model(dcfg)
+            self._draft = (api, api.init(jax.random.PRNGKey(self.seed + 1)))
+        return self._draft
+
     def _build_engine(self, state: OptLevel, paged_attn: str,
-                      prefill_chunk: int = 0):
+                      prefill_chunk: int = 0, draft_k: int = 0):
         from repro.core.optlevel import BestEffortConfig
         from repro.serving import DecodeEngine
 
         model, params = self._ensure_model()
+        draft_api = draft_params = None
+        if draft_k > 0:
+            draft_api, draft_params = self._ensure_drafter()
         return DecodeEngine(
             model, params, batch_size=self.batch_size, max_seq=self.max_seq,
             config=BestEffortConfig(level=state, pe=self.pe,
                                     kv_block_size=self.kv_block_size,
                                     kv_pool_blocks=self.kv_pool_blocks,
                                     paged_attn=paged_attn,
-                                    prefill_chunk=prefill_chunk),
-            policy=self.policy)
+                                    prefill_chunk=prefill_chunk,
+                                    draft_model=self.draft_model,
+                                    draft_k=draft_k),
+            policy=self.policy, draft_model=draft_api,
+            draft_params=draft_params)
 
     def measure(self, state: OptLevel) -> Measurement:
         model, _ = self._ensure_model()
@@ -578,14 +623,14 @@ class ServingBackend(CumulativeLadderState):
         engine = engines[chosen]
         best_wall = best[chosen]
 
-        # Chunked prefill is itself a measured knob ("auto", top rung
+        # Chunked prefill is itself a measured knob ("auto", paged rungs
         # only): race the chosen engine against a chunked twin of the
         # same (level, attn) cell, interleaving the timed repeats, and
         # keep the chunk only when it WINS beyond the 1% noise floor —
         # the same best-effort rule as the paged_attn race.
         chunk = pinned
         chunk_walls = None
-        if (self.prefill_chunk == "auto" and state >= self.top_level
+        if (self.prefill_chunk == "auto" and state >= OptLevel.O6
                 and model.prefill_step is not None):
             race_chunk = 16
             chunked = self._build_engine(state, chosen, race_chunk)
@@ -609,6 +654,52 @@ class ServingBackend(CumulativeLadderState):
                 best[chosen] = best_wall
                 if best_c < 0.99 * best_wall:
                     engine, best_wall, chunk = chunked, best_c, race_chunk
+
+        # The speculative rung's window size is a measured knob too
+        # (``draft_k="auto"``, O7 only): race K in {0, 2, 4, 8} on
+        # interleaved repeats.  K=0 is the incumbent engine chosen
+        # above (speculation off — exactly the O6 hot path); a window
+        # displaces it only by WINNING beyond the 1% noise floor.
+        # Greedy rejection keeps every K bit-identical, so the race is
+        # pure wall-clock — asserted, not assumed.
+        draft_k_walls = None
+        if (state.has(Step.SPECULATIVE) and self.draft_k != 0
+                and model.verify_step is not None):
+            ks = (2, 4, 8) if self.draft_k == "auto" else (self.draft_k,)
+            spec_engines = {}
+            for k in ks:
+                e = self._build_engine(state, chosen, chunk, draft_k=k)
+                if e.spec_mode != "draft":
+                    # this (layout x placement x model) cell cannot
+                    # speculate — degrade to the incumbent, no race
+                    spec_engines = {}
+                    break
+                spec_engines[k] = e
+            if spec_engines:
+                for k, e in spec_engines.items():   # warmup: jit compiles
+                    _, _, gen, _ = run_serving_workload(e, workload)
+                    assert gen == generated, \
+                        f"draft_k={k} changed greedy tokens"
+                best_k = dict.fromkeys(spec_engines)
+                for _ in range(max(1, self.repeats)):
+                    for k, e in spec_engines.items():   # interleaved
+                        wall, _, gen, _ = run_serving_workload(e, workload)
+                        assert gen == generated, \
+                            "serving workload must be deterministic"
+                        if best_k[k] is None or wall < best_k[k]:
+                            best_k[k] = wall
+                    wall, _, _, _ = run_serving_workload(engine, workload)
+                    if wall < best_wall:
+                        best_wall = wall
+                # keyed by the K each engine actually RAN at (0 = the
+                # incumbent; spec engines were verified to be drafting)
+                draft_k_walls = {0: best_wall}
+                draft_k_walls.update(
+                    {e.spec_stats["draft_k"]: best_k[k]
+                     for k, e in spec_engines.items()})
+                win = min(spec_engines, key=lambda k: best_k[k])
+                if best_k[win] < 0.99 * best_wall:
+                    engine, best_wall = spec_engines[win], best_k[win]
 
         # Unloaded single-request latency (TTFT / inter-token) through
         # the real prefill path, best-of-repeats on the warm engine.
@@ -644,6 +735,16 @@ class ServingBackend(CumulativeLadderState):
             "itl_s": itl,
             "generated": [[int(t) for t in g] for g in generated],
         }
+        if state.has(Step.SPECULATIVE):
+            st = engine.spec_stats
+            meta["spec_mode"] = st["spec_mode"]
+            meta["draft_k"] = st["draft_k"]
+            meta["draft_model"] = (self.draft_model
+                                   if st["spec_mode"] == "draft" else None)
+            meta["accept_rate"] = st["accept_rate"]
+            meta["eff_tok_per_step"] = st["eff_tok_per_step"]
+        if draft_k_walls is not None:
+            meta["draft_k_walls"] = draft_k_walls
         if chunk_walls is not None:
             meta["prefill_chunk_walls"] = chunk_walls
         if paged:

@@ -16,15 +16,21 @@ Level semantics (cumulative, matching the paper's iterations):
   O4  +double buffer  — load/compute/store overlap                   [Iter #3.1]
   O5  +scratchpad reorg — wide-word / packed layouts                 [Iter #3.2]
 
-Beyond the paper's table, the serving runtime grows the ladder one more
-rung (same methodology — reshape on-chip memory to the access pattern,
-then *measure*):
+Beyond the paper's table, the serving runtime grows the ladder further
+(same methodology — reshape the hot loop to the access pattern, then
+*measure*):
 
   O6  +paged scratchpad — fixed-size KV blocks + per-request block
       tables (vLLM-style), i.e. scratchpad reorganization level 2: the
       decode cache stops reserving batch x max_seq contiguous memory per
       slot and instead allocates from a shared block pool sized to the
       live working set.
+  O7  +speculative decoding — a small drafter proposes K tokens per
+      slot per tick; the target verifies them in one batched multi-token
+      forward and greedy rejection accepts exactly the target's argmax
+      prefix, so output stays bit-identical while effective tokens/tick
+      rises toward 1 + acceptance * K (the hardware analog: branch
+      prediction — speculate, verify, roll back for free).
 
 ``STEP_ORDER`` stays the paper's five steps (everything that reproduces
 the paper's tables iterates it); ``LADDER`` is the full cumulative order
@@ -48,6 +54,11 @@ class Step(enum.Enum):
     # Serving extension (not in the paper's Table 1): scratchpad
     # reorganization level 2 — paged KV blocks + per-request block tables.
     PAGED_SCRATCHPAD = "paged_scratchpad"
+    # Serving extension: speculative decoding — a small drafter proposes
+    # K tokens per slot per tick and the target verifies them in ONE
+    # batched multi-token forward, collapsing up to K+1 decode ticks
+    # into one (greedy rejection keeps output bit-identical).
+    SPECULATIVE = "speculative_decoding"
 
     @property
     def software_counterpart(self) -> str:
@@ -66,6 +77,7 @@ _COUNTERPART = {
     Step.DOUBLE_BUFFERING: "computation/communication overlapping",
     Step.SCRATCHPAD_REORG: "bit packing",
     Step.PAGED_SCRATCHPAD: "paged virtual memory (vLLM block tables)",
+    Step.SPECULATIVE: "branch prediction (speculate, verify, roll back)",
 }
 
 # Table 1. Double buffering's range is folded into Iter#3's 1.2~19.2x in the
@@ -80,6 +92,11 @@ _PAPER_RANGE = {
     # concurrency at equal memory), not raw speedup; throughput stays
     # within noise of O5 by design.
     Step.PAGED_SCRATCHPAD: (1.0, 1.0),
+    # Not a paper figure either: the speculative rung's win is effective
+    # tokens per tick (1 + acceptance * K), bounded by the measured
+    # draft-vs-verify wall ratio; the autotuner races K and keeps K=0
+    # (plain decode) on a tie/loss.
+    Step.SPECULATIVE: (1.0, 1.0),
 }
 
 # The paper's Table 1: every surface that reproduces the paper's numbers
@@ -95,7 +112,7 @@ STEP_ORDER = (
 
 # Full cumulative ladder: OptLevel n enables LADDER[:n].  The serving
 # runtime walks all of it; paper-scoped surfaces stop at STEP_ORDER.
-LADDER = STEP_ORDER + (Step.PAGED_SCRATCHPAD,)
+LADDER = STEP_ORDER + (Step.PAGED_SCRATCHPAD, Step.SPECULATIVE)
 
 
 class OptLevel(enum.IntEnum):
@@ -106,6 +123,7 @@ class OptLevel(enum.IntEnum):
     O4 = 4   # + double buffering
     O5 = 5   # + scratchpad reorganization
     O6 = 6   # + paged scratchpad (serving extension: KV block tables)
+    O7 = 7   # + speculative decoding (serving extension: draft/verify)
 
     @property
     def steps(self) -> tuple:
@@ -167,6 +185,18 @@ class BestEffortConfig:
     # without a prefill step (MoE, recurrent-state) degrade to the
     # legacy path, and greedy tokens are bit-identical either way.
     prefill_chunk: int = 0
+    # O7 (serving): speculative decoding.  ``draft_model`` names a small
+    # zoo arch that proposes ``draft_k`` tokens per slot per tick; the
+    # target model verifies all of them in one batched multi-token
+    # forward and greedy rejection accepts exactly the target's argmax
+    # prefix — output stays bit-identical to plain decode while
+    # effective tokens/tick rises toward 1 + acceptance * draft_k.
+    # Best-effort contract: no drafter configured, draft_k == 0, a
+    # stochastic sampler, or a model family without verify hooks all
+    # degrade to the plain O6 decode path (recorded in
+    # ``engine.spec_mode``), never fail.
+    draft_model: str = ""
+    draft_k: int = 4
 
     def with_level(self, level: OptLevel) -> "BestEffortConfig":
         return dataclasses.replace(self, level=level)

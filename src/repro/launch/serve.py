@@ -8,7 +8,8 @@ On a real fleet the same driver builds the production mesh and the sharded
 ``serve_step`` from ``launch/steps.py``; on this container it runs the
 reduced smoke config on the host device.  ``--level`` selects the
 OptLevel the engine is built at (see ``repro.serving``; 6 = paged KV
-blocks); walk all seven with ``python -m repro.autotune --serve``.
+blocks, 7 = speculative decoding — pair it with ``--draft``); walk all
+eight with ``python -m repro.autotune --serve``.
 
 Layout x placement: ``--pe`` sets the PE-duplication degree — on >= 2
 devices an O3+ engine shards (the contiguous cache on its batch axis;
@@ -37,7 +38,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                level: OptLevel = OptLevel.O5, policy: str = "fcfs",
                sampler: SamplerConfig = None, pe: int = 8,
                kv_block_size: int = 16, kv_pool_blocks: int = 0,
-               paged_attn: str = "gather", prefill_chunk: int = 0) -> dict:
+               paged_attn: str = "gather", prefill_chunk: int = 0,
+               draft_model: str = "", draft_k: int = 4) -> dict:
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     engine = DecodeEngine(model, params, batch_size=batch_size,
@@ -47,7 +49,9 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                               kv_block_size=kv_block_size,
                               kv_pool_blocks=kv_pool_blocks,
                               paged_attn=paged_attn,
-                              prefill_chunk=prefill_chunk),
+                              prefill_chunk=prefill_chunk,
+                              draft_model=draft_model,
+                              draft_k=draft_k),
                           policy=policy, sampler=sampler)
 
     rng = np.random.default_rng(seed)
@@ -71,6 +75,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
         "devices": engine.placement.n_devices,
         "paged_attn": getattr(engine.layout, "attn_impl", None),
         "prefill_mode": engine.prefill_mode,
+        "spec_mode": engine.spec_mode,
+        "spec": engine.spec_stats,
     }
 
 
@@ -82,9 +88,10 @@ def main():
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--level", type=int, default=5, choices=range(7),
+    ap.add_argument("--level", type=int, default=5, choices=range(8),
                     help="OptLevel to build the engine at (0=naive, "
-                         "6=paged KV blocks)")
+                         "6=paged KV blocks, 7=speculative decoding — "
+                         "needs --draft)")
     ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"))
     ap.add_argument("--sampler", default="greedy",
                     choices=("greedy", "temperature", "top_k"))
@@ -111,6 +118,17 @@ def main():
                          "per-tick prestaged path; families without a "
                          "prefill step degrade; greedy tokens identical "
                          "either way)")
+    ap.add_argument("--draft", default="", dest="draft_model",
+                    help="O7 drafter arch (e.g. smollm-360m): proposes "
+                         "--draft-k tokens per slot per tick for the "
+                         "target to verify in one batched forward; must "
+                         "share the target's vocab (resolved at the same "
+                         "smoke/full scale).  Empty disables speculation "
+                         "(O7 then behaves exactly like O6)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculation window: drafted tokens per slot "
+                         "per verify step (0 disables; greedy tokens "
+                         "identical for every K)")
     ap.add_argument("--expect-devices", type=int, default=0,
                     help="exit 1 unless the engine's placement landed on "
                          "exactly this many devices (CI smoke)")
@@ -126,13 +144,21 @@ def main():
                      kv_block_size=args.kv_block,
                      kv_pool_blocks=args.kv_pool_blocks,
                      paged_attn=args.paged_attn,
-                     prefill_chunk=args.prefill_chunk)
+                     prefill_chunk=args.prefill_chunk,
+                     draft_model=args.draft_model, draft_k=args.draft_k)
     for r in out["finished"][:4]:
         print(f"[serve] req {r.rid}: prompt[{r.n_prompt}] -> "
               f"{r.generated}")
     attn = f"/{out['paged_attn']}" if out["paged_attn"] else ""
     if args.prefill_chunk:
         attn += f"/prefill={out['prefill_mode']}({args.prefill_chunk})"
+    if out["spec_mode"] == "draft":
+        st = out["spec"]
+        attn += (f"/spec=K{st['draft_k']}({args.draft_model},"
+                 f"accept={st['accept_rate']:.2f},"
+                 f"eff={st['eff_tok_per_step']:.2f})")
+    elif args.level >= 7:
+        attn += "/spec=off"
     print(f"[serve] O{args.level}/{args.policy} "
           f"[{out['layout']}{attn} x {out['devices']} device(s)]: "
           f"{len(out['finished'])} requests, {out['tokens']} new "

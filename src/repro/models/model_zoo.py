@@ -46,6 +46,17 @@ class ModelAPI:
     # Same, straight off the paged pool via the multi-query kernel:
     # (params, pool, tables, tokens, start, last) -> (logits, pool).
     paged_prefill_step: Callable = None
+    # Speculative verify (params, cache, tokens (B, C), start (B,)) ->
+    # (logits (B, C, vocab_padded), cache): ONE batched forward over the
+    # pending token + C-1 drafts per slot, logits at EVERY row so greedy
+    # rejection can accept the argmax prefix.  None for families where a
+    # window is not equivalent to C single-token steps (same gating as
+    # prefill_step) — the engine then degrades speculation to plain
+    # decode, recorded in ``engine.spec_mode``.
+    verify_step: Callable = None
+    # Same off the paged pool: (params, pool, tables, tokens, start) ->
+    # (logits (B, C, vocab_padded), pool).
+    paged_verify_step: Callable = None
 
 
 def get_model(cfg: ArchConfig) -> ModelAPI:
@@ -78,6 +89,15 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
                                                     tables, tokens, start,
                                                     last))
 
+    verify = paged_verify = None
+    if hasattr(mod, "verify_step") and not cfg.n_experts:
+        verify = (lambda params, cache, tokens, start:
+                  mod.verify_step(cfg, params, cache, tokens, start))
+        if hasattr(mod, "paged_verify_step"):
+            paged_verify = (lambda params, pool, tables, tokens, start:
+                            mod.paged_verify_step(cfg, params, pool, tables,
+                                                  tokens, start))
+
     return ModelAPI(
         cfg=cfg,
         init=lambda rng: mod.init(cfg, rng),
@@ -94,7 +114,65 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         paged_decode_step=paged_step,
         prefill_step=prefill,
         paged_prefill_step=paged_prefill,
+        verify_step=verify,
+        paged_verify_step=paged_verify,
     )
+
+
+# ---------------------------------------------------------------------------
+# Drafter pairing (speculative decoding)
+# ---------------------------------------------------------------------------
+
+# Known (target -> drafter) pairings: the small zoo arch that proposes
+# tokens for the big one.  A pairing here is a *candidate* — it still
+# has to pass ``compatible_drafter``'s vocab check at the scale it runs
+# (the smoke cells share a 256-token vocab; full smollm/qwen3 tokenizers
+# differ, which the check rejects loudly rather than decoding garbage).
+DRAFTER_PAIRS = {
+    "qwen3-8b": "smollm-360m",
+    "mistral-large-123b": "smollm-360m",
+    "nemotron-4-340b": "smollm-360m",
+}
+
+
+def compatible_drafter(target, draft=None) -> ArchConfig:
+    """Resolve and validate the (drafter, target) pair for speculation.
+
+    ``target`` is an ArchConfig (or registry name); ``draft`` a registry
+    name / ArchConfig, defaulting to the ``DRAFTER_PAIRS`` entry.  A
+    string drafter resolves at the SAME scale as the target (smoke vs
+    full).  Speculative verify compares the drafter's proposed token ids
+    against the target's argmax, so the two models must share one token
+    space: mismatched vocabs raise ValueError naming both sizes instead
+    of silently decoding garbage."""
+    from repro.configs import get_config, get_smoke
+
+    if isinstance(target, str):
+        target = get_config(target)
+    if draft is None:
+        try:
+            draft = DRAFTER_PAIRS[target.name]
+        except KeyError:
+            raise ValueError(
+                f"no known drafter pairing for target {target.name!r}; "
+                f"pass draft_model explicitly (pairs: {sorted(DRAFTER_PAIRS)})"
+            ) from None
+    if isinstance(draft, str):
+        try:
+            full = get_config(target.name)
+        except KeyError:
+            full = target
+        smoke = target != full
+        draft = get_smoke(draft) if smoke else get_config(draft)
+    if draft.vocab != target.vocab:
+        raise ValueError(
+            f"drafter {draft.name!r} (vocab {draft.vocab}) is not "
+            f"token-compatible with target {target.name!r} (vocab "
+            f"{target.vocab}): speculative verify compares token ids "
+            f"across the two models, so they must share one tokenizer/"
+            f"vocab"
+        )
+    return draft
 
 
 # ---------------------------------------------------------------------------

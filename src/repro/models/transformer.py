@@ -154,7 +154,7 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 
 
 def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body,
-                   last=None):
+                   last=None, all_rows=False):
     """Shared decode skeleton: embed -> scan layers -> final norm ->
     logits.  ``attn_body`` is the pluggable decode-attention hook applied
     per layer — dense attention on a per-slot cache view
@@ -165,7 +165,11 @@ def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body,
     ``tokens`` may carry C >= 1 positions per row (chunked prefill).
     ``last`` (B,) selects the logits row per slot — the chunk's final
     REAL prompt token, so a padded final chunk still emits the right
-    first token; ``None`` keeps the decode path's row 0 untouched."""
+    first token; ``None`` keeps the decode path's row 0 untouched.
+    ``all_rows`` returns logits at EVERY row (B, C, vocab_padded) for
+    speculative verify — projected one row at a time so each (B, d) @
+    (d, vocab) matmul is the exact shape the decode path runs (same
+    reduction, bit-identical logits per row)."""
     dt = jnp.dtype(cfg.compute_dtype)
     h = params["embedding"].astype(dt)[tokens]           # (B, C, d)
 
@@ -189,6 +193,12 @@ def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body,
     h, (nk, nv) = scan_or_unroll(body, h, (params["layers"],) + kv_leaves,
                                  unroll=cfg.unroll_layers)
     h = rms_norm(h, params["final_norm"])
+    if all_rows:
+        w = params["lm_head"].astype(dt)
+        logits = jnp.stack(
+            [(h[:, j] @ w).astype(jnp.float32) for j in range(h.shape[1])],
+            axis=1)
+        return logits, {"k": nk, "v": nv}
     hl = h[:, 0] if last is None else jnp.take_along_axis(
         h, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
     logits = (hl @ params["lm_head"].astype(dt)).astype(jnp.float32)
@@ -283,6 +293,60 @@ def paged_prefill_step(cfg: ArchConfig, params, pool, tables, tokens,
 
     return _decode_layers(cfg, params, (pool["k"], pool["v"]), tokens,
                           attn_body, last=last)
+
+
+def verify_step(cfg: ArchConfig, params, cache, tokens, start):
+    """Speculative-verify step against the dense cache: tokens (B, C) —
+    the pending token plus C-1 drafted tokens per slot, written at cache
+    positions ``start`` .. ``start + C - 1``.  Returns (logits
+    (B, C, vocab_padded) at EVERY row, new_cache): row j is the target's
+    distribution after token j, so greedy rejection accepts the longest
+    prefix where draft j+1 == argmax(row j).  Attention math is the
+    chunked-prefill path (row arithmetic bit-identical to single-token
+    decode); rejected rows' K/V writes land beyond the slot's frontier
+    and are rewritten before first unmasked read — rollback is free.
+    Not valid for MoE configs; the ModelAPI wiring gates that."""
+    C = tokens.shape[1]
+    max_seq = cache["k"].shape[2]
+    positions = jnp.clip(start[:, None] + jnp.arange(C)[None], 0,
+                         max_seq - 1).astype(jnp.int32)
+
+    def attn_body(layer_params, hn, ck, cv):
+        return attn.chunk_prefill_attention(
+            layer_params["attn"], hn, {"k": ck, "v": cv}, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        )
+
+    return _decode_layers(cfg, params, (cache["k"], cache["v"]), tokens,
+                          attn_body, all_rows=True)
+
+
+def paged_verify_step(cfg: ArchConfig, params, pool, tables, tokens, start):
+    """Speculative-verify step straight off the paged block pool: the
+    window's K/V is scattered into pool blocks through the slot's table
+    (writes past the reservation are absorbed by the NULL block) and the
+    multi-query Pallas kernel attends the whole prefix.  Same all-rows
+    logits contract as :func:`verify_step`; rejected drafts roll back by
+    slot-length truncation — the table rows never change, so blocks
+    never leak."""
+    C = tokens.shape[1]
+    T = pool["k"].shape[2]
+    nb = tables.shape[1]
+    positions = jnp.clip(start[:, None] + jnp.arange(C)[None], 0,
+                         nb * T - 1).astype(jnp.int32)
+    lengths = (start + C).astype(jnp.int32)      # unclipped: exact row masks
+
+    def attn_body(layer_params, hn, ck, cv):
+        return attn.paged_chunk_prefill_attention(
+            layer_params["attn"], hn, {"k": ck, "v": cv}, tables,
+            positions, lengths,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        )
+
+    return _decode_layers(cfg, params, (pool["k"], pool["v"]), tokens,
+                          attn_body, all_rows=True)
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,31 @@ Prefill is a first-class phase with two implementations:
     (``prefill_mode == "token"``); greedy tokens are bit-identical
     either way — the same oracle the O0..O6 ladder pins.
 
+  O7 speculative decode — a small drafter model proposes ``draft_k``
+                         tokens per generating slot per tick; the target
+                         verifies the whole window in ONE batched
+                         multi-token forward (the layout's verify step —
+                         PR 6's qlen>1 machinery) and greedy rejection
+                         accepts exactly the target's argmax prefix, so
+                         output stays bit-identical to O5/O6 while up to
+                         ``1 + acceptance * K`` tokens land per tick.
+                         Rollback is free on both layouts: rejected
+                         writes sit beyond the slot's frontier
+                         (contiguous — rewritten before unmasked read;
+                         paged — confined to the slot's own reservation
+                         or the NULL block, so truncating the logical
+                         length rolls back without touching the block
+                         tables and blocks never leak).  No drafter
+                         configured, ``draft_k == 0``, a stochastic
+                         sampler, or a family without verify hooks all
+                         degrade to the plain decode path — recorded in
+                         ``engine.spec_mode`` ("draft" / "off"), never a
+                         failure.  The speculative tick replaces the O4
+                         double-buffered schedule (acceptance must be
+                         known before the next window can be drafted);
+                         the drafter's own dispatches pipeline against
+                         the verify step instead.
+
 The phases are also exposed directly (the JetStream-style serving API):
 ``prefill(prompt)`` consumes a prompt on a standalone batch-1 cache and
 samples the first token, ``insert(result)`` installs that KV state into
@@ -72,6 +97,7 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core.optlevel import BestEffortConfig, OptLevel, Step
@@ -98,7 +124,8 @@ class DecodeEngine:
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
                  pad_id: int = 0, config: Optional[BestEffortConfig] = None,
                  sampler: Optional[SamplerConfig] = None,
-                 policy: str = "fcfs", step_fn=None):
+                 policy: str = "fcfs", step_fn=None,
+                 draft_model=None, draft_params=None):
         self.model = model
         self.B = batch_size
         self.max_seq = max_seq
@@ -168,10 +195,85 @@ class DecodeEngine:
         self.prefill_mode = ("chunked" if self._prefill_fn is not None
                              else "token")
 
+        # O7: speculative decoding.  Active only when every piece is in
+        # place — the rung enabled, a drafter configured (by name in the
+        # config or passed in directly), draft_k > 0, a deterministic
+        # (greedy) sampler, the fused engine path, and a layout verify
+        # step for this (layout x placement x model) cell.  Anything
+        # missing degrades to the plain decode path above, recorded in
+        # ``spec_mode`` — never a failure.  A vocab-incompatible
+        # (drafter, target) pair, however, raises loudly
+        # (``model_zoo.compatible_drafter``): that is an operator error,
+        # not a best-effort gap.
+        self._spec = False
+        self.spec_mode = "off"
+        self._draft_k = max(int(self.config.draft_k), 0)
+        self._verify_fn = None
+        self.spec_drafted = self.spec_accepted = 0
+        self.spec_emitted = self.spec_ticks = self.spec_windows = 0
+        self._dstate = [(-1, 0)] * batch_size   # per-slot (rid, drafter pos)
+        spec_wanted = (self.level.has(Step.SPECULATIVE)
+                       and (draft_model is not None
+                            or bool(self.config.draft_model))
+                       and self._draft_k > 0)
+        if (spec_wanted and self._fused and step_fn is None
+                and not self.sampler_cfg.stochastic):
+            self._verify_fn = self.layout.make_verify_step(
+                model, self.sampler_cfg, self.cache_mgr, self.placement)
+            if self._verify_fn is not None:
+                self._wire_drafter(draft_model, draft_params)
+                self._spec = True
+                self.spec_mode = "draft"
+
+    def _wire_drafter(self, api, params):
+        """Build (or adopt) the drafter: a small zoo model with its own
+        batch-B contiguous cache, running the shared greedy fused step.
+        The pairing is validated by ``model_zoo.compatible_drafter`` —
+        the drafter proposes token IDS the target scores, so the two
+        must share one vocab."""
+        from repro.models import model_zoo
+        if api is None:
+            dcfg = model_zoo.compatible_drafter(self.model.cfg,
+                                                self.config.draft_model)
+            api = model_zoo.get_model(dcfg)
+        else:
+            model_zoo.compatible_drafter(self.model.cfg, api.cfg)
+        if params is None:
+            params = api.init(jax.random.PRNGKey(0))
+        self._draft_api = api
+        self._draft_params = self.placement.put_replicated(params)
+        self._draft_cache = api.init_cache(self.B, self.max_seq)
+        dsteps = shared_steps(api, SamplerConfig())     # greedy drafts
+        self._draft_fused = dsteps["fused"]
+        self._draft_prefill_fn = (dsteps["prefill"]
+                                  if api.prefill_step is not None else None)
+        self._draft_seeds = jnp.zeros((self.B,), jnp.int32)
+
     # -- public API -----------------------------------------------------------
     @property
     def cache(self):
         return self.cache_mgr.cache
+
+    @property
+    def spec_stats(self) -> dict:
+        """Speculation counters: drafts proposed/accepted over the
+        engine's lifetime, tokens emitted through verify windows, and
+        the two ladder columns — ``accept_rate`` (accepted / proposed)
+        and ``eff_tok_per_step`` (tokens emitted per slot per verify
+        window, in [1, K+1] and equal to ``1 + accept_rate * draft_k``
+        absent mid-window retirements)."""
+        drafted = self.spec_drafted
+        windows = self.spec_windows
+        return {
+            "spec_mode": self.spec_mode,
+            "draft_k": self._draft_k if self._spec else 0,
+            "drafted": drafted,
+            "accepted": self.spec_accepted,
+            "accept_rate": (self.spec_accepted / drafted) if drafted else 0.0,
+            "emitted": self.spec_emitted,
+            "eff_tok_per_step": (self.spec_emitted / windows) if windows
+            else 0.0,
+        }
 
     @property
     def queue(self):
@@ -287,6 +389,8 @@ class DecodeEngine:
 
     def step(self) -> bool:
         """One engine tick: admit, run the batched decode step, retire."""
+        if self._spec:
+            return self._step_spec()
         if self._overlap is not None:
             return self._step_overlapped()
         return self._step_serial()
@@ -341,6 +445,197 @@ class DecodeEngine:
             sched.advance(i, int(np.asarray(tok_dev)))
         else:
             sched.advance_chunk(i, n)
+
+    # -- speculative decoding (O7) -------------------------------------------
+    def _token_at(self, i: int, q: int) -> int:
+        """Token ``q`` of slot ``i``'s sequence (prompt, then generated) —
+        what the drafter replays while catching up to the target."""
+        r = self.scheduler.slots[i].req
+        return r.prompt[q] if q < r.n_prompt else r.generated[q - r.n_prompt]
+
+    def _draft_dispatch(self, tokens_np, positions_np):
+        """One batched drafter decode tick on the drafter's own cache."""
+        toks, self._draft_cache = self._draft_fused(
+            self._draft_params, self._draft_cache,
+            jnp.asarray(tokens_np), jnp.asarray(positions_np),
+            self._draft_seeds)
+        return np.asarray(toks).reshape(self.B, -1)[:, -1]
+
+    def _draft_catchup_chunks(self, i: int, tgt: int):
+        """Replay a LONG stretch of slot ``i``'s known tokens into the
+        drafter cache via the drafter's chunked prefill step (a fresh
+        tenant's whole prompt) — fixed-width chunks so one trace serves
+        every catch-up."""
+        C = 16
+        rid, dpos = self._dstate[i]
+        while dpos < tgt:
+            n = min(C, tgt - dpos)
+            toks = np.full((1, C), self.pad_id, np.int32)
+            toks[0, :n] = [self._token_at(i, q) for q in range(dpos,
+                                                               dpos + n)]
+            _, self._draft_cache = self._draft_prefill_fn(
+                self._draft_params, self._draft_cache, jnp.int32(i),
+                jnp.asarray(toks), jnp.asarray([dpos], jnp.int32),
+                jnp.asarray([n - 1], jnp.int32),
+                jnp.asarray([0], jnp.int32))
+            dpos += n
+        self._dstate[i] = (rid, dpos)
+
+    def _draft_tokens(self, emit: list) -> dict:
+        """Catch the drafter up to each emitting slot's frontier, then
+        run K batched greedy drafter ticks from the pending token —
+        returns ``{slot: [d_1 .. d_K]}``.
+
+        Catch-up replays KNOWN tokens only (prompt + accepted output),
+        so the drafter cache never depends on rejected drafts: after a
+        partial acceptance the drafter position is truncated to the
+        accepted frontier and the stale draft K/V beyond it is rewritten
+        here before the drafter ever attends it unmasked — the same
+        standing-garbage discipline the target caches use.  Slots not
+        being drafted this dispatch are parked: pad token written at
+        ``max_seq - 1``, a position every real consumer rewrites in the
+        same dispatch that first reads it."""
+        slots = self.scheduler.slots
+        K = self._draft_k
+        for i in emit:
+            rid = slots[i].req.rid
+            if self._dstate[i][0] != rid:
+                self._dstate[i] = (rid, 0)      # fresh tenant: replay all
+            if (self._draft_prefill_fn is not None
+                    and slots[i].pos - self._dstate[i][1] > 2 * (K + 1)):
+                self._draft_catchup_chunks(i, slots[i].pos)
+        while True:
+            behind = [i for i in emit if self._dstate[i][1] < slots[i].pos]
+            if not behind:
+                break
+            tokens = np.full((self.B, 1), self.pad_id, np.int32)
+            positions = np.full((self.B,), self.max_seq - 1, np.int32)
+            for i in behind:
+                dpos = self._dstate[i][1]
+                tokens[i, 0] = self._token_at(i, dpos)
+                positions[i] = dpos
+            self._draft_dispatch(tokens, positions)
+            for i in behind:
+                rid, dpos = self._dstate[i]
+                self._dstate[i] = (rid, dpos + 1)
+        drafts = {i: [] for i in emit}
+        cur = {i: slots[i].next_token() for i in emit}
+        for j in range(K):
+            tokens = np.full((self.B, 1), self.pad_id, np.int32)
+            positions = np.full((self.B,), self.max_seq - 1, np.int32)
+            for i in emit:
+                tokens[i, 0] = cur[i]
+                positions[i] = slots[i].pos + j
+            out = self._draft_dispatch(tokens, positions)
+            for i in emit:
+                cur[i] = int(out[i])
+                drafts[i].append(cur[i])
+        for i in emit:
+            # Drafter K/V now covers positions .. pos+K-1; acceptance
+            # bookkeeping truncates this back if drafts are rejected.
+            self._dstate[i] = (self._dstate[i][0], slots[i].pos + K)
+        return drafts
+
+    def _step_spec(self) -> bool:
+        """One speculative tick: draft K per generating slot, verify the
+        whole batch's windows in ONE multi-token target forward, accept
+        each slot's longest draft==argmax prefix plus the target's
+        bonus/correction token, and roll rejected tails back by frontier
+        truncation.  Prompt-consuming slots ride the SAME verify forward
+        as fixed-width prefill chunks; slots within K of the ``max_seq``
+        boundary (where window positions would clip onto each other)
+        take a plain decode dispatch instead — at most their last few
+        ticks."""
+        sched = self.scheduler
+        slots = sched.slots
+        admitted = sched.admit()
+        active = sched.active_indices
+        self.cache_mgr.reset_slots(admitted, active)
+        if not active:
+            return False
+        K = self._draft_k
+        W = K + 1
+        emit, boundary, prefill = [], [], []
+        for i in active:
+            s = slots[i]
+            if s.pos < s.req.n_prompt - 1:
+                prefill.append(i)
+            elif s.pos + K < self.max_seq:
+                emit.append(i)
+            else:
+                boundary.append(i)
+
+        drafts = self._draft_tokens(emit) if emit else {}
+
+        greedy = None
+        if emit or prefill:
+            tokens = np.full((self.B, W), self.pad_id, np.int32)
+            start = np.full((self.B,), self.max_seq - 1, np.int32)
+            pf_real = {}
+            for i in emit:
+                s = slots[i]
+                start[i] = s.pos
+                tokens[i, 0] = s.next_token()
+                tokens[i, 1:] = drafts[i]
+            for i in prefill:
+                s = slots[i]
+                r = s.req
+                start[i] = s.pos
+                n = min(W, r.n_prompt - s.pos)
+                tokens[i, :n] = r.prompt[s.pos:s.pos + n]
+                pf_real[i] = n
+            toks_dev, new_cache = self._verify_fn(
+                self.params, self.cache_mgr.cache,
+                *self.cache_mgr.step_extras(),
+                jnp.asarray(tokens), jnp.asarray(start))
+            self.cache_mgr.cache = new_cache
+            self.n_steps += 1
+            greedy = np.asarray(toks_dev).reshape(self.B, W)
+
+        btoks = None
+        if boundary:
+            tokens_np = np.full((self.B, 1), self.pad_id, np.int32)
+            positions_np = np.full((self.B,), self.max_seq - 1, np.int32)
+            for i in boundary:
+                s = slots[i]
+                tokens_np[i, 0] = s.next_token()
+                positions_np[i] = s.pos
+            toks_b = self._dispatch(tokens_np, positions_np,
+                                    np.zeros((self.B,), np.int32))
+            btoks = np.asarray(toks_b).reshape(self.B, -1)[:, -1]
+
+        # -- bookkeeping (host) ----------------------------------------------
+        if emit:
+            self.spec_ticks += 1
+        for i in emit:
+            g = greedy[i]
+            d = drafts[i]
+            a = 0
+            while a < K and d[a] == g[a]:
+                a += 1          # draft j+1 must equal the target's row j
+            p = slots[i].pos
+            rid = slots[i].req.rid
+            window = [int(x) for x in g[:a + 1]]
+            n_rec, _ = sched.advance_multi(i, window)
+            self.spec_drafted += K
+            self.spec_accepted += a
+            self.spec_emitted += n_rec
+            self.spec_windows += 1
+            # Truncate the drafter to what actually survived: positions
+            # beyond pos + n_rec hold rejected-draft K/V, replayed from
+            # the accepted tokens before the next draft attends them.
+            self._dstate[i] = (rid, min(p + K, p + n_rec))
+        for i in prefill:
+            s = slots[i]
+            n = pf_real[i]
+            if s.pos + n == s.req.n_prompt:     # window closes the prompt
+                sched.advance_chunk(i, n - 1)
+                sched.advance(i, int(greedy[i][n - 1]))
+            else:
+                sched.advance_chunk(i, n)
+        for i in boundary:
+            sched.advance(i, int(btoks[i]))
+        return True
 
     def _step_serial(self) -> bool:
         """O0..O3: admit -> fill -> dispatch -> wait -> retire, in order.

@@ -220,10 +220,21 @@ def shared_steps(model, sampler_cfg):
             for leaf, new, bax in zip(leaves, row_leaves, batch_axes)])
         return sample(logits, seeds)[0], new_cache
 
+    def _verify(params, cache, tokens, start):
+        """Speculative verify: ONE batched forward over tokens (B, C) —
+        each slot's pending token + C-1 drafts written at positions
+        ``start`` .. ``start + C - 1`` — returning the greedy token at
+        EVERY row (B, C).  Only traced for greedy samplers (the engine
+        gates speculation on determinism), where ``sample`` reduces over
+        the last axis row-independently."""
+        logits, new_cache = weak.verify_step(params, cache, tokens, start)
+        return sample(logits, None), new_cache
+
     _STEP_CACHE[key] = {
         "fused": jax.jit(make_fused(weak, sample), donate_argnums=(1,)),
         "single": jax.jit(_single, donate_argnums=(1,)),
         "prefill": jax.jit(_prefill, donate_argnums=(1,)),
+        "verify": jax.jit(_verify, donate_argnums=(1,)),
         "sample": jax.jit(sample),
     }
     # Evict on model death (runs at deallocation, before the id can be
@@ -285,6 +296,16 @@ class KVLayout:
         serves that cell)."""
         return None
 
+    def make_verify_step(self, model, sampler_cfg, manager, placement):
+        """The jitted speculative-verify step for (this layout) x (this
+        placement): (params, cache, *extras, tokens (B, C), start (B,))
+        -> (greedy tokens (B, C), cache) — one batched multi-token
+        forward over every slot's pending token + drafts, greedy argmax
+        at every row in-graph.  None when this layout x placement x
+        model cell cannot verify (no model verify hook) — the engine
+        then degrades speculation to plain decode."""
+        return None
+
 
 class ContiguousLayout(KVLayout):
     """One ``batch x max_seq`` cache slice per slot (rungs O0..O5).
@@ -316,6 +337,28 @@ class ContiguousLayout(KVLayout):
         if placement.sharded or model.prefill_step is None:
             return None
         return shared_steps(model, sampler_cfg)["prefill"]
+
+    def make_verify_step(self, model, sampler_cfg, manager, placement):
+        if model.verify_step is None:
+            return None
+        if not placement.sharded:
+            return shared_steps(model, sampler_cfg)["verify"]
+        # Sharded PE duplication: the verify window shards on the batch
+        # axis exactly like the decode step's tokens — no reduction is
+        # split, so greedy rows stay bit-identical to the replicated cell.
+        sample = make_sampler(sampler_cfg)
+
+        def _verify(params, cache, tokens, start):
+            logits, new_cache = model.verify_step(params, cache, tokens,
+                                                  start)
+            return sample(logits, None), new_cache
+
+        tok_sh, pos_sh = placement.token_shardings()
+        return jax.jit(
+            _verify, donate_argnums=(1,),
+            in_shardings=(placement.replicated, manager.shardings,
+                          tok_sh, pos_sh),
+            out_shardings=(tok_sh, manager.shardings))
 
 
 class PagedLayout(KVLayout):
@@ -430,6 +473,56 @@ class PagedLayout(KVLayout):
                 new_pool = plan.scatter_view(pool, row, new_dense)
                 return sample(logits, seeds)[0], new_pool
         return jax.jit(_prefill, donate_argnums=(1,))
+
+    def make_verify_step(self, model, sampler_cfg, manager, placement):
+        """The paged speculative verify, matching ``attn_impl``:
+
+        * gather — materialize every slot's dense view, run the SAME
+          dense ``verify_step`` the contiguous rung runs, scatter the
+          WHOLE view back (``scatter_view`` — a speculative window spans
+          several blocks; writes past a slot's reservation land in NULL
+          table entries and vanish into the write-garbage NULL row, so
+          rejection rolls back by slot-length truncation alone and
+          blocks never leak).
+        * kernel — the model's ``paged_verify_step`` scatters the
+          window's K/V straight into pool blocks and the multi-query
+          block-table Pallas kernel attends the prefix; no dense view.
+
+        A kernel-mode engine whose model lacks a paged verify step
+        degrades to gather (same best-effort rule as ``make_step``)."""
+        if model.verify_step is None:
+            return None
+        sample = make_sampler(sampler_cfg)
+        plan = manager.plan
+        use_kernel = (self.attn_impl == "kernel"
+                      and model.paged_verify_step is not None)
+        if use_kernel:
+            def _verify(params, pool, tables, tokens, start):
+                if placement.sharded:
+                    pool = jax.tree.map(placement.constrain_replicated,
+                                        pool)
+                logits, new_pool = model.paged_verify_step(
+                    params, pool, tables, tokens, start)
+                return sample(logits, None), new_pool
+        else:
+            def _verify(params, pool, tables, tokens, start):
+                dense = plan.gather(pool, tables)
+                if placement.sharded:
+                    dense = plan.map_batch_axes(dense,
+                                                placement.constrain_axis)
+                logits, new_dense = model.verify_step(params, dense,
+                                                      tokens, start)
+                new_pool = plan.scatter_view(pool, tables, new_dense)
+                return sample(logits, None), new_pool
+        if not placement.sharded:
+            return jax.jit(_verify, donate_argnums=(1,))
+        pool_sh = manager.pool_shardings(placement)
+        tok_sh, pos_sh = placement.token_shardings()
+        repl = placement.replicated
+        return jax.jit(
+            _verify, donate_argnums=(1,),
+            in_shardings=(repl, pool_sh, repl, tok_sh, pos_sh),
+            out_shardings=(tok_sh, pool_sh))
 
 
 def select_layout(config: BestEffortConfig) -> KVLayout:

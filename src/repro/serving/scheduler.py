@@ -227,6 +227,23 @@ class Scheduler:
             return r
         return None
 
+    def advance_multi(self, i: int, tokens) -> tuple:
+        """Record a speculative window's accepted tokens for slot ``i``,
+        one at a time through :meth:`advance` so every retirement rule
+        (eos, max_new, the max_seq boundary) applies at the exact token
+        it lands on — which may be MID-window.  Recording stops at the
+        first retirement; later tokens in the window are discarded (the
+        engine already rolled their cache writes back by frontier
+        truncation, so nothing of them survives).  Returns
+        ``(n_recorded, retired_request_or_None)``."""
+        n = 0
+        for t in tokens:
+            retired = self.advance(i, t)
+            n += 1
+            if retired is not None:
+                return n, retired
+        return n, None
+
     # -- overlapped (double-buffered) tick protocol ---------------------------
     # The engine's O4+ path splits ``advance`` in two so the host can do
     # slot bookkeeping while the device computes: retirements decided by

@@ -183,15 +183,22 @@ def test_serving_backend_ladder_state_machine():
     assert b.candidate_steps(s) == [Step.DATA_CACHING]
     s = b.apply(s, Step.DATA_CACHING)
     assert s == OptLevel.O1
-    # the serving ladder continues past the paper's five to the paged rung
+    # the serving ladder continues past the paper's five to the paged
+    # rung and then the speculative rung
     assert b.candidate_steps(OptLevel.O5) == [Step.PAGED_SCRATCHPAD]
     assert b.apply(OptLevel.O5, Step.PAGED_SCRATCHPAD) == OptLevel.O6
-    assert b.candidate_steps(OptLevel.O6) == []
+    assert b.candidate_steps(OptLevel.O6) == [Step.SPECULATIVE]
+    assert b.apply(OptLevel.O6, Step.SPECULATIVE) == OptLevel.O7
+    assert b.candidate_steps(OptLevel.O7) == []
     # paper-scoped backends still top out at O5
     kb = KernelModelBackend(costmodel.MACHSUITE_PROFILES["gemm"])
     assert kb.candidate_steps(OptLevel.O5) == []
     with pytest.raises(ValueError, match="paged_attn"):
         ServingBackend("qwen3-8b", paged_attn="flash")
+    with pytest.raises(ValueError, match="draft_k"):
+        ServingBackend("qwen3-8b", draft_k="huge")
+    with pytest.raises(ValueError, match="draft_k"):
+        ServingBackend("qwen3-8b", draft_k=-1)
 
 
 def test_serving_backend_measures_paged_attn_by_race():
@@ -245,20 +252,65 @@ def test_serving_backend_measures_paged_attn_by_race():
 
 @pytest.mark.slow
 def test_serving_ladder_walk_identical_tokens():
-    """The full measured O0->O6 serving walk: seven rounds, every level's
+    """The full measured O0->O7 serving walk: eight rounds, every level's
     generations bit-identical under greedy sampling — including the paged
-    O6 rung at reduced pool capacity (forces queueing)."""
+    O6 rung at reduced pool capacity (forces queueing) and the
+    speculative O7 rung (pinned K so the walk stays one engine per
+    round)."""
     b = ServingBackend("qwen3-8b", batch_size=2, max_seq=24, n_requests=4,
                        max_new=4, repeats=1, kv_block_size=8,
-                       kv_pool_blocks=5)
+                       kv_pool_blocks=5, draft_k=4)
     res = autotune(b, ladder=True)
     assert res.mode == "ladder" and not res.rejected
-    assert [r.label for r in res.rounds] == [f"O{i}" for i in range(7)]
+    assert [r.label for r in res.rounds] == [f"O{i}" for i in range(8)]
     gens = [r.measurement.meta["generated"] for r in res.rounds]
     assert all(g == gens[0] for g in gens)
     assert all(r.measurement.total_s > 0 for r in res.rounds)
     caps = [r.measurement.meta["kv_capacity"] for r in res.rounds]
-    assert caps[:6] == [2 * 24] * 6 and caps[6] == 5 * 8
+    assert caps[:6] == [2 * 24] * 6 and caps[6:] == [5 * 8] * 2
+    assert res.rounds[7].measurement.meta["draft_k_walls"].keys() == {0, 4}
+
+
+def test_serving_backend_races_draft_k():
+    """At the speculative rung ``draft_k="auto"`` races K in {0,2,4,8} on
+    interleaved repeats; the winner displaces the K=0 incumbent only
+    beyond the 1% noise floor, and meta records every measured wall plus
+    the chosen engine's acceptance telemetry."""
+    b = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
+                       max_new=3, repeats=1, kv_block_size=4,
+                       paged_attn="gather", prefill_chunk=0)
+    m = b.measure(OptLevel.O7)
+    walls = m.meta["draft_k_walls"]
+    assert set(walls) == {0, 2, 4, 8}
+    assert all(w > 0 for w in walls.values())
+    best_k = min((k for k in walls if k), key=lambda k: walls[k])
+    if walls[best_k] < 0.99 * walls[0]:
+        assert m.meta["draft_k"] == best_k
+        assert m.meta["spec_mode"] == "draft"
+        assert m.total_s == walls[best_k]
+    else:
+        assert m.meta["draft_k"] == 0
+        assert m.meta["spec_mode"] == "off"
+        assert m.total_s == walls[0]
+    assert 0.0 <= m.meta["accept_rate"] <= 1.0
+    assert m.meta["eff_tok_per_step"] >= 0.0
+
+    # pinning draft_k=0 disables the race (and speculation) entirely
+    b0 = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
+                        max_new=3, repeats=1, kv_block_size=4,
+                        paged_attn="gather", prefill_chunk=0, draft_k=0)
+    m0 = b0.measure(OptLevel.O7)
+    assert "draft_k_walls" not in m0.meta
+    assert m0.meta["spec_mode"] == "off" and m0.meta["draft_k"] == 0
+    assert m0.meta["generated"] == m.meta["generated"]
+
+    # a family whose model cannot verify (no multi-token step) degrades
+    # to plain decode — no race, no walls, spec_mode says so
+    br = ServingBackend("rwkv6-3b", batch_size=2, max_seq=16, n_requests=2,
+                        max_new=3, repeats=1, kv_block_size=4)
+    mr = br.measure(OptLevel.O7)
+    assert "draft_k_walls" not in mr.meta
+    assert mr.meta["spec_mode"] == "off"
 
 
 def test_ladder_mode_on_kernel_backend_measures_every_rung():

@@ -17,12 +17,16 @@ def test_ladder_cumulative_semantics():
     assert OptLevel.O5.has(Step.SCRATCHPAD_REORG)
     assert not OptLevel.O2.has(Step.PE_DUPLICATION)
     assert OptLevel.O2.next_step == Step.PE_DUPLICATION
-    # The serving extension sits past the paper's five: O5's next move is
-    # the paged-scratchpad rung; the full ladder tops out at O6.
+    # The serving extensions sit past the paper's five: O5's next move
+    # is the paged-scratchpad rung, O6's the speculative rung; the full
+    # ladder tops out at O7.
     assert OptLevel.O5.next_step == Step.PAGED_SCRATCHPAD
-    assert OptLevel.O6.next_step is None
+    assert OptLevel.O6.next_step == Step.SPECULATIVE
+    assert OptLevel.O7.next_step is None
     assert OptLevel.O6.has(Step.PAGED_SCRATCHPAD)
     assert not OptLevel.O5.has(Step.PAGED_SCRATCHPAD)
+    assert OptLevel.O7.has(Step.SPECULATIVE)
+    assert not OptLevel.O6.has(Step.SPECULATIVE)
     assert STEP_ORDER == LADDER[:5]      # the paper's table is untouched
 
 

@@ -1,8 +1,9 @@
 """Serving engine: continuous batching, slot hygiene, retirement — and the
-O0..O6 ladder contract: every level generates bit-identical tokens under
+O0..O7 ladder contract: every level generates bit-identical tokens under
 greedy sampling (the serving analog of MachSuite's output-equivalence
-matrix), with the paged O6 cache differentially fuzzed against the
-contiguous path on random request mixes."""
+matrix), with the paged O6 cache and the speculative O7 draft/verify
+loop differentially fuzzed against the contiguous path on random
+request mixes."""
 
 import numpy as np
 
@@ -33,6 +34,19 @@ def _engine(arch="qwen3-8b", B=3, max_seq=32, **kw):
     cfg, model, params = _model(arch)
     return DecodeEngine(model, params, batch_size=B, max_seq=max_seq,
                         **kw), cfg
+
+
+_DRAFTERS = {}
+
+
+def _drafter(arch="smollm-360m"):
+    """The zoo drafter for speculation tests.  Its smoke weights are
+    random, so acceptance is near zero — which is exactly what stresses
+    the reject/rollback path."""
+    if arch not in _DRAFTERS:
+        api = get_model(get_smoke(arch))
+        _DRAFTERS[arch] = (api, api.init(jax.random.PRNGKey(1)))
+    return _DRAFTERS[arch]
 
 
 def test_all_requests_finish_exact_lengths():
@@ -161,12 +175,22 @@ def _random_mix(seed, vocab, *, n=8, max_seq=32, prompt_hi=10, new_hi=6):
 
 
 def _run_mix(mix, level, *, arch="qwen3-8b", policy="fcfs", B=3,
-             max_seq=32, eos=None, late_from=None, **cfg_kw):
+             max_seq=32, eos=None, late_from=None, draft=None, **cfg_kw):
     """Decode ``mix`` at ``level``; ``late_from`` submits the tail of the
     mix mid-flight (after two ticks); ``eos`` maps request index ->
-    eos_id.  Returns generated tokens in submission order."""
+    eos_id; ``draft`` wires a drafter into the engine ("zoo" = the
+    smollm-360m pairing, "self" = the target drafts for itself).
+    Returns generated tokens in submission order."""
+    eng_kw = {}
+    if draft == "self":
+        _, tmodel, tparams = _model(arch)
+        eng_kw = dict(draft_model=tmodel, draft_params=tparams)
+    elif draft == "zoo":
+        api, dparams = _drafter()
+        eng_kw = dict(draft_model=api, draft_params=dparams)
     eng, _ = _engine(arch, B=B, max_seq=max_seq, policy=policy,
-                     config=BestEffortConfig(level=level, **cfg_kw))
+                     config=BestEffortConfig(level=level, **cfg_kw),
+                     **eng_kw)
     head = mix if late_from is None else mix[:late_from]
     rids = [eng.submit(Request(prompt=list(p), max_new_tokens=n,
                                eos_id=(eos or {}).get(k)))
@@ -804,3 +828,152 @@ def test_stochastic_samplers_deterministic_per_seed():
     assert all(0 <= t < cfg.vocab for t in topk)
     with pytest.raises(ValueError, match="unknown sampler"):
         SamplerConfig(kind="beam")
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding (O7): pairing, gating, differential fuzz, properties
+# ---------------------------------------------------------------------------
+
+def test_compatible_drafter_resolves_and_validates():
+    """The (target, drafter) pairing resolves at the target's scale and
+    is vocab-checked: smoke cells share one token space, full-scale
+    smollm/qwen3 tokenizers do not — that pair must fail loudly naming
+    both vocab sizes, and unknown targets must name the known pairs."""
+    from repro.configs import get_config
+    from repro.models.model_zoo import DRAFTER_PAIRS, compatible_drafter
+
+    tgt = get_smoke("qwen3-8b")
+    d = compatible_drafter(tgt)                   # DRAFTER_PAIRS default
+    assert d.name == "smollm-360m" and d.vocab == tgt.vocab
+    assert compatible_drafter(tgt, "smollm-360m") == d   # explicit name
+    assert compatible_drafter(tgt, d) == d        # ArchConfig passthrough
+
+    # full scale: the real tokenizers diverge -> ValueError, both sizes
+    full_t, full_d = get_config("qwen3-8b"), get_config("smollm-360m")
+    assert full_t.vocab != full_d.vocab
+    with pytest.raises(ValueError) as ei:
+        compatible_drafter("qwen3-8b")
+    assert str(full_t.vocab) in str(ei.value)
+    assert str(full_d.vocab) in str(ei.value)
+
+    # no pairing on file for this target -> actionable error
+    assert "rwkv6-3b" not in DRAFTER_PAIRS
+    with pytest.raises(ValueError, match="pairing"):
+        compatible_drafter(get_smoke("rwkv6-3b"))
+
+
+def test_spec_gating_degrades_never_fails():
+    """Every missing precondition — no drafter, K=0, a stochastic
+    sampler, a rung below O7, a model family without a verify step —
+    turns speculation OFF (recorded in ``spec_mode``) while the engine
+    keeps decoding the plain path."""
+    api, dparams = _drafter()
+    kw = dict(B=2, max_seq=24)
+
+    on, _ = _engine(config=BestEffortConfig(level=OptLevel.O7),
+                    draft_model=api, draft_params=dparams, **kw)
+    assert on.spec_mode == "draft"
+
+    cases = {
+        "no drafter": _engine(
+            config=BestEffortConfig(level=OptLevel.O7), **kw)[0],
+        "draft_k=0": _engine(
+            config=BestEffortConfig(level=OptLevel.O7, draft_k=0),
+            draft_model=api, draft_params=dparams, **kw)[0],
+        "stochastic": _engine(
+            config=BestEffortConfig(level=OptLevel.O7),
+            sampler=SamplerConfig(kind="temperature", temperature=1.3),
+            draft_model=api, draft_params=dparams, **kw)[0],
+        "below rung": _engine(
+            config=BestEffortConfig(level=OptLevel.O5),
+            draft_model=api, draft_params=dparams, **kw)[0],
+        "no verify step": _engine(
+            "rwkv6-3b",
+            config=BestEffortConfig(level=OptLevel.O7,
+                                    draft_model="smollm-360m"), **kw)[0],
+    }
+    for why, eng in cases.items():
+        assert eng.spec_mode == "off", why
+        assert eng.spec_stats["draft_k"] == 0, why
+        eng.submit(Request(prompt=[5, 6, 7], max_new_tokens=4))
+        assert len(eng.run()[0].generated) == 4, why
+    # off-engines decode exactly what the spec engine decodes (greedy)
+    on.submit(Request(prompt=[5, 6, 7], max_new_tokens=4))
+    assert on.run()[0].generated == cases["no drafter"].finished[0].generated
+
+
+@pytest.mark.parametrize("seed,policy,k", [(31, "fcfs", 2), (32, "spf", 4),
+                                           (33, "fcfs", 8)])
+def test_differential_fuzz_speculative(seed, policy, k):
+    """O7 draft/verify is bit-identical to the O5 reference on random
+    request mixes — mid-flight arrivals, planted eos stops that land
+    inside speculation windows, a pool small enough to queue admissions,
+    both drafters (near-zero and full acceptance), and both paged
+    attention steps.  Greedy rejection accepts exactly the target's
+    argmax prefix, so ANY wrong acceptance would change tokens here."""
+    cfg, _, _ = _model()
+    mix = _random_mix(seed, cfg.vocab)
+    ref = _run_mix(mix, OptLevel.O5, policy=policy)
+    eos = {j: g[len(g) // 2] for j, g in enumerate(ref) if j % 2 == 0
+           and len(g) > 1}
+    ref = _run_mix(mix, OptLevel.O5, policy=policy, eos=eos, late_from=5)
+    pool = dict(kv_block_size=4, kv_pool_blocks=14)
+    for draft in ("zoo", "self"):
+        spec = _run_mix(mix, OptLevel.O7, policy=policy, eos=eos,
+                        late_from=5, draft=draft, draft_k=k, **pool)
+        assert spec == ref, f"spec/{draft} diverged (seed={seed}, K={k})"
+    kernel = _run_mix(mix, OptLevel.O7, policy=policy, eos=eos,
+                      late_from=5, draft="self", draft_k=k,
+                      paged_attn="kernel", **pool)
+    assert kernel == ref, f"spec/kernel diverged (seed={seed}, K={k})"
+    if seed == 31:
+        # K=0 degeneracy: the O7 engine with speculation disabled IS O6
+        off = _run_mix(mix, OptLevel.O7, policy=policy, eos=eos,
+                       late_from=5, draft="zoo", draft_k=0, **pool)
+        assert off == ref
+
+
+def test_spec_self_draft_hits_the_acceptance_ceiling():
+    """The target drafting for itself proposes exactly its own argmax,
+    so greedy rejection accepts every window in full: accept_rate pins
+    at 1.0 (the mechanism's ceiling) and each verify window emits more
+    than one token.  Together with the zoo drafter's near-zero
+    acceptance below, this pins BOTH directions of the rejection rule —
+    never reject a matching draft, never accept a mismatched one (the
+    fuzz above catches the latter as a token divergence)."""
+    _, model, params = _model()
+    eng, _ = _engine(B=2, max_seq=32,
+                     config=BestEffortConfig(level=OptLevel.O7, draft_k=4),
+                     draft_model=model, draft_params=params)
+    for p, n in _WORKLOAD[:4]:
+        eng.submit(Request(prompt=list(p), max_new_tokens=n))
+    eng.run()
+    st = eng.spec_stats
+    assert st["spec_mode"] == "draft" and st["draft_k"] == 4
+    assert st["drafted"] > 0 and st["accept_rate"] == 1.0
+    assert st["eff_tok_per_step"] > 1.0
+
+
+def test_spec_counters_consistent_and_blocks_conserved():
+    """Under the rejecting zoo drafter: counters stay coherent
+    (accepted <= drafted, >= one emitted token per verify window) and
+    the paged block pool conserves after EVERY tick — rejected drafts
+    roll the cache back but must never leak or double-free a block —
+    with all blocks returned once the workload drains."""
+    api, dparams = _drafter()
+    eng, cfg = _engine(B=3, max_seq=32,
+                       config=BestEffortConfig(level=OptLevel.O7,
+                                               draft_k=4, kv_block_size=4,
+                                               kv_pool_blocks=14),
+                       draft_model=api, draft_params=dparams)
+    assert eng.spec_mode == "draft"
+    for p, n in _random_mix(41, cfg.vocab):
+        eng.submit(Request(prompt=list(p), max_new_tokens=n))
+    while eng.step() or eng.queue:
+        eng.cache_mgr.check_conservation()
+    st = eng.spec_stats
+    assert 0.0 <= st["accept_rate"] <= 1.0
+    assert st["accepted"] <= st["drafted"]
+    assert st["emitted"] >= eng.spec_windows >= 1
+    eng.cache_mgr.check_conservation()
+    assert all(h == 0 for h in eng.cache_mgr.held_blocks)
