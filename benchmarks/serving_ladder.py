@@ -663,13 +663,31 @@ def write_trajectory(rows, arch: str, out_dir: str = None) -> str:
     return path
 
 
+def _preserved_traffic_section(path: str) -> str:
+    """The open-loop traffic harness (`benchmarks/traffic_harness.py`)
+    owns a marker-delimited section of this file; a ladder rewrite must
+    carry it over, not clobber it."""
+    from benchmarks.traffic_harness import TRAFFIC_BEGIN, TRAFFIC_END
+    if not os.path.exists(path):
+        return ""
+    text = open(path).read()
+    if TRAFFIC_BEGIN not in text or TRAFFIC_END not in text:
+        return ""
+    return (TRAFFIC_BEGIN
+            + text.split(TRAFFIC_BEGIN, 1)[1].split(TRAFFIC_END, 1)[0]
+            + TRAFFIC_END)
+
+
 def main(arch: str = "qwen3-8b", write_md: bool = True, **kw):
     t0 = time.time()
     rows = measure_ladder(arch, **kw)
     capacity = capacity_demo(arch)
     if write_md:
+        traffic = _preserved_traffic_section(MD_PATH)
         with open(MD_PATH, "w") as f:
             f.write(render_md(rows, arch, capacity) + "\n")
+            if traffic:
+                f.write("\n" + traffic + "\n")
         write_trajectory(rows, arch)
     out = [(f"serving_ladder_{r['label']}", r["wall_s"] * 1e6,
             f"{r['tok_per_s']:.0f}tok/s {r['speedup_vs_o0']:.2f}x "

@@ -73,7 +73,22 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"))
+    ap.add_argument("--policy", default="fcfs",
+                    choices=("fcfs", "spf", "deadline"))
+    ap.add_argument("--traffic-rate", type=float, default=0.0,
+                    help="autotune against OPEN-LOOP traffic at this "
+                         "arrival rate (req/s) instead of a fixed batch: "
+                         "each level replays a Poisson/bursty trace "
+                         "through the async front end and the objective "
+                         "becomes goodput under the latency SLOs "
+                         "(0 = classic closed-loop drain wall)")
+    ap.add_argument("--traffic-pattern", default="poisson",
+                    choices=("poisson", "bursty"))
+    ap.add_argument("--ttft-slo-ms", type=float, default=500.0,
+                    help="traffic-mode TTFT SLO (milliseconds)")
+    ap.add_argument("--tpot-slo-ms", type=float, default=100.0,
+                    help="traffic-mode per-token latency SLO "
+                         "(milliseconds)")
     ap.add_argument("--kv-block", type=int, default=16,
                     help="O6 paged-cache block size in tokens")
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
@@ -110,7 +125,10 @@ def main(argv=None) -> int:
             kv_block_size=args.kv_block,
             kv_pool_blocks=args.kv_pool_blocks,
             paged_attn=args.paged_attn, draft_model=args.draft_model,
-            draft_k=args.draft_k)
+            draft_k=args.draft_k, traffic_rate=args.traffic_rate,
+            traffic_pattern=args.traffic_pattern,
+            ttft_slo_s=args.ttft_slo_ms / 1e3,
+            tpot_slo_s=args.tpot_slo_ms / 1e3)
         result = _run_one(backend, args, ladder=True)
         levels = [r.measurement.meta for r in result.rounds]
         gens = [m["generated"] for m in levels]
@@ -121,6 +139,16 @@ def main(argv=None) -> int:
         cells = {m["level"]: f"{m.get('layout')}x{m.get('devices')}dev"
                  for m in levels}
         print(f"layout x placement per level: {cells}")
+        for m in levels:
+            if m.get("traffic"):
+                t = m["traffic"]
+                print(f"O{m['level']} traffic @{t['rate_rps']:g}/s "
+                      f"({t['pattern']}): goodput {t['goodput_rps']:.2f}/s "
+                      f"({t['goodput_frac'] * 100:.0f}%), ttft p50/p99 "
+                      f"{t['ttft_p50_s'] * 1e3:.0f}/"
+                      f"{t['ttft_p99_s'] * 1e3:.0f}ms, tpot p50/p99 "
+                      f"{t['tpot_p50_s'] * 1e3:.1f}/"
+                      f"{t['tpot_p99_s'] * 1e3:.1f}ms")
         for m in levels:
             if m.get("paged_attn_walls"):
                 walls = {k: f"{v:.4f}s"

@@ -92,7 +92,12 @@ def main():
                     help="OptLevel to build the engine at (0=naive, "
                          "6=paged KV blocks, 7=speculative decoding — "
                          "needs --draft)")
-    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "spf"))
+    ap.add_argument("--policy", default="fcfs",
+                    choices=("fcfs", "spf", "deadline"),
+                    help="admission policy: fcfs, spf (shortest-prompt-"
+                         "first with aging), or deadline (EDF on "
+                         "Request.deadline_s — the open-loop traffic "
+                         "front end's SLO policy)")
     ap.add_argument("--sampler", default="greedy",
                     choices=("greedy", "temperature", "top_k"))
     ap.add_argument("--temperature", type=float, default=1.0)

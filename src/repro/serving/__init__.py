@@ -14,7 +14,8 @@ decode step — including the block-axis-sharded paged pool (O3 x O6).
 """
 
 from repro.serving.cache import CacheManager            # noqa: F401
-from repro.serving.engine import DecodeEngine, PrefillResult  # noqa: F401
+from repro.serving.engine import (                       # noqa: F401
+    DecodeEngine, PrefillResult, TickBudgetExceeded)
 from repro.serving.layout import (                       # noqa: F401
     ContiguousLayout, KVLayout, PagedLayout, select_layout)
 from repro.serving.overlap import HostOverlap, TickBuffers  # noqa: F401

@@ -108,6 +108,20 @@ from repro.serving.sampler import SamplerConfig
 from repro.serving.scheduler import Request, Scheduler
 
 
+class TickBudgetExceeded(RuntimeError):
+    """``DecodeEngine.run`` exhausted ``max_ticks`` with work still
+    queued or in flight.  Every surviving request has been marked
+    ``truncated`` (its partial ``generated`` list is intact); the
+    engine's slots and queue are untouched, so a caller that expected a
+    long drain can catch this and keep ticking.  The silent alternative
+    — returning only ``finished`` — let a permanently-gated queue spin
+    the whole budget and then LOOK like a clean drain."""
+
+    def __init__(self, msg: str, survivors: list):
+        super().__init__(msg)
+        self.survivors = survivors
+
+
 @dataclasses.dataclass
 class PrefillResult:
     """Output of the standalone PREFILL phase — everything INSERT needs:
@@ -211,6 +225,10 @@ class DecodeEngine:
         self._verify_fn = None
         self.spec_drafted = self.spec_accepted = 0
         self.spec_emitted = self.spec_ticks = self.spec_windows = 0
+        # Window baseline for spec_stats_window: counter values at the
+        # last snapshot reset (long-running servers need per-interval
+        # acceptance, not lifetime averages that drift stale).
+        self._spec_window_base = (0, 0, 0, 0, 0)
         self._dstate = [(-1, 0)] * batch_size   # per-slot (rid, drafter pos)
         spec_wanted = (self.level.has(Step.SPECULATIVE)
                        and (draft_model is not None
@@ -273,6 +291,31 @@ class DecodeEngine:
             "emitted": self.spec_emitted,
             "eff_tok_per_step": (self.spec_emitted / windows) if windows
             else 0.0,
+        }
+
+    def spec_stats_window(self, *, reset: bool = True) -> dict:
+        """Speculation counters over the window SINCE the last reset —
+        the per-measurement-interval view a long-running server needs
+        (the lifetime ``spec_stats`` averages drift stale as traffic
+        shifts).  Same shape as ``spec_stats``; ``reset=True`` (the
+        default) starts the next window at the current counters, so
+        back-to-back calls bracket disjoint intervals.  The lifetime
+        counters themselves are never rewound."""
+        base = self._spec_window_base
+        cur = (self.spec_drafted, self.spec_accepted, self.spec_emitted,
+               self.spec_ticks, self.spec_windows)
+        drafted, accepted, emitted, _ticks, windows = (
+            c - b for c, b in zip(cur, base))
+        if reset:
+            self._spec_window_base = cur
+        return {
+            "spec_mode": self.spec_mode,
+            "draft_k": self._draft_k if self._spec else 0,
+            "drafted": drafted,
+            "accepted": accepted,
+            "accept_rate": (accepted / drafted) if drafted else 0.0,
+            "emitted": emitted,
+            "eff_tok_per_step": (emitted / windows) if windows else 0.0,
         }
 
     @property
@@ -371,6 +414,12 @@ class DecodeEngine:
             if not free:
                 raise ValueError("no free slot to insert into")
             slot = free[0]
+        if sched.submit_gate is not None:
+            reason = sched.submit_gate(req)
+            if reason:
+                # Never-fits: distinct from the transient gate below —
+                # no retirement will ever make room for this one.
+                raise ValueError(f"req {req.rid}: {reason}")
         if (sched.admission_gate is not None
                 and not sched.admission_gate(req)):
             raise ValueError(
@@ -771,8 +820,29 @@ class DecodeEngine:
         return True
 
     def run(self, *, max_ticks: int = 10_000) -> list:
-        """Drain queue + slots; returns finished requests."""
+        """Drain queue + slots; returns finished requests.
+
+        Raises :class:`TickBudgetExceeded` when ``max_ticks`` expires
+        with requests still queued or mid-flight — each survivor is
+        marked ``truncated`` first, so the caller can distinguish
+        partial completions from real finishes.  (The old behavior
+        returned ``finished`` silently, leaving in-flight slots active
+        and queued requests unreported.)
+        """
         for _ in range(max_ticks):
             if not self.step() and not self.queue:
                 break
+        else:
+            sched = self.scheduler
+            if sched.has_work():
+                survivors = [s.req for s in sched.slots if s.active]
+                survivors += list(sched.queue)
+                for r in survivors:
+                    r.truncated = True
+                raise TickBudgetExceeded(
+                    f"run(max_ticks={max_ticks}) exhausted its tick "
+                    f"budget with {len(survivors)} request(s) unfinished "
+                    f"({sum(1 for s in sched.slots if s.active)} in "
+                    f"flight, {len(sched.queue)} queued); survivors "
+                    f"marked truncated", survivors)
         return self.finished

@@ -402,8 +402,11 @@ class PagedLayout(KVLayout):
         # The scheduler drives the block lifecycle: admission is gated
         # on free blocks (a request that fits max_seq but not the pool
         # queues), admit allocates the reservation, retire returns it
-        # before the next admission wave.
+        # before the next admission wave.  The submit gate rejects the
+        # one class of request no wave can ever admit — a reservation
+        # larger than the TOTAL pool — at the submission boundary.
         scheduler.admission_gate = manager.can_admit
+        scheduler.submit_gate = manager.infeasible_reason
         scheduler.on_admit = manager.admit_slot
         scheduler.on_retire = manager.release_slot
 

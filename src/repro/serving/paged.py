@@ -127,13 +127,16 @@ class PagedAllocator:
         self.block_size = block_size
         self.blocks_per_seq = blocks_for(max_seq, block_size)
         # 0 = auto: equal worst-case capacity to the contiguous cache.
+        # A pool SMALLER than one worst-case (max_seq) reservation is a
+        # legitimate memory-saving config — real mixes rarely reserve the
+        # full horizon — but it means some statically-valid requests can
+        # NEVER be admitted; those are rejected per request at submit
+        # time (``infeasible_reason``, wired to ``Scheduler.submit_gate``)
+        # instead of being banned for the whole engine here.
         self.pool_blocks = pool_blocks or batch_size * self.blocks_per_seq
-        if self.pool_blocks < self.blocks_per_seq:
-            # Any submittable request (validated against max_seq) must be
-            # admittable once the pool drains, or it would queue forever.
+        if self.pool_blocks < 1:
             raise ValueError(
-                f"pool_blocks={self.pool_blocks} cannot hold one max_seq "
-                f"request ({self.blocks_per_seq} blocks of {block_size})")
+                f"pool_blocks must be >= 1 (got {self.pool_blocks})")
         self.allocator = BlockAllocator(self.pool_blocks, defrag=defrag)
         # tables[i, j] = physical block of slot i's logical block j
         self.tables = np.full((batch_size, self.blocks_per_seq),
@@ -154,6 +157,23 @@ class PagedAllocator:
         """The scheduler's admission gate: a request that fits max_seq but
         not the remaining free blocks queues (never raises)."""
         return self.blocks_needed(req) <= self.allocator.free_blocks
+
+    def infeasible_reason(self, req):
+        """The scheduler's SUBMIT gate: an error string when the
+        request's reservation exceeds the TOTAL pool — no sequence of
+        retirements can ever free enough blocks, so queuing it would
+        gate out every admission wave forever and ``run()`` would spin
+        its whole tick budget doing nothing.  None = feasible (it may
+        still have to queue for the CURRENT free count, which is
+        ``can_admit``'s job)."""
+        need = self.blocks_needed(req)
+        if need > self.pool_blocks:
+            return (f"reservation of {need} KV blocks "
+                    f"({self.reserved_tokens(req)} tokens at block size "
+                    f"{self.block_size}) can never fit the total pool of "
+                    f"{self.pool_blocks} blocks — shrink the request or "
+                    f"enlarge kv_pool_blocks")
+        return None
 
     def admit_slot(self, i: int, req) -> None:
         """Allocate the request's full reservation into slot ``i``'s

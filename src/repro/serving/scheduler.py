@@ -1,14 +1,21 @@
 """Admission + slot bookkeeping, split out of the decode engine.
 
 The scheduler owns the request queue, the fixed pool of B slots, and the
-per-slot position arithmetic.  Two admission policies:
+per-slot position arithmetic.  Three admission policies:
 
   * ``fcfs`` — first come, first served (the classic continuous-batching
     default; fair, latency-predictable).
-  * ``spf``  — shortest-prompt-first: admit the queued request with the
-    fewest prompt tokens, so short requests are not convoyed behind long
-    prefills (SJF applied to the prefill phase; throughput-friendly under
-    mixed lengths).
+  * ``spf``  — shortest-prompt-first WITH AGING: admit the queued request
+    with the fewest *effective* prompt tokens, where every admission wave
+    a request sits queued shaves one token off its effective length
+    (``effective_prompt_len``).  Short requests still jump long prefills
+    (SJF applied to the prefill phase), but a long prompt's priority
+    decays to the front in at most ``n_prompt`` waves — pure SPF starves
+    it FOREVER under sustained open-loop arrivals of short requests.
+  * ``deadline`` — earliest-deadline-first on ``Request.deadline_s``
+    (absolute ``time.monotonic`` seconds); requests without a deadline
+    sort last, ties broken by arrival order.  The SLO-aware policy for
+    the open-loop traffic front end (``launch/server.py``).
 
 Request validation happens at ``submit`` time, not mid-flight: an
 oversized request raises ``ValueError`` immediately instead of asserting
@@ -35,9 +42,10 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import time
 from typing import Optional
 
-POLICIES = ("fcfs", "spf")
+POLICIES = ("fcfs", "spf", "deadline")
 
 
 @dataclasses.dataclass
@@ -46,13 +54,46 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     rid: int = -1
+    # SLO inputs (open-loop traffic): absolute completion deadline on the
+    # ``time.monotonic`` clock, consumed by the "deadline" policy.
+    deadline_s: Optional[float] = None
     # filled by the engine:
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # True when the engine's tick budget expired with this request still
+    # queued or mid-flight (``DecodeEngine.run``): the completion is
+    # partial, NOT a normal finish.
+    truncated: bool = False
+    # Lifecycle timestamps (``time.monotonic`` seconds), threaded through
+    # for TTFT / per-token latency measurement under open-loop traffic:
+    arrival_s: Optional[float] = None       # stamped at submit()/place()
+    first_token_s: Optional[float] = None   # first generated token lands
+    finish_s: Optional[float] = None        # retirement
+    # Admission wave at which the request joined the queue — the aging
+    # clock for the spf policy (waves, not wall seconds: deterministic).
+    queued_wave: int = 0
 
     @property
     def n_prompt(self):
         return len(self.prompt)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token, when both stamps exist."""
+        if self.arrival_s is None or self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean per-token latency AFTER the first token (time-per-output-
+        token) — None until finished or with fewer than two tokens."""
+        if self.first_token_s is None or self.finish_s is None:
+            return None
+        if len(self.generated) < 2:
+            return None
+        return ((self.finish_s - self.first_token_s)
+                / (len(self.generated) - 1))
 
 
 @dataclasses.dataclass
@@ -91,14 +132,27 @@ class Scheduler:
         self.queue: collections.deque = collections.deque()
         self.finished: list = []
         self._rid = itertools.count()
+        # Admission-wave counter: bumped once per admit() call.  The spf
+        # aging clock — a queued request's effective prompt length decays
+        # by (wave - queued_wave), so nothing starves.
+        self._wave = 0
         # Cache-layer hooks (wired by the engine for the paged path):
         self.admission_gate = None     # (req) -> bool: may admit now?
         self.on_admit = None           # (slot_index, req): slot occupied
         self.on_retire = None          # (slot_index, req): slot freed
+        # Feasibility hook, consulted at SUBMIT time: (req) -> error
+        # string, or None when some future pool state can admit the
+        # request.  The paged layout wires it to the allocator's
+        # whole-pool check — a reservation larger than the TOTAL pool
+        # would pass the static max_seq validation yet be gated out every
+        # wave, so run() would spin all max_ticks doing nothing.
+        self.submit_gate = None
 
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request) -> int:
         req.rid = next(self._rid)
+        if req.arrival_s is None:
+            req.arrival_s = time.monotonic()
         if req.n_prompt < 1:
             raise ValueError(f"req {req.rid}: empty prompt")
         if req.n_prompt + max(req.max_new_tokens, 0) > self.max_seq:
@@ -106,22 +160,48 @@ class Scheduler:
                 f"req {req.rid}: prompt ({req.n_prompt}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds engine max_seq "
                 f"({self.max_seq})")
+        if self.submit_gate is not None:
+            reason = self.submit_gate(req)
+            if reason:
+                # Infeasible under ANY pool state (not just the current
+                # one): admitting it is impossible, so queuing it would
+                # gate out every future admission wave — reject loudly
+                # at the submission boundary instead.
+                raise ValueError(f"req {req.rid}: {reason}")
         if req.max_new_tokens <= 0:
             # Degenerate request: nothing to generate.  Retire immediately
             # with an empty completion instead of occupying a slot (the old
             # engine admitted it and could pin the slot forever when the
             # prompt ended at the max_seq boundary).
             req.done = True
+            req.finish_s = time.monotonic()
             self.finished.append(req)
             return req.rid
+        req.queued_wave = self._wave
         self.queue.append(req)
         return req.rid
+
+    def effective_prompt_len(self, req: Request) -> int:
+        """The spf admission key: prompt length minus the aging credit
+        (one token per admission wave spent queued, floored at 0).  A
+        long prompt's effective length reaches 0 after at most
+        ``n_prompt`` waves, so sustained short-request arrivals can only
+        delay it a bounded number of admissions — the starvation fix."""
+        return max(0, req.n_prompt - (self._wave - req.queued_wave))
 
     def _next_index(self) -> int:
         """Queue index of the request the policy would admit next."""
         if self.policy == "spf":
             return min(range(len(self.queue)),
-                       key=lambda i: self.queue[i].n_prompt)
+                       key=lambda i: (self.effective_prompt_len(
+                           self.queue[i]), self.queue[i].rid))
+        if self.policy == "deadline":
+            inf = float("inf")
+            return min(range(len(self.queue)),
+                       key=lambda i: (
+                           self.queue[i].deadline_s
+                           if self.queue[i].deadline_s is not None else inf,
+                           self.queue[i].rid))
         return 0
 
     def _pop(self, at: int) -> Request:
@@ -139,6 +219,7 @@ class Scheduler:
         blocks for its reservation) stays queued and stops this wave —
         admitting someone behind it would reorder arrivals.
         """
+        self._wave += 1
         admitted = []
         for i, slot in enumerate(self.slots):
             if slot.active or not self.queue:
@@ -187,6 +268,8 @@ class Scheduler:
             raise ValueError(f"slot {i} is occupied")
         if req.rid < 0:
             req.rid = next(self._rid)
+        if req.arrival_s is None:
+            req.arrival_s = time.monotonic()
         self.slots[i] = Slot(req=req, pos=req.n_prompt - 1)
         if self.on_admit is not None:
             self.on_admit(i, req)
@@ -202,6 +285,12 @@ class Scheduler:
             return sorted(pending, key=lambda i: (
                 self.slots[i].req.n_prompt - self.slots[i].pos,
                 self.slots[i].req.rid))
+        if self.policy == "deadline":
+            inf = float("inf")
+            return sorted(pending, key=lambda i: (
+                self.slots[i].req.deadline_s
+                if self.slots[i].req.deadline_s is not None else inf,
+                self.slots[i].req.rid))
         return sorted(pending, key=lambda i: self.slots[i].req.rid)
 
     def advance(self, i: int, token: int):
@@ -216,10 +305,13 @@ class Scheduler:
             return None
         r = s.req
         r.generated.append(int(token))
+        if r.first_token_s is None:
+            r.first_token_s = time.monotonic()
         hit_eos = r.eos_id is not None and int(token) == r.eos_id
         if (len(r.generated) >= r.max_new_tokens or hit_eos
                 or s.pos + 1 >= self.max_seq):
             r.done = True
+            r.finish_s = time.monotonic()
             self.finished.append(r)
             self.slots[i] = Slot()
             if self.on_retire is not None:
@@ -299,9 +391,12 @@ class Scheduler:
                 continue
             tok = int(toks[i])
             r.generated.append(tok)
+            if r.first_token_s is None:
+                r.first_token_s = time.monotonic()
             hit_eos = r.eos_id is not None and tok == r.eos_id
             if planned or hit_eos:
                 r.done = True
+                r.finish_s = time.monotonic()
                 self.finished.append(r)
                 if not planned and self.slots[i].req is r:
                     self.slots[i] = Slot()

@@ -1,0 +1,297 @@
+"""Async traffic front end (launch/server.py): open-loop trace
+generation, replay through :class:`AsyncServer`, streaming token
+delivery, and the latency/goodput metric vocabulary — plus the core
+contract that the async path's greedy tokens are BIT-IDENTICAL to the
+synchronous ``submit()``/``run()`` path for the same admission order."""
+
+import asyncio
+
+import numpy as np
+
+import jax
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.optlevel import BestEffortConfig, OptLevel
+from repro.models import get_model
+from repro.serving import DecodeEngine, Request
+from repro.launch.server import (AsyncServer, TokenEvent, latency_metrics,
+                                 make_trace, replay_trace, serve_trace)
+
+RNG = jax.random.PRNGKey(0)
+
+_MODELS = {}
+
+
+def _model(arch="qwen3-8b"):
+    if arch not in _MODELS:
+        cfg = get_smoke(arch)
+        model = get_model(cfg)
+        _MODELS[arch] = (cfg, model, model.init(RNG))
+    return _MODELS[arch]
+
+
+def _engine(arch="qwen3-8b", B=3, max_seq=32, **kw):
+    cfg, model, params = _model(arch)
+    return DecodeEngine(model, params, batch_size=B, max_seq=max_seq,
+                        **kw), cfg
+
+
+# ---------------------------------------------------------------------------
+# Traces (no model needed).
+# ---------------------------------------------------------------------------
+
+def test_trace_deterministic_per_seed():
+    a = make_trace(n_requests=20, rate=10.0, seed=3)
+    b = make_trace(n_requests=20, rate=10.0, seed=3)
+    c = make_trace(n_requests=20, rate=10.0, seed=4)
+    assert [(t.at_s, t.prompt, t.max_new_tokens) for t in a] \
+        == [(t.at_s, t.prompt, t.max_new_tokens) for t in b]
+    assert [t.prompt for t in a] != [t.prompt for t in c]
+
+
+@pytest.mark.parametrize("pattern", ["poisson", "bursty"])
+def test_trace_mean_rate_matches_target(pattern):
+    rate = 25.0
+    trace = make_trace(n_requests=400, rate=rate, seed=0, pattern=pattern)
+    assert all(t.at_s > 0 for t in trace)
+    assert all(b.at_s >= a.at_s for a, b in zip(trace, trace[1:]))
+    measured = len(trace) / trace[-1].at_s
+    assert 0.5 * rate < measured < 2.0 * rate, \
+        f"{pattern} offered rate {measured:.1f}/s vs target {rate}/s"
+
+
+def test_bursty_trace_actually_clumps():
+    """The bursty pattern clumps: most gaps are short intra-burst spacing
+    with rare long idles, so the median gap sits far below the mean —
+    unlike poisson, where median/mean = ln 2.  That skew is its entire
+    point (a burst of shorts convoying a long)."""
+    kw = dict(n_requests=300, rate=10.0, seed=1)
+    gaps = lambda tr: np.diff([0.0] + [t.at_s for t in tr])
+    pois = gaps(make_trace(pattern="poisson", **kw))
+    burs = gaps(make_trace(pattern="bursty", **kw))
+    assert np.median(burs) / burs.mean() \
+        < 0.7 * np.median(pois) / pois.mean()
+
+
+def test_trace_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="pattern"):
+        make_trace(n_requests=4, rate=1.0, pattern="carrier-pigeon")
+    with pytest.raises(ValueError, match="rate"):
+        make_trace(n_requests=4, rate=0.0)
+
+
+def test_trace_deadline_slack_attached():
+    trace = make_trace(n_requests=5, rate=10.0, deadline_slack_s=2.5)
+    assert all(t.deadline_s == 2.5 for t in trace)
+
+
+# ---------------------------------------------------------------------------
+# Metrics (synthetic Request records; no model needed).
+# ---------------------------------------------------------------------------
+
+def _rec(*, arrival=0.0, first=0.1, finish=0.5, n_gen=5, truncated=False,
+         deadline=None):
+    r = Request(prompt=[1], max_new_tokens=n_gen, deadline_s=deadline)
+    r.generated = list(range(n_gen))
+    r.arrival_s, r.first_token_s, r.finish_s = arrival, first, finish
+    r.truncated = truncated
+    r.done = True
+    return r
+
+
+def test_latency_metrics_percentiles_and_goodput():
+    fin = [
+        _rec(arrival=0.0, first=0.1, finish=0.5, n_gen=5),    # good
+        _rec(arrival=0.0, first=0.9, finish=1.0, n_gen=2),    # ttft miss
+        _rec(arrival=0.0, first=0.1, finish=9.0, n_gen=5),    # tpot miss
+        _rec(arrival=0.0, first=0.1, finish=0.2, n_gen=5,
+             truncated=True),                                 # truncated
+    ]
+    m = latency_metrics(fin, makespan_s=2.0, ttft_slo_s=0.5, tpot_slo_s=0.2)
+    assert m["requests"] == 4 and m["tokens"] == 17
+    assert m["good_requests"] == 1
+    assert m["goodput_rps"] == pytest.approx(0.5)
+    assert m["goodput_frac"] == pytest.approx(0.25)
+    assert m["ttft_p50_s"] == pytest.approx(0.1)
+    assert m["ttft_p99_s"] <= 0.9 + 1e-9
+    # tpot for the good record: (0.5 - 0.1) / 4 = 0.1
+    assert m["tpot_p50_s"] == pytest.approx(0.1, abs=0.15)
+    assert m["throughput_rps"] == pytest.approx(2.0)
+
+
+def test_latency_metrics_deadline_miss_not_good():
+    ok = _rec(arrival=0.0, first=0.1, finish=0.4, n_gen=3, deadline=1.0)
+    late = _rec(arrival=0.0, first=0.1, finish=5.0, n_gen=3, deadline=1.0)
+    late.finish_s = 5.0
+    m = latency_metrics([ok, late], makespan_s=1.0, tpot_slo_s=10.0)
+    assert m["good_requests"] == 1
+
+
+def test_latency_metrics_empty():
+    m = latency_metrics([], makespan_s=1.0)
+    assert m["requests"] == 0 and m["goodput_frac"] == 0.0
+    assert m["ttft_p50_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# AsyncServer integration (tiny smoke model; fast tier).
+# ---------------------------------------------------------------------------
+
+def _sync_tokens(prompts_and_lens, *, arch="qwen3-8b", B=3, max_seq=32,
+                 **kw):
+    """Reference completion via the synchronous submit()/run() path."""
+    eng, _ = _engine(arch, B=B, max_seq=max_seq, **kw)
+    for prompt, n in prompts_and_lens:
+        eng.submit(Request(prompt=list(prompt), max_new_tokens=n))
+    fin = eng.run()
+    return {tuple(r.prompt): r.generated for r in fin}
+
+
+def test_async_server_tokens_bit_identical_to_sync():
+    jobs = [([5, 6, 7], 6), ([9, 3], 4), ([2, 2, 2, 2], 5), ([11], 3),
+            ([4, 8], 7)]
+    want = _sync_tokens(jobs)
+
+    async def _run():
+        eng, _ = _engine()
+        async with AsyncServer(eng) as server:
+            handles = [server.submit(p, max_new_tokens=n) for p, n in jobs]
+            done = await asyncio.gather(*(h.done for h in handles))
+        return {tuple(r.prompt): r.generated for r in done}
+
+    got = asyncio.run(_run())
+    assert got == want
+
+
+def test_async_server_streams_every_token_in_order():
+    async def _run():
+        eng, _ = _engine(B=2)
+        events = []
+        async with AsyncServer(eng) as server:
+            h1 = server.submit([5, 6, 7], max_new_tokens=5,
+                               on_token=events.append)
+            h2 = server.submit([9, 3], max_new_tokens=4)
+            streamed = [ev async for ev in h2.tokens()]
+            r1, r2 = await h1.done, await h2.done
+        return h1, h2, events, streamed, r1, r2
+
+    h1, h2, events, streamed, r1, r2 = asyncio.run(_run())
+    assert all(isinstance(ev, TokenEvent) for ev in events)
+    # callback saw exactly h1's completion, in emission order
+    assert [ev.token for ev in events] == r1.generated
+    assert [ev.index for ev in events] == list(range(len(r1.generated)))
+    assert all(ev.rid == h1.rid for ev in events)
+    # async-iterated stream saw exactly h2's completion
+    assert [ev.token for ev in streamed] == r2.generated
+    assert len(r1.generated) == 5 and len(r2.generated) == 4
+
+
+def test_async_server_concurrent_staggered_submits():
+    """Arrivals landing WHILE the engine ticks still finish, and still
+    match the sync reference for the same admission order."""
+    jobs = [([5, 6, 7], 4), ([9, 3], 3), ([1, 2, 3, 4], 5), ([7], 3)]
+    want = _sync_tokens(jobs, B=2)
+
+    async def _run():
+        eng, _ = _engine(B=2)
+        async with AsyncServer(eng) as server:
+            handles = []
+            for p, n in jobs:
+                handles.append(server.submit(p, max_new_tokens=n))
+                # let the tick loop interleave between arrivals
+                for _ in range(3):
+                    await asyncio.sleep(0)
+            done = await asyncio.gather(*(h.done for h in handles))
+        return {tuple(r.prompt): r.generated for r in done}
+
+    got = asyncio.run(_run())
+    assert got == want
+
+
+def test_async_server_degenerate_request_resolves_immediately():
+    async def _run():
+        eng, _ = _engine()
+        async with AsyncServer(eng) as server:
+            h = server.submit([1, 2], max_new_tokens=0)
+            req = await h.done
+            evs = [ev async for ev in h.tokens()]
+        return req, evs
+
+    req, evs = asyncio.run(_run())
+    assert req.done and req.generated == [] and evs == []
+
+
+def test_async_server_rejects_oversized_like_sync():
+    async def _run():
+        eng, _ = _engine(max_seq=16)
+        async with AsyncServer(eng) as server:
+            with pytest.raises(ValueError, match="max_seq"):
+                server.submit([1] * 10, max_new_tokens=10)
+            h = server.submit([1, 2], max_new_tokens=2)
+            await h.done
+
+    asyncio.run(_run())
+
+
+def test_async_server_stop_fails_outstanding_futures():
+    async def _run():
+        eng, _ = _engine()
+        server = await AsyncServer(eng, max_ticks=1).start()
+        h = server.submit([5, 6, 7], max_new_tokens=8)
+        with pytest.raises(RuntimeError, match="tick budget"):
+            await h.done
+        await server.stop()
+        return h.request
+
+    req = asyncio.run(_run())
+    assert req.truncated
+
+
+def test_serve_trace_end_to_end_metrics():
+    eng, cfg = _engine(B=2)
+    trace = make_trace(n_requests=6, rate=50.0, seed=0, vocab=cfg.vocab,
+                       prompt_len=(2, 6), max_new=(2, 5))
+    out = serve_trace(eng, trace, time_scale=0.0)   # fire ASAP
+    assert len(out["finished"]) == 6
+    assert out["ticks"] > 0
+    m = latency_metrics(out["finished"], makespan_s=out["makespan_s"],
+                        ttft_slo_s=60.0, tpot_slo_s=60.0)
+    assert m["requests"] == 6
+    assert m["good_requests"] == 6          # SLOs are generous
+    assert m["tok_per_s"] > 0
+    assert m["ttft_p50_s"] >= 0 and m["tpot_p50_s"] >= 0
+
+
+def test_serve_trace_paged_engine_bit_identical():
+    """The front end composes with the O6 paged engine, and its tokens
+    still match the sync reference."""
+    trace = make_trace(n_requests=5, rate=100.0, seed=2, vocab=64,
+                       prompt_len=(2, 6), max_new=(2, 5))
+    kw = dict(config=BestEffortConfig(level=OptLevel.O6, kv_block_size=4))
+    jobs = [(t.prompt, t.max_new_tokens) for t in trace]
+    want = _sync_tokens(jobs, **kw)
+    eng, _ = _engine(**kw)
+    out = serve_trace(eng, trace, time_scale=0.0)
+    got = {tuple(r.prompt): r.generated for r in out["finished"]}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Nightly tier: the full traffic harness smoke (sweeps 3 rates, writes
+# JSONL + markdown section, validates the required fields).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_traffic_harness_smoke(tmp_path, monkeypatch):
+    import benchmarks.traffic_harness as th
+
+    monkeypatch.setattr(th, "OUT_DIR", str(tmp_path))
+    monkeypatch.setattr(th, "MD_PATH", str(tmp_path / "ladder.md"))
+    rows = th.main(["--arch", "qwen3-8b", "--rates", "5,20,80",
+                    "--requests", "6", "--batch", "2", "--max-seq", "32",
+                    "--no-md", "--smoke"])
+    assert len(rows) == 3
+    paths = list(tmp_path.glob("traffic__*.jsonl"))
+    assert paths, "harness wrote no JSONL"
+    th.check_jsonl(str(paths[0]))

@@ -674,11 +674,85 @@ def test_paged_compact_mid_flight_preserves_tokens():
     assert [fin[rid] for rid in rids] == ref
 
 
-def test_paged_rejects_pool_smaller_than_one_request():
-    with pytest.raises(ValueError, match="max_seq"):
-        _engine(B=2, max_seq=32,
-                config=BestEffortConfig(level=OptLevel.O6,
-                                        kv_block_size=4, kv_pool_blocks=7))
+def test_paged_pool_smaller_than_max_seq_rejects_at_submit():
+    """A pool smaller than one worst-case reservation is a legal
+    memory-saving config — the engine BUILDS — but a request whose
+    reservation can never fit the TOTAL pool is rejected at submit()
+    with a clear error instead of queueing forever (it would be gated
+    out every admission wave, so run() would spin its whole tick budget
+    doing nothing and then report success).  A short request through
+    the same engine still admits and drains."""
+    eng, _ = _engine(B=2, max_seq=32,
+                     config=BestEffortConfig(level=OptLevel.O6,
+                                             kv_block_size=4,
+                                             kv_pool_blocks=7))
+    # 28 tokens needs 7 blocks == the whole pool: feasible (barely)
+    ok = Request(prompt=[1] * 8, max_new_tokens=20)
+    # 32 tokens needs 8 blocks > 7 total: can NEVER be admitted
+    with pytest.raises(ValueError, match="never fit the total pool"):
+        eng.submit(Request(prompt=[2] * 12, max_new_tokens=20))
+    eng.submit(ok)
+    fin = eng.run()
+    assert len(fin) == 1 and len(fin[0].generated) == 20
+
+
+def test_run_raises_on_tick_budget_and_marks_survivors_truncated():
+    """Satellite regression: run(max_ticks) used to return `finished`
+    silently on tick exhaustion, leaving in-flight slots active and
+    queued requests unreported.  Now every survivor is marked truncated
+    and TickBudgetExceeded carries them; the engine state is intact, so
+    resuming with another run() finishes the drain."""
+    from repro.serving import TickBudgetExceeded
+
+    eng, _ = _engine(B=1, max_seq=32)
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=8))
+    eng.submit(Request(prompt=[3], max_new_tokens=4))      # stays queued
+    with pytest.raises(TickBudgetExceeded) as ei:
+        eng.run(max_ticks=3)
+    survivors = ei.value.survivors
+    assert len(survivors) == 2
+    assert all(r.truncated for r in survivors)
+    in_flight = next(r for r in survivors if r.generated)
+    assert 0 < len(in_flight.generated) < 8      # partial output intact
+    fin = eng.run()                              # resume: budget refreshed
+    assert len(fin) == 2 and all(r.done for r in fin)
+
+
+def test_run_exact_tick_budget_no_false_truncation():
+    """A drain that finishes exactly at the budget edge must NOT raise:
+    the exhaustion check looks at remaining work, not loop count."""
+    eng, _ = _engine(B=1, max_seq=32)
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=3))
+    ticks_needed = 2 + 3  # prompt + generated tokens, serial path
+    fin = eng.run(max_ticks=ticks_needed)
+    assert len(fin) == 1 and not fin[0].truncated
+
+
+def test_spec_stats_window_resets_between_snapshots():
+    """Satellite regression: lifetime spec counters drift stale on a
+    long-running server — the windowed snapshot isolates intervals."""
+    api, dparams = _drafter()
+    eng, _ = _engine(B=2, max_seq=32,
+                     config=BestEffortConfig(level=OptLevel.O7,
+                                             draft_model="smollm-360m",
+                                             draft_k=2),
+                     draft_model=api, draft_params=dparams)
+    assert eng.spec_mode == "draft"
+    eng.submit(Request(prompt=[5, 6], max_new_tokens=6))
+    eng.run()
+    w1 = eng.spec_stats_window(reset=True)
+    assert w1["drafted"] == eng.spec_stats["drafted"] > 0
+    # idle window: all-zero deltas, lifetime untouched
+    w2 = eng.spec_stats_window(reset=True)
+    assert w2["drafted"] == w2["emitted"] == 0
+    assert w2["accept_rate"] == 0.0
+    life_before = eng.spec_stats["drafted"]
+    eng.submit(Request(prompt=[7], max_new_tokens=6))
+    eng.run()
+    w3 = eng.spec_stats_window(reset=True)
+    assert w3["drafted"] == eng.spec_stats["drafted"] - life_before > 0
+    # lifetime view accumulates across both windows
+    assert eng.spec_stats["drafted"] == w1["drafted"] + w3["drafted"]
 
 
 # ---------------------------------------------------------------------------
