@@ -50,15 +50,23 @@ GRID = [
 H, KV, D = 4, 2, 32
 
 
-def build_cell(max_seq: int, block: int, batch: int, seed: int = 0):
+def build_cell(max_seq: int, block: int, batch: int, seed: int = 0,
+               kv_dtype: str = "bf16"):
     """Pool + tables + lengths with random prefix occupancy, plus the
-    per-variant jitted callables."""
+    per-variant jitted callables.  ``kv_dtype`` int8/fp8 stores the pool
+    quantized with per-block (x per-kv-head) absmax scales: the gather
+    variant dequantizes the gathered view (what
+    ``serving/paged.BlockPagingPlan.gather`` does), the kernel variant
+    passes the (rows, KV) scale operands and dequantizes each streamed
+    block in place."""
     import numpy as np
     import jax
     import jax.numpy as jnp
 
     from repro.kernels.paged_attention.ops import paged_attention
+    from repro.serving import kvquant
 
+    quantized = kvquant.is_quantized(kv_dtype)
     rng = np.random.default_rng(seed)
     nb = -(-max_seq // block)
     rows = batch * nb + 1
@@ -75,12 +83,27 @@ def build_cell(max_seq: int, block: int, batch: int, seed: int = 0):
         [(rows, block, KV, D), (rows, block, KV, D), (batch, H, D)]))
     tables = jnp.asarray(tables)
     lengths = jnp.asarray(lengths, jnp.int32)
+    if quantized:
+        ks = kvquant.block_scale(kp, (1, 3), kv_dtype)   # (rows,1,KV,1)
+        vs = kvquant.block_scale(vp, (1, 3), kv_dtype)
+        kp = kvquant.quantize(kp, ks, kv_dtype)
+        vp = kvquant.quantize(vp, vs, kv_dtype)
+        ks, vs = ks[:, 0, :, 0], vs[:, 0, :, 0]          # (rows, KV)
+    else:
+        ks = vs = None
 
     @jax.jit
-    def gather_step(q, kp, vp, tables, lengths):
+    def gather_step(q, kp, vp, ks, vs, tables, lengths):
         flat = tables.reshape(-1)
-        dk = jnp.take(kp, flat, axis=0).reshape(batch, nb * block, KV, D)
-        dv = jnp.take(vp, flat, axis=0).reshape(batch, nb * block, KV, D)
+        dk = jnp.take(kp, flat, axis=0)
+        dv = jnp.take(vp, flat, axis=0)
+        if quantized:
+            sk = jnp.take(ks, flat, axis=0)[:, None, :, None]
+            sv = jnp.take(vs, flat, axis=0)[:, None, :, None]
+            dk = (dk.astype(jnp.float32) * sk).astype(q.dtype)
+            dv = (dv.astype(jnp.float32) * sv).astype(q.dtype)
+        dk = dk.reshape(batch, nb * block, KV, D)
+        dv = dv.reshape(batch, nb * block, KV, D)
         qg = q.reshape(batch, KV, H // KV, D)
         s = jnp.einsum("bkgd,bskd->bkgs", qg, dk) * (D ** -0.5)
         s = s.astype(jnp.float32)
@@ -92,50 +115,75 @@ def build_cell(max_seq: int, block: int, batch: int, seed: int = 0):
         return o.reshape(batch, H, D)
 
     @jax.jit
-    def kernel_step(q, kp, vp, tables, lengths):
-        return paged_attention(q, kp, vp, tables, lengths)
+    def kernel_step(q, kp, vp, ks, vs, tables, lengths):
+        return paged_attention(q, kp, vp, tables, lengths,
+                               k_scale=ks, v_scale=vs)
 
-    args = (q, kp, vp, tables, lengths)
-    token_bytes = 2 * KV * D * jnp.bfloat16.dtype.itemsize    # k + v
+    args = (q, kp, vp, ks, vs, tables, lengths)
+    itemsize = 1 if quantized else 2
+    tb_store = 2 * KV * D * itemsize                      # k + v, stored
+    tb_compute = 2 * KV * D * 2                           # dense bf16 view
+    sb = 2 * KV * 4 if quantized else 0                   # k + v scales/row
     blocks = int(sum(-(-int(x) // block) for x in lengths))
+    # gather: pool read (stored bytes + scales) + dense-view write and
+    # attention read (compute bytes); kernel: stream only referenced
+    # blocks (stored bytes + scales) + the appended token
+    gather_est = (batch * nb * (block * tb_store + sb)
+                  + 2 * batch * nb * block * tb_compute)
+    kernel_est = blocks * (block * tb_store + sb) + batch * tb_store
     return {
-        "gather": (gather_step, args,
-                   3 * batch * nb * block * token_bytes),
-        "kernel": (kernel_step, args,
-                   (blocks * block + batch) * token_bytes),
+        "gather": (gather_step, args, gather_est),
+        "kernel": (kernel_step, args, kernel_est),
     }
 
 
-def bench(rounds: int = 7, iters: int = 20) -> list:
+def bench(rounds: int = 7, iters: int = 20,
+          kv_dtypes=("bf16",)) -> list:
     import jax
 
     rows = []
     for max_seq, block, batch in GRID:
-        variants = build_cell(max_seq, block, batch)
-        # warmup: compile + first-run costs outside the timed region
-        for fn, args, _ in variants.values():
-            jax.block_until_ready(fn(*args))
-        samples = {v: [] for v in variants}
-        for _ in range(rounds):
-            for v, (fn, args, _) in variants.items():   # interleaved
-                t0 = time.perf_counter()
-                for _ in range(iters):
-                    out = fn(*args)
-                jax.block_until_ready(out)
-                samples[v].append((time.perf_counter() - t0) / iters)
-        for v, (fn, args, est) in variants.items():
-            floor = sum(sorted(samples[v])[:3]) / 3       # trimmed min
-            rows.append({
-                "max_seq": max_seq, "block_size": block, "batch": batch,
-                "heads": H, "kv_heads": KV, "head_dim": D,
-                "variant": v, "wall_us": floor * 1e6,
-                "kv_bytes_est": int(est),
-            })
+        for kvd in kv_dtypes:
+            variants = build_cell(max_seq, block, batch, kv_dtype=kvd)
+            # warmup: compile + first-run costs outside the timed region
+            for fn, args, _ in variants.values():
+                jax.block_until_ready(fn(*args))
+            samples = {v: [] for v in variants}
+            for _ in range(rounds):
+                for v, (fn, args, _) in variants.items():   # interleaved
+                    t0 = time.perf_counter()
+                    for _ in range(iters):
+                        out = fn(*args)
+                    jax.block_until_ready(out)
+                    samples[v].append((time.perf_counter() - t0) / iters)
+            for v, (fn, args, est) in variants.items():
+                floor = sum(sorted(samples[v])[:3]) / 3     # trimmed min
+                rows.append({
+                    "max_seq": max_seq, "block_size": block,
+                    "batch": batch,
+                    "heads": H, "kv_heads": KV, "head_dim": D,
+                    "variant": v, "kv_dtype": kvd,
+                    "wall_us": floor * 1e6,
+                    "kv_bytes_est": int(est),
+                })
     return rows
 
 
-def main():
-    rows = bench()
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv-dtype", default="bf16,int8",
+                    help="comma list of pool stored dtypes to sweep "
+                         "(bf16|int8|fp8); each cell x variant is "
+                         "measured per dtype and the JSONL rows carry "
+                         "kv_dtype + the dtype's bytes/tick estimate")
+    ap.add_argument("--rounds", type=int, default=7)
+    ap.add_argument("--iters", type=int, default=20)
+    args = ap.parse_args(argv)
+    dtypes = tuple(d.strip() for d in args.kv_dtype.split(",") if d.strip())
+
+    rows = bench(rounds=args.rounds, iters=args.iters, kv_dtypes=dtypes)
     os.makedirs(os.path.dirname(TRAJ), exist_ok=True)
     with open(TRAJ, "w") as f:
         for r in rows:
@@ -143,13 +191,13 @@ def main():
     by_cell = {}
     for r in rows:
         by_cell.setdefault(
-            (r["max_seq"], r["block_size"], r["batch"]), {})[
-                r["variant"]] = r
-    print("max_seq block batch | gather_us kernel_us speedup | "
+            (r["max_seq"], r["block_size"], r["batch"], r["kv_dtype"]),
+            {})[r["variant"]] = r
+    print("max_seq block batch kv_dtype | gather_us kernel_us speedup | "
           "gather_KB kernel_KB")
-    for (ms, bl, ba), cell in sorted(by_cell.items()):
+    for (ms, bl, ba, kvd), cell in sorted(by_cell.items()):
         g, k = cell["gather"], cell["kernel"]
-        print(f"{ms:7d} {bl:5d} {ba:5d} | {g['wall_us']:9.1f} "
+        print(f"{ms:7d} {bl:5d} {ba:5d} {kvd:>8s} | {g['wall_us']:9.1f} "
               f"{k['wall_us']:9.1f} {g['wall_us'] / k['wall_us']:7.2f}x | "
               f"{g['kv_bytes_est'] / 1024:9.1f} "
               f"{k['kv_bytes_est'] / 1024:9.1f}")

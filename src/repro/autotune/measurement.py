@@ -461,6 +461,16 @@ class ServingBackend(CumulativeLadderState):
     ``meta['paged_attn_walls']`` both measured floors, AutoDSE-style:
     the rung is kept because it measured faster, not assumed so.
 
+    The pool's stored dtype is a measured knob too (``kv_dtype="auto"``):
+    the paged rung races its chosen bf16 engine against an int8 twin at
+    EQUAL POOL MEMORY (the narrow blocks' saved bytes buy more blocks)
+    and keeps narrow only when goodput/tok-s wins beyond the noise
+    floor.  Narrow pools are held to the dtype's TOLERANCE contract
+    (``serving.kvquant.tolerance_contract``) against the incumbent's
+    tokens — never to bit-identity — plus strict determinism across
+    repeats; ``meta['kv_dtype']`` records the shipped dtype and
+    ``meta['kv_dtype_walls']`` both measured floors.
+
     The speculative rung (``top_level = O7``) follows the same rule with
     the window size as the knob: ``draft_k="auto"`` races K in {0,2,4,8}
     on interleaved repeats (K=0 is the incumbent O6-equivalent engine —
@@ -492,12 +502,17 @@ class ServingBackend(CumulativeLadderState):
                  vocab: int = 0, seed: int = 0, kv_block_size: int = 16,
                  kv_pool_blocks: int = 0, paged_attn: str = "auto",
                  prefill_chunk="auto", draft_model: str = "smollm-360m",
-                 draft_k="auto", traffic_rate: float = 0.0,
+                 draft_k="auto", kv_dtype: str = "auto",
+                 traffic_rate: float = 0.0,
                  traffic_pattern: str = "poisson",
                  ttft_slo_s: float = 0.5, tpot_slo_s: float = 0.1):
+        from repro.serving.kvquant import KV_DTYPES
         if paged_attn not in ("auto", "gather", "kernel"):
             raise ValueError(f"paged_attn must be auto|gather|kernel "
                              f"(got {paged_attn!r})")
+        if kv_dtype != "auto" and kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype must be auto|{'|'.join(KV_DTYPES)} "
+                             f"(got {kv_dtype!r})")
         if traffic_pattern not in ("poisson", "bursty"):
             raise ValueError(f"traffic_pattern must be poisson|bursty "
                              f"(got {traffic_pattern!r})")
@@ -525,6 +540,7 @@ class ServingBackend(CumulativeLadderState):
         self.kv_block_size = kv_block_size
         self.kv_pool_blocks = kv_pool_blocks
         self.paged_attn = paged_attn
+        self.kv_dtype = kv_dtype
         self.traffic_rate = float(traffic_rate)
         self.traffic_pattern = traffic_pattern
         self.ttft_slo_s = float(ttft_slo_s)
@@ -576,7 +592,8 @@ class ServingBackend(CumulativeLadderState):
         return self._draft
 
     def _build_engine(self, state: OptLevel, paged_attn: str,
-                      prefill_chunk: int = 0, draft_k: int = 0):
+                      prefill_chunk: int = 0, draft_k: int = 0,
+                      kv_dtype: str = "bf16", pool_blocks=None):
         from repro.core.optlevel import BestEffortConfig
         from repro.serving import DecodeEngine
 
@@ -588,11 +605,15 @@ class ServingBackend(CumulativeLadderState):
             model, params, batch_size=self.batch_size, max_seq=self.max_seq,
             config=BestEffortConfig(level=state, pe=self.pe,
                                     kv_block_size=self.kv_block_size,
-                                    kv_pool_blocks=self.kv_pool_blocks,
+                                    kv_pool_blocks=(
+                                        self.kv_pool_blocks
+                                        if pool_blocks is None
+                                        else pool_blocks),
                                     paged_attn=paged_attn,
                                     prefill_chunk=prefill_chunk,
                                     draft_model=self.draft_model,
-                                    draft_k=draft_k),
+                                    draft_k=draft_k,
+                                    kv_dtype=kv_dtype),
             policy=self.policy, draft_model=draft_api,
             draft_params=draft_params)
 
@@ -750,6 +771,72 @@ class ServingBackend(CumulativeLadderState):
                 if best_k[win] < 0.99 * best_wall:
                     engine, best_wall = spec_engines[win], best_k[win]
 
+        # The pool's STORED dtype is the last measured knob (paged rungs
+        # only): ``kv_dtype="auto"`` races the chosen bf16 engine against
+        # a narrow (int8) twin holding the SAME pool memory — the bytes
+        # the narrow blocks save are spent on MORE blocks, so the race
+        # compares what deployment compares (capacity-for-precision at
+        # equal HBM).  The narrow twin is NOT token-asserted against the
+        # incumbent — quantized rungs carry a tolerance contract, not the
+        # bit-identity contract — it must instead meet the contract's
+        # agreement floor against the incumbent's tokens AND be
+        # deterministic across repeats.  "auto" keeps narrow only when it
+        # WINS beyond the 1% noise floor (goodput in traffic mode, drain
+        # wall otherwise); a pinned narrow dtype ships narrow regardless
+        # but still records both measured floors.
+        kv_dtype_walls = None
+        kv_agreement = None
+        if paged and self.kv_dtype != "bf16":
+            from repro.serving import kvquant
+            from repro.serving.paged import BlockPagingPlan
+
+            narrow = "int8" if self.kv_dtype == "auto" else self.kv_dtype
+            inc_mgr = engine.cache_mgr
+            T = inc_mgr.block_size
+            wide_plan = inc_mgr.plan
+            nplan = BlockPagingPlan(model, self.batch_size, self.max_seq,
+                                    T, inc_mgr.pool_blocks,
+                                    kv_dtype=narrow)
+            wide_bb = T * wide_plan.token_bytes \
+                + wide_plan.scale_bytes_per_block
+            narrow_bb = T * nplan.token_bytes + nplan.scale_bytes_per_block
+            q_blocks = max(inc_mgr.pool_blocks,
+                           inc_mgr.pool_blocks * wide_bb // narrow_bb)
+            qk = 0
+            if state.has(Step.SPECULATIVE):
+                st = engine.spec_stats
+                if st["spec_mode"] == "draft":
+                    qk = st["draft_k"]
+            qeng = self._build_engine(state, chosen, chunk, draft_k=qk,
+                                      kv_dtype=narrow,
+                                      pool_blocks=q_blocks)
+            _, _, qgen, _ = run_serving_workload(qeng, workload)  # warmup
+            tc = kvquant.tolerance_contract(narrow)
+            kv_agreement = kvquant.token_agreement(generated, qgen)
+            assert kv_agreement >= tc["min_agreement"], (
+                f"kv_dtype={narrow} token agreement {kv_agreement:.3f} "
+                f"below the {tc['min_agreement']} tolerance contract")
+            best_q = None
+            for _ in range(max(1, self.repeats)):
+                wall, _, g, _ = run_serving_workload(qeng, workload)
+                assert g == qgen, \
+                    "narrow-pool serving workload must be deterministic"
+                if best_q is None or wall < best_q:
+                    best_q = wall
+                wall, _, _, _ = run_serving_workload(engine, workload)
+                if wall < best_wall:
+                    best_wall = wall
+            kv_dtype_walls = {"bf16": best_wall, narrow: best_q}
+            if self.traffic_rate > 0:
+                tm_b = self._traffic_measure(engine)
+                tm_q = self._traffic_measure(qeng)
+                win_q = (tm_q["goodput_rps"]
+                         > 1.01 * tm_b["goodput_rps"])
+            else:
+                win_q = best_q < 0.99 * best_wall
+            if self.kv_dtype != "auto" or win_q:
+                engine, best_wall, generated = qeng, best_q, qgen
+
         # Unloaded single-request latency (TTFT / inter-token) through
         # the real prefill path, best-of-repeats on the warm engine.
         ttft = itl = None
@@ -778,6 +865,7 @@ class ServingBackend(CumulativeLadderState):
             "layout": engine.layout.name,
             "devices": engine.placement.n_devices,
             "paged_attn": getattr(engine.layout, "attn_impl", None),
+            "kv_dtype": getattr(engine.layout, "kv_dtype", "bf16"),
             "prefill_chunk": chunk,
             "prefill_mode": engine.prefill_mode,
             "ttft_s": ttft,
@@ -794,6 +882,12 @@ class ServingBackend(CumulativeLadderState):
             meta["eff_tok_per_step"] = st["eff_tok_per_step"]
         if draft_k_walls is not None:
             meta["draft_k_walls"] = draft_k_walls
+        if kv_dtype_walls is not None:
+            # keyed by stored dtype; both floors recorded whether or not
+            # the narrow pool was kept (AutoDSE-style: the decision is
+            # auditable from the walls, not just the winner)
+            meta["kv_dtype_walls"] = kv_dtype_walls
+            meta["kv_agreement"] = kv_agreement
         if chunk_walls is not None:
             meta["prefill_chunk_walls"] = chunk_walls
         if paged:

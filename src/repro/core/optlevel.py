@@ -197,6 +197,22 @@ class BestEffortConfig:
     # ``engine.spec_mode``), never fail.
     draft_model: str = ""
     draft_k: int = 4
+    # O6 refinement (serving): stored dtype of the paged KV pool blocks.
+    # "bf16" keeps today's bit-identical ladder; "int8" / "fp8" store
+    # blocks in the narrow dtype with per-(block x kv-head) absmax scales
+    # kept alongside the block tables — double the admitted concurrency
+    # at equal pool memory and half the kernel's streamed bytes/tick, in
+    # exchange for a TOLERANCE contract vs the bf16 reference instead of
+    # bit-identity (``repro.serving.kvquant.tolerance_contract``).  The
+    # knob is inert on contiguous layouts, and the autotuner races it
+    # like ``paged_attn`` (keep narrow only when it measures faster).
+    kv_dtype: str = "bf16"
+
+    def __post_init__(self):
+        from repro.serving.kvquant import KV_DTYPES
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype {self.kv_dtype!r}; "
+                             f"choices: {KV_DTYPES}")
 
     def with_level(self, level: OptLevel) -> "BestEffortConfig":
         return dataclasses.replace(self, level=level)

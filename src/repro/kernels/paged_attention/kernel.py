@@ -61,14 +61,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _scores(q_ref, k_ref, jj, length, *, scale, block_size):
+def _dequant(raw, s, dt):
+    """Per-block dequant, bit-matching ``serving.kvquant.dequantize``
+    (kept inline so the kernel package stays import-free of serving):
+    f32 multiply by the block's absmax scale, ONE round to the compute
+    dtype, then the f32 widening every score path applies anyway."""
+    return (raw.astype(jnp.float32) * s).astype(dt).astype(jnp.float32)
+
+
+def _scores(q_ref, k_ref, jj, length, *, scale, block_size, ks=None):
     """Masked f32 scores for one (G, T) block, with the SAME rounding
     discipline as the dense decode path: the qk product and the scale
     multiply are rounded to the query dtype (the dense path's einsum
-    output dtype) before the f32 mask/softmax."""
+    output dtype) before the f32 mask/softmax.  ``ks`` (narrow pools)
+    is this block's scalar K scale; the dequant rounds to the query
+    dtype first — the exact bits the gather path's dense view holds."""
     dt = q_ref.dtype
     q = q_ref[0].astype(jnp.float32)                # (G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)          # (T, D)
+    if ks is None:
+        k = k_ref[0, :, 0].astype(jnp.float32)      # (T, D)
+    else:
+        k = _dequant(k_ref[0, :, 0], ks, dt)        # (T, D)
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)         # (G, T)
@@ -77,10 +90,17 @@ def _scores(q_ref, k_ref, jj, length, *, scale, block_size):
     return jnp.where(idx < length, s, NEG_INF)
 
 
-def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref, *, scale: float,
-                       block_size: int, n_blocks: int):
+def _paged_attn_kernel(tables_ref, lens_ref, *refs, scale: float,
+                       block_size: int, n_blocks: int,
+                       quantized: bool = False):
+    if quantized:
+        (kscale_ref, vscale_ref, q_ref, k_ref, v_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        kscale_ref = vscale_ref = None
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
+    h = pl.program_id(1)
     j = pl.program_id(2)
     jj = j % n_blocks                # logical block within the pass
     phase = j // n_blocks            # 0: (m, l) stats; 1: PV accumulate
@@ -92,6 +112,12 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     length = lens_ref[b]
+    # Narrow pools: this block's scalar scales, read from the SMEM
+    # scalar-prefetch operands through the same table indirection the
+    # BlockSpec DMA uses.
+    row = tables_ref[b, jj]
+    ks = kscale_ref[row, h] if quantized else None
+    vs = vscale_ref[row, h] if quantized else None
 
     # Skip blocks entirely past this slot's valid prefix (no compute;
     # the NULL-block rows inactive table tails point at are never read).
@@ -100,7 +126,7 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when((phase == 0) & in_range)
     def _stats():
         s = _scores(q_ref, k_ref, jj, length, scale=scale,
-                    block_size=block_size)
+                    block_size=block_size, ks=ks)
         m_prev = m_ref[...]                          # (G, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -111,8 +137,11 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when((phase == 1) & in_range)
     def _accumulate():
         s = _scores(q_ref, k_ref, jj, length, scale=scale,
-                    block_size=block_size)
-        v = v_ref[0, :, 0].astype(jnp.float32)       # (T, D)
+                    block_size=block_size, ks=ks)
+        if quantized:
+            v = _dequant(v_ref[0, :, 0], vs, q_ref.dtype)   # (T, D)
+        else:
+            v = v_ref[0, :, 0].astype(jnp.float32)          # (T, D)
         p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
         # Round the probabilities to the query dtype — the dense path's
         # ``softmax(s).astype(dt)`` — so the PV product sees identical
@@ -127,9 +156,9 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _paged_prefill_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                          m_ref, l_ref, acc_ref, *, scale: float,
-                          block_size: int, n_blocks: int, q_len: int):
+def _paged_prefill_kernel(tables_ref, lens_ref, *refs, scale: float,
+                          block_size: int, n_blocks: int, q_len: int,
+                          quantized: bool = False):
     """Multi-query (qlen > 1) variant of ``_paged_attn_kernel``.
 
     The q block carries ``G * Q`` rows (g-major: row r is query position
@@ -145,7 +174,14 @@ def _paged_prefill_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     per row — ``m`` is real before any fully-masked block is seen, and a
     fully-masked block then contributes ``exp(-1e30 - m) == 0``.
     """
+    if quantized:
+        (kscale_ref, vscale_ref, q_ref, k_ref, v_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        kscale_ref = vscale_ref = None
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
+    h = pl.program_id(1)
     j = pl.program_id(2)
     jj = j % n_blocks
     phase = j // n_blocks
@@ -158,10 +194,13 @@ def _paged_prefill_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     length = lens_ref[b]
     in_range = jj * block_size < length
+    row = tables_ref[b, jj]
+    ks = kscale_ref[row, h] if quantized else None
+    vs = vscale_ref[row, h] if quantized else None
 
     def scores():
         s = _scores(q_ref, k_ref, jj, length, scale=scale,
-                    block_size=block_size)              # (G*Q, T)
+                    block_size=block_size, ks=ks)       # (G*Q, T)
         qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % q_len
         idx = jj * block_size + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
@@ -180,7 +219,10 @@ def _paged_prefill_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when((phase == 1) & in_range)
     def _accumulate():
         s = scores()
-        v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            v = _dequant(v_ref[0, :, 0], vs, q_ref.dtype)
+        else:
+            v = v_ref[0, :, 0].astype(jnp.float32)
         p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
         p = p.astype(q_ref.dtype).astype(jnp.float32)
         acc_ref[...] += jax.lax.dot_general(
@@ -192,14 +234,32 @@ def _paged_prefill_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _grid_args(quantized: bool, nb: int):
+    """(num_scalar_prefetch, q/kv/out index maps) for the two scalar
+    arities: unquantized kernels prefetch (tables, lengths); narrow
+    pools add the (R, KV) f32 K/V scale matrices, read in-kernel through
+    the same table indirection the BlockSpec DMA uses."""
+    if quantized:
+        q_map = lambda b, h, j, tbl, lens, ks, vs: (b, h, 0)   # noqa: E731
+        kv_map = lambda b, h, j, tbl, lens, ks, vs: (           # noqa: E731
+            tbl[b, j % nb], 0, h, 0)
+        return 4, q_map, kv_map
+    q_map = lambda b, h, j, tbl, lens: (b, h, 0)               # noqa: E731
+    kv_map = lambda b, h, j, tbl, lens: (                       # noqa: E731
+        tbl[b, j % nb], 0, h, 0)
+    return 2, q_map, kv_map
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_prefill_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
+def paged_prefill_attention_pallas(q, k_pool, v_pool, tables, lengths,
+                                   k_scale=None, v_scale=None, *,
                                    interpret: bool = True):
     """q: (B, Q, H, D) — Q query tokens per slot, causally masked against
     a paged KV prefix whose last Q positions ARE those tokens;
     k_pool/v_pool: (R, T, KV, D); tables: (B, nb); lengths: (B,) int32 =
     start + Q valid positions per slot (the chunk's K/V already
-    appended).  Returns (B, Q, H, D) in q's dtype."""
+    appended); k_scale/v_scale: (R, KV) f32 per-block absmax scales when
+    the pool is narrow.  Returns (B, Q, H, D) in q's dtype."""
     B, Q, H, D = q.shape
     R, T, KV, Dk = k_pool.shape
     assert Dk == D and v_pool.shape == k_pool.shape, (q.shape, k_pool.shape)
@@ -208,27 +268,26 @@ def paged_prefill_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
     nb = tables.shape[1]
     assert tables.shape == (B, nb) and lengths.shape == (B,), (
         tables.shape, lengths.shape)
+    quantized = k_scale is not None
+    if quantized:
+        assert k_scale.shape == (R, KV) and v_scale.shape == (R, KV), (
+            k_scale.shape, v_scale.shape)
     scale = 1.0 / (D ** 0.5)
 
     # g-major row layout: (B, Q, H, D) -> (B, H*Q, D); kv-head h's block
     # is rows [h*G*Q, (h+1)*G*Q) — row r is (head h*G + r//Q, query r%Q).
     qr = q.transpose(0, 2, 1, 3).reshape(B, H * Q, D)
 
+    n_prefetch, q_map, kv_map = _grid_args(quantized, nb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=n_prefetch,
         grid=(B, KV, 2 * nb),
         in_specs=[
-            pl.BlockSpec((1, G * Q, D),
-                         lambda b, h, j, tbl, lens: (b, h, 0)),
-            pl.BlockSpec((1, T, 1, D),
-                         lambda b, h, j, tbl, lens:
-                         (tbl[b, j % nb], 0, h, 0)),
-            pl.BlockSpec((1, T, 1, D),
-                         lambda b, h, j, tbl, lens:
-                         (tbl[b, j % nb], 0, h, 0)),
+            pl.BlockSpec((1, G * Q, D), q_map),
+            pl.BlockSpec((1, T, 1, D), kv_map),
+            pl.BlockSpec((1, T, 1, D), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, G * Q, D),
-                               lambda b, h, j, tbl, lens: (b, h, 0)),
+        out_specs=pl.BlockSpec((1, G * Q, D), q_map),
         scratch_shapes=[
             pltpu.VMEM((G * Q, 1), jnp.float32),
             pltpu.VMEM((G * Q, 1), jnp.float32),
@@ -236,28 +295,33 @@ def paged_prefill_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
         ],
     )
     kernel = functools.partial(_paged_prefill_kernel, scale=scale,
-                               block_size=T, n_blocks=nb, q_len=Q)
+                               block_size=T, n_blocks=nb, q_len=Q,
+                               quantized=quantized)
     kw = {}
     if not interpret:
         kw["compiler_params"] = pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
 
+    operands = ((tables, lengths, k_scale, v_scale) if quantized
+                else (tables, lengths))
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H * Q, D), q.dtype),
         interpret=interpret,
         **kw,
-    )(tables, lengths, qr, k_pool, v_pool)
+    )(*operands, qr, k_pool, v_pool)
     return out.reshape(B, H, Q, D).transpose(0, 2, 1, 3)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
+def paged_attention_pallas(q, k_pool, v_pool, tables, lengths,
+                           k_scale=None, v_scale=None, *,
                            interpret: bool = True):
     """q: (B, H, D); k_pool/v_pool: (R, T, KV, D); tables: (B, nb) int32
     physical pool rows per logical block; lengths: (B,) int32 valid
-    positions per slot.  Returns (B, H, D) in q's dtype."""
+    positions per slot; k_scale/v_scale: (R, KV) f32 per-block absmax
+    scales when the pool is narrow.  Returns (B, H, D) in q's dtype."""
     B, H, D = q.shape
     R, T, KV, Dk = k_pool.shape
     assert Dk == D and v_pool.shape == k_pool.shape, (q.shape, k_pool.shape)
@@ -266,24 +330,24 @@ def paged_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
     nb = tables.shape[1]
     assert tables.shape == (B, nb) and lengths.shape == (B,), (
         tables.shape, lengths.shape)
+    quantized = k_scale is not None
+    if quantized:
+        assert k_scale.shape == (R, KV) and v_scale.shape == (R, KV), (
+            k_scale.shape, v_scale.shape)
     scale = 1.0 / (D ** 0.5)
 
+    n_prefetch, q_map, kv_map = _grid_args(quantized, nb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=n_prefetch,
         grid=(B, KV, 2 * nb),
         in_specs=[
             # q heads for kv-head h: rows h*G .. h*G+G-1
-            pl.BlockSpec((1, G, D), lambda b, h, j, tbl, lens: (b, h, 0)),
+            pl.BlockSpec((1, G, D), q_map),
             # ONE physical pool block, selected through the table
-            pl.BlockSpec((1, T, 1, D),
-                         lambda b, h, j, tbl, lens:
-                         (tbl[b, j % nb], 0, h, 0)),
-            pl.BlockSpec((1, T, 1, D),
-                         lambda b, h, j, tbl, lens:
-                         (tbl[b, j % nb], 0, h, 0)),
+            pl.BlockSpec((1, T, 1, D), kv_map),
+            pl.BlockSpec((1, T, 1, D), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, G, D),
-                               lambda b, h, j, tbl, lens: (b, h, 0)),
+        out_specs=pl.BlockSpec((1, G, D), q_map),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -291,16 +355,19 @@ def paged_attention_pallas(q, k_pool, v_pool, tables, lengths, *,
         ],
     )
     kernel = functools.partial(_paged_attn_kernel, scale=scale,
-                               block_size=T, n_blocks=nb)
+                               block_size=T, n_blocks=nb,
+                               quantized=quantized)
     kw = {}
     if not interpret:
         kw["compiler_params"] = pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
 
+    operands = ((tables, lengths, k_scale, v_scale) if quantized
+                else (tables, lengths))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
         **kw,
-    )(tables, lengths, q, k_pool, v_pool)
+    )(*operands, q, k_pool, v_pool)

@@ -14,8 +14,19 @@ from repro.kernels.paged_attention.kernel import (
     paged_attention_pallas, paged_prefill_attention_pallas)
 
 
+def _check_scales(k_pool, k_scale, v_scale):
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    if k_scale is not None:
+        R, _T, KV, _D = k_pool.shape
+        want = (R, KV)
+        if tuple(k_scale.shape) != want or tuple(v_scale.shape) != want:
+            raise ValueError(f"scale shape mismatch: want {want}, got "
+                             f"k {k_scale.shape}, v {v_scale.shape}")
+
+
 def paged_attention(q, k_pool, v_pool, tables, lengths, *,
-                    interpret: bool = True):
+                    k_scale=None, v_scale=None, interpret: bool = True):
     """Decode attention straight off a paged KV block pool.
 
     q: (B, H, D) — one query token per slot.
@@ -24,6 +35,9 @@ def paged_attention(q, k_pool, v_pool, tables, lengths, *,
     tables: (B, nb) int — physical pool row of each logical block.
     lengths: (B,) int — valid positions per slot (the engine passes
         ``positions + 1``: the current token's K/V is already appended).
+    k_scale, v_scale: (R, KV) f32 — per-block absmax scales when the
+        pool stores a narrow dtype (int8/fp8); each streamed block is
+        dequantized in-kernel at the gather path's exact rounding site.
 
     Returns (B, H, D) in q's dtype.  Every block the table references
     inside ``lengths[b]`` must be a real (non-NULL) block — the
@@ -36,12 +50,14 @@ def paged_attention(q, k_pool, v_pool, tables, lengths, *,
     if Dk != D or v_pool.shape != k_pool.shape:
         raise ValueError(f"pool/query shape mismatch: q {q.shape}, "
                          f"k {k_pool.shape}, v {v_pool.shape}")
+    _check_scales(k_pool, k_scale, v_scale)
     return paged_attention_pallas(
         q, k_pool, v_pool, tables.astype(jnp.int32),
-        lengths.astype(jnp.int32), interpret=interpret)
+        lengths.astype(jnp.int32), k_scale, v_scale, interpret=interpret)
 
 
 def paged_prefill_attention(q, k_pool, v_pool, tables, lengths, *,
+                            k_scale=None, v_scale=None,
                             interpret: bool = True):
     """Multi-token (qlen > 1) prefill attention off the paged pool — the
     chunked-prefill / speculative-decoding query mode.
@@ -52,6 +68,7 @@ def paged_prefill_attention(q, k_pool, v_pool, tables, lengths, *,
         appended at positions [start, start + Q).
     tables: (B, nb) int — physical pool row of each logical block.
     lengths: (B,) int — ``start + Q`` valid positions per slot.
+    k_scale, v_scale: (R, KV) f32 — per-block scales for narrow pools.
 
     Returns (B, Q, H, D) in q's dtype.  Q == 1 is bit-identical to
     :func:`paged_attention` (same block layout, masks, and roundings).
@@ -63,6 +80,7 @@ def paged_prefill_attention(q, k_pool, v_pool, tables, lengths, *,
     if Dk != D or v_pool.shape != k_pool.shape:
         raise ValueError(f"pool/query shape mismatch: q {q.shape}, "
                          f"k {k_pool.shape}, v {v_pool.shape}")
+    _check_scales(k_pool, k_scale, v_scale)
     return paged_prefill_attention_pallas(
         q, k_pool, v_pool, tables.astype(jnp.int32),
-        lengths.astype(jnp.int32), interpret=interpret)
+        lengths.astype(jnp.int32), k_scale, v_scale, interpret=interpret)

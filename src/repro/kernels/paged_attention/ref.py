@@ -13,16 +13,32 @@ import jax
 import jax.numpy as jnp
 
 
-def paged_attention_ref(q, k_pool, v_pool, tables, lengths):
+def _dense_view(pool, scale, tables, compute_dtype):
+    """Gathered (B, nb, T, KV, D) view; narrow pools dequantize each
+    block with its (R, KV) scale through the shared rounding site (f32
+    multiply, one round to the compute dtype — the exact expression of
+    ``serving.kvquant.dequantize``)."""
+    g = pool[tables]                                 # (B, nb, T, KV, D)
+    if scale is not None:
+        s = scale[tables][:, :, None, :, None]       # (B, nb, 1, KV, 1)
+        g = (g.astype(jnp.float32) * s).astype(compute_dtype)
+    return g
+
+
+def paged_attention_ref(q, k_pool, v_pool, tables, lengths,
+                        k_scale=None, v_scale=None):
     """q: (B, H, D); k_pool/v_pool: (R, T, KV, D); tables: (B, nb);
-    lengths: (B,) valid positions per slot (callers keep >= 1)."""
+    lengths: (B,) valid positions per slot (callers keep >= 1);
+    k_scale/v_scale: (R, KV) f32 per-block scales for narrow pools."""
     B, H, D = q.shape
     _, T, KV, _ = k_pool.shape
     nb = tables.shape[1]
     G = H // KV
 
-    dk = k_pool[tables].reshape(B, nb * T, KV, D).astype(jnp.float32)
-    dv = v_pool[tables].reshape(B, nb * T, KV, D).astype(jnp.float32)
+    dk = _dense_view(k_pool, k_scale, tables, q.dtype).reshape(
+        B, nb * T, KV, D).astype(jnp.float32)
+    dv = _dense_view(v_pool, v_scale, tables, q.dtype).reshape(
+        B, nb * T, KV, D).astype(jnp.float32)
     qg = q.reshape(B, KV, G, D).astype(jnp.float32)
 
     s = jnp.einsum("bkgd,bskd->bkgs", qg, dk) / (D ** 0.5)
@@ -34,17 +50,21 @@ def paged_attention_ref(q, k_pool, v_pool, tables, lengths):
     return o.reshape(B, H, D).astype(q.dtype)
 
 
-def paged_prefill_attention_ref(q, k_pool, v_pool, tables, lengths):
+def paged_prefill_attention_ref(q, k_pool, v_pool, tables, lengths,
+                                k_scale=None, v_scale=None):
     """Multi-query oracle: q (B, Q, H, D); lengths = start + Q.  Query
     position qi attends kv positions <= start + qi (per-row causal mask
-    over the same gathered dense view)."""
+    over the same gathered — and, for narrow pools, dequantized —
+    dense view)."""
     B, Q, H, D = q.shape
     _, T, KV, _ = k_pool.shape
     nb = tables.shape[1]
     G = H // KV
 
-    dk = k_pool[tables].reshape(B, nb * T, KV, D).astype(jnp.float32)
-    dv = v_pool[tables].reshape(B, nb * T, KV, D).astype(jnp.float32)
+    dk = _dense_view(k_pool, k_scale, tables, q.dtype).reshape(
+        B, nb * T, KV, D).astype(jnp.float32)
+    dv = _dense_view(v_pool, v_scale, tables, q.dtype).reshape(
+        B, nb * T, KV, D).astype(jnp.float32)
     qg = q.reshape(B, Q, KV, G, D).astype(jnp.float32)
 
     s = jnp.einsum("bqkgd,bskd->bqkgs", qg, dk) / (D ** 0.5)

@@ -39,7 +39,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                sampler: SamplerConfig = None, pe: int = 8,
                kv_block_size: int = 16, kv_pool_blocks: int = 0,
                paged_attn: str = "gather", prefill_chunk: int = 0,
-               draft_model: str = "", draft_k: int = 4) -> dict:
+               draft_model: str = "", draft_k: int = 4,
+               kv_dtype: str = "bf16") -> dict:
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     engine = DecodeEngine(model, params, batch_size=batch_size,
@@ -51,7 +52,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
                               paged_attn=paged_attn,
                               prefill_chunk=prefill_chunk,
                               draft_model=draft_model,
-                              draft_k=draft_k),
+                              draft_k=draft_k,
+                              kv_dtype=kv_dtype),
                           policy=policy, sampler=sampler)
 
     rng = np.random.default_rng(seed)
@@ -74,6 +76,7 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
         "layout": engine.layout.name,
         "devices": engine.placement.n_devices,
         "paged_attn": getattr(engine.layout, "attn_impl", None),
+        "kv_dtype": getattr(engine.layout, "kv_dtype", "bf16"),
         "prefill_mode": engine.prefill_mode,
         "spec_mode": engine.spec_mode,
         "spec": engine.spec_stats,
@@ -116,6 +119,13 @@ def main():
                          "kernel runs the gather-free block-table "
                          "Pallas kernel on the raw pool (families "
                          "without a paged decode step fall back)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=("bf16", "int8", "fp8"),
+                    help="O6 pool STORED dtype: int8/fp8 store narrow "
+                         "blocks with per-block absmax scales (~2x "
+                         "capacity at equal pool memory; tokens track "
+                         "the bf16 rung within the tolerance contract, "
+                         "not bit-exactly)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: consume prompts in chunks of "
                          "this many tokens, one chunk per tick, "
@@ -150,11 +160,14 @@ def main():
                      kv_pool_blocks=args.kv_pool_blocks,
                      paged_attn=args.paged_attn,
                      prefill_chunk=args.prefill_chunk,
-                     draft_model=args.draft_model, draft_k=args.draft_k)
+                     draft_model=args.draft_model, draft_k=args.draft_k,
+                     kv_dtype=args.kv_dtype)
     for r in out["finished"][:4]:
         print(f"[serve] req {r.rid}: prompt[{r.n_prompt}] -> "
               f"{r.generated}")
     attn = f"/{out['paged_attn']}" if out["paged_attn"] else ""
+    if out.get("kv_dtype", "bf16") != "bf16":
+        attn += f"/kv={out['kv_dtype']}"
     if args.prefill_chunk:
         attn += f"/prefill={out['prefill_mode']}({args.prefill_chunk})"
     if out["spec_mode"] == "draft":

@@ -310,25 +310,55 @@ def chunk_prefill_attention(params, x, cache, positions, *, n_heads, n_kv,
     return out, {"k": ck, "v": cv}
 
 
-def paged_chunk_prefill_attention(params, x, cache, tables, positions,
+def _unpack_paged(kvs):
+    """(ck, cv) or (ck, cv, sk, sv) from the paged kv-leaf tuple."""
+    if len(kvs) == 2:
+        return kvs[0], kvs[1], None, None
+    ck, cv, sk, sv = kvs
+    return ck, cv, sk, sv
+
+
+def _quant_block_write(blk, sblk, write_fn, valid, kv_dtype, dt):
+    """Shared requant-on-append discipline for ONE window of pool
+    blocks: dequantize the stored window (same rounding site as the
+    kernel/gather), apply ``write_fn`` to install the new bf16 K/V,
+    zero positions outside ``valid`` so stale garbage never inflates the
+    absmax, then re-derive the scale and re-quantize.  Returns
+    (quantized window, new scales)."""
+    from repro.serving import kvquant
+
+    wide = kvquant.dequantize(blk, sblk, dt)
+    wide = jnp.where(valid, write_fn(wide), 0)
+    # token + head-dim axes of the (..., T, KV, dh) window
+    sx = (wide.ndim - 3, wide.ndim - 1)
+    s = kvquant.block_scale(wide, sx, kv_dtype)
+    return kvquant.quantize(wide, s, kv_dtype), s
+
+
+def paged_chunk_prefill_attention(params, x, kvs, tables, positions,
                                   lengths, *, n_heads, n_kv, head_dim,
-                                  qk_norm=False, rope_theta=1e4):
+                                  qk_norm=False, rope_theta=1e4,
+                                  kv_dtype="bf16", start=None):
     """Prompt-chunk attention straight off the paged block pool — the
     qlen > 1 sibling of :func:`paged_decode_attention`.
 
-    x: (B, C, d); cache: {"k","v"} pool leaves (R, T, KV, dh);
-    tables: (B, nb); positions: (B, C) absolute index per chunk token
-    (clipped for the padded tail — those writes go to in-reservation
-    blocks or the NULL block, both write-garbage-safe); lengths: (B,)
-    UNCLIPPED ``start + C`` so the kernel's per-row causal limits stay
-    exact for the real rows even when the padded tail clips.
-    Returns (out (B, C, d), new pool leaves).
+    x: (B, C, d); kvs: (k, v) pool leaves (R, T, KV, dh) — or
+    (k, v, k_scale, v_scale) with (R, 1, KV, 1) scales for narrow
+    pools; tables: (B, nb); positions: (B, C) absolute index per chunk
+    token (clipped for the padded tail — those writes go to
+    in-reservation blocks or the NULL block, both write-garbage-safe);
+    lengths: (B,) UNCLIPPED ``start + C`` so the kernel's per-row causal
+    limits stay exact for the real rows even when the padded tail clips;
+    ``start`` (B,) anchors the narrow pools' requant window.
+    Returns (out (B, C, d), new kv-leaf tuple).
     """
     from repro.kernels.paged_attention.ops import paged_prefill_attention
 
     B, C, d = x.shape
     dt = x.dtype
-    T = cache["k"].shape[1]
+    ck, cv, sk, sv = _unpack_paged(kvs)
+    T = ck.shape[1]
+    nb = tables.shape[1]
 
     q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
     k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
@@ -339,18 +369,57 @@ def paged_chunk_prefill_attention(params, x, cache, tables, positions,
     q = rope(q, positions, rope_theta)
     k = rope(k, positions, rope_theta)
 
-    rows = jnp.take_along_axis(tables, positions // T, axis=1)   # (B, C)
-    offs = positions % T
-    ck = cache["k"].at[rows, offs].set(k.astype(cache["k"].dtype))
-    cv = cache["v"].at[rows, offs].set(v.astype(cache["v"].dtype))
+    if sk is None:
+        rows = jnp.take_along_axis(tables, positions // T, axis=1)  # (B, C)
+        offs = positions % T
+        ck = ck.at[rows, offs].set(k.astype(ck.dtype))
+        cv = cv.at[rows, offs].set(v.astype(cv.dtype))
+        o = paged_prefill_attention(q, ck, cv, tables, lengths)
+        out = jnp.einsum("bthk,hkd->btd", o.astype(dt),
+                         params["wo"].astype(dt))
+        return out, (ck, cv)
 
-    o = paged_prefill_attention(q, ck, cv, tables, lengths)
+    # Narrow pool: a chunk spans at most ceil(C/T)+1 logical blocks, so
+    # read-modify-write exactly that window per slot.  Window entries
+    # past the table horizon redirect to the NULL block (never clip to a
+    # real row — a duplicate write there would corrupt live state; NULL
+    # absorbs duplicates by design).
+    from repro.serving.paged import NULL_BLOCK
+
+    nt = min((C - 1) // T + 2, nb)
+    jb_first = (start // T).astype(jnp.int32)             # (B,)
+    jbs = jb_first[:, None] + jnp.arange(nt)[None]        # (B, nt)
+    rows = jnp.where(
+        jbs < nb,
+        jnp.take_along_axis(tables, jnp.clip(jbs, 0, nb - 1), axis=1),
+        NULL_BLOCK)
+    bi = jnp.arange(B)[:, None]
+    wi = jnp.clip(positions // T - jb_first[:, None], 0, nt - 1)
+    woff = positions % T
+    abs_idx = jbs[:, :, None] * T + jnp.arange(T)[None, None]  # (B, nt, T)
+    valid = (abs_idx < lengths[:, None, None])[..., None, None]
+
+    ck, nsk = _quant_block_write(
+        ck[rows], sk[rows],
+        lambda w: w.at[bi, wi, woff].set(k.astype(dt)), valid, kv_dtype, dt)
+    cv, nsv = _quant_block_write(
+        cv[rows], sv[rows],
+        lambda w: w.at[bi, wi, woff].set(v.astype(dt)), valid, kv_dtype, dt)
+    ck = kvs[0].at[rows].set(ck)
+    cv = kvs[1].at[rows].set(cv)
+    sk = sk.at[rows].set(nsk)
+    sv = sv.at[rows].set(nsv)
+
+    o = paged_prefill_attention(q, ck, cv, tables, lengths,
+                                k_scale=sk[:, 0, :, 0],
+                                v_scale=sv[:, 0, :, 0])
     out = jnp.einsum("bthk,hkd->btd", o.astype(dt), params["wo"].astype(dt))
-    return out, {"k": ck, "v": cv}
+    return out, (ck, cv, sk, sv)
 
 
-def paged_decode_attention(params, x, cache, tables, positions, *, n_heads,
-                           n_kv, head_dim, qk_norm=False, rope_theta=1e4):
+def paged_decode_attention(params, x, kvs, tables, positions, *, n_heads,
+                           n_kv, head_dim, qk_norm=False, rope_theta=1e4,
+                           kv_dtype="bf16"):
     """Gather-free decode attention against a paged KV block pool.
 
     The paged-decode counterpart of :func:`decode_attention` (the other
@@ -359,19 +428,23 @@ def paged_decode_attention(params, x, cache, tables, positions, *, n_heads,
     token's K/V into the slot's active block IN PLACE — one (KV, dh)
     vector per slot, O(B) traffic, not the O(B * max_seq) dense gather —
     and runs the block-table-aware Pallas kernel, which walks the table
-    and streams only the blocks the slot actually references.
+    and streams only the blocks each slot's table references.
 
-    x: (B, 1, d); cache: {"k","v"} of (R, T, KV, dh) pool leaves (row 0
-    is the NULL block); tables: (B, nb); positions: (B,) current index
-    per slot.  Inactive slots point every table entry at the NULL block,
-    whose contents are write-garbage by design — their outputs are
-    discarded by the engine.  Returns (out (B, 1, d), new pool leaves).
+    x: (B, 1, d); kvs: (k, v) pool leaves (R, T, KV, dh), row 0 the
+    NULL block — or (k, v, k_scale, v_scale) with (R, 1, KV, 1) scales
+    for narrow pools, which re-quantize the slot's ACTIVE block around
+    the append (dequantize, write, mask the unwritten tail, rescale);
+    tables: (B, nb); positions: (B,) current index per slot.  Inactive
+    slots point every table entry at the NULL block, whose contents are
+    write-garbage by design — their outputs are discarded by the
+    engine.  Returns (out (B, 1, d), new kv-leaf tuple).
     """
     from repro.kernels.paged_attention.ops import paged_attention
 
     B, _, d = x.shape
     dt = x.dtype
-    T = cache["k"].shape[1]
+    ck, cv, sk, sv = _unpack_paged(kvs)
+    T = ck.shape[1]
 
     q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
     k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
@@ -387,9 +460,29 @@ def paged_decode_attention(params, x, cache, tables, positions, *, n_heads,
     row = jnp.take_along_axis(tables, (positions // T)[:, None],
                               axis=1)[:, 0]
     off = positions % T
-    ck = cache["k"].at[row, off].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[row, off].set(v[:, 0].astype(cache["v"].dtype))
 
-    o = paged_attention(q[:, 0], ck, cv, tables, positions + 1)
+    if sk is None:
+        ck = ck.at[row, off].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[row, off].set(v[:, 0].astype(cv.dtype))
+        o = paged_attention(q[:, 0], ck, cv, tables, positions + 1)
+        out = jnp.einsum("bhk,hkd->bd", o.astype(dt),
+                         params["wo"].astype(dt))
+        return out[:, None], (ck, cv)
+
+    bi = jnp.arange(B)
+    valid = (jnp.arange(T)[None, :] <= off[:, None])[..., None, None]
+    nckb, nsk = _quant_block_write(
+        ck[row], sk[row],
+        lambda w: w.at[bi, off].set(k[:, 0].astype(dt)), valid, kv_dtype, dt)
+    ncvb, nsv = _quant_block_write(
+        cv[row], sv[row],
+        lambda w: w.at[bi, off].set(v[:, 0].astype(dt)), valid, kv_dtype, dt)
+    ck = ck.at[row].set(nckb)
+    cv = cv.at[row].set(ncvb)
+    sk = sk.at[row].set(nsk)
+    sv = sv.at[row].set(nsv)
+
+    o = paged_attention(q[:, 0], ck, cv, tables, positions + 1,
+                        k_scale=sk[:, 0, :, 0], v_scale=sv[:, 0, :, 0])
     out = jnp.einsum("bhk,hkd->bd", o.astype(dt), params["wo"].astype(dt))
-    return out[:, None], {"k": ck, "v": cv}
+    return out[:, None], (ck, cv, sk, sv)

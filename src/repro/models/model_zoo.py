@@ -73,9 +73,12 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
 
     paged_step = None
     if hasattr(mod, "paged_decode_step"):
-        paged_step = (lambda params, pool, tables, tokens, positions:
+        paged_step = (lambda params, pool, tables, tokens, positions,
+                      scales=None, kv_dtype="bf16":
                       mod.paged_decode_step(cfg, params, pool, tables,
-                                            tokens, positions))
+                                            tokens, positions,
+                                            scales=scales,
+                                            kv_dtype=kv_dtype))
 
     prefill = paged_prefill = None
     if hasattr(mod, "prefill_step") and not cfg.n_experts:
@@ -84,19 +87,23 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
                                     last))
         if hasattr(mod, "paged_prefill_step"):
             paged_prefill = (lambda params, pool, tables, tokens, start,
-                             last:
+                             last, scales=None, kv_dtype="bf16":
                              mod.paged_prefill_step(cfg, params, pool,
                                                     tables, tokens, start,
-                                                    last))
+                                                    last, scales=scales,
+                                                    kv_dtype=kv_dtype))
 
     verify = paged_verify = None
     if hasattr(mod, "verify_step") and not cfg.n_experts:
         verify = (lambda params, cache, tokens, start:
                   mod.verify_step(cfg, params, cache, tokens, start))
         if hasattr(mod, "paged_verify_step"):
-            paged_verify = (lambda params, pool, tables, tokens, start:
+            paged_verify = (lambda params, pool, tables, tokens, start,
+                            scales=None, kv_dtype="bf16":
                             mod.paged_verify_step(cfg, params, pool, tables,
-                                                  tokens, start))
+                                                  tokens, start,
+                                                  scales=scales,
+                                                  kv_dtype=kv_dtype))
 
     return ModelAPI(
         cfg=cfg,

@@ -159,8 +159,10 @@ def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body,
     logits.  ``attn_body`` is the pluggable decode-attention hook applied
     per layer — dense attention on a per-slot cache view
     (:func:`decode_step`), or the paged Pallas kernel on the raw block
-    pool (:func:`paged_decode_step`); ``kv_leaves`` are the matching
-    (k, v) stacked-over-layers cache leaves it consumes and rewrites.
+    pool (:func:`paged_decode_step`); ``kv_leaves`` is the TUPLE of
+    matching stacked-over-layers cache leaves it consumes and rewrites —
+    (k, v) for bf16 pools, (k, v, k_scale, v_scale) for narrow pools —
+    and the same-arity tuple of new leaves comes back out.
 
     ``tokens`` may carry C >= 1 positions per row (chunked prefill).
     ``last`` (B,) selects the logits row per slot — the chunk's final
@@ -174,10 +176,10 @@ def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body,
     h = params["embedding"].astype(dt)[tokens]           # (B, C, d)
 
     def body(h, xs):
-        layer_params, ck, cv = xs
-        a, new_c = attn_body(layer_params,
-                             rms_norm(h, layer_params["attn_norm"]),
-                             ck, cv)
+        layer_params = xs[0]
+        a, new_kvs = attn_body(layer_params,
+                               rms_norm(h, layer_params["attn_norm"]),
+                               *xs[1:])
         h = h + a
         hn = rms_norm(h, layer_params["mlp_norm"])
         if cfg.n_experts:
@@ -187,22 +189,23 @@ def _decode_layers(cfg: ArchConfig, params, kv_leaves, tokens, attn_body,
             )
         else:
             m = mlp_apply(layer_params["mlp"], hn, cfg.mlp_kind)
-        return h + m, (new_c["k"], new_c["v"])
+        return h + m, tuple(new_kvs)
 
     from repro.models.loops import scan_or_unroll
-    h, (nk, nv) = scan_or_unroll(body, h, (params["layers"],) + kv_leaves,
-                                 unroll=cfg.unroll_layers)
+    h, new_leaves = scan_or_unroll(body, h,
+                                   (params["layers"],) + tuple(kv_leaves),
+                                   unroll=cfg.unroll_layers)
     h = rms_norm(h, params["final_norm"])
     if all_rows:
         w = params["lm_head"].astype(dt)
         logits = jnp.stack(
             [(h[:, j] @ w).astype(jnp.float32) for j in range(h.shape[1])],
             axis=1)
-        return logits, {"k": nk, "v": nv}
+        return logits, new_leaves
     hl = h[:, 0] if last is None else jnp.take_along_axis(
         h, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
     logits = (hl @ params["lm_head"].astype(dt)).astype(jnp.float32)
-    return logits, {"k": nk, "v": nv}
+    return logits, new_leaves
 
 
 def decode_step(cfg: ArchConfig, params, cache, tokens, positions):
@@ -210,18 +213,36 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, positions):
     Returns (logits (B, vocab_padded), new_cache)."""
 
     def attn_body(layer_params, hn, ck, cv):
-        return attn.decode_attention(
+        a, nc = attn.decode_attention(
             layer_params["attn"], hn, {"k": ck, "v": cv}, positions,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
             qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
         )
+        return a, (nc["k"], nc["v"])
 
-    return _decode_layers(cfg, params, (cache["k"], cache["v"]), tokens,
-                          attn_body)
+    logits, (nk, nv) = _decode_layers(
+        cfg, params, (cache["k"], cache["v"]), tokens, attn_body)
+    return logits, {"k": nk, "v": nv}
+
+
+def _paged_leaves(pool, scales):
+    """The kv-leaf tuple a paged step scans over: (k, v) plus, for
+    narrow pools, the per-layer (L, R, 1, KV, 1) scale leaves."""
+    if scales is None:
+        return (pool["k"], pool["v"])
+    return (pool["k"], pool["v"], scales["k"], scales["v"])
+
+
+def _paged_result(logits, new_leaves, scales):
+    if scales is None:
+        nk, nv = new_leaves
+        return logits, {"k": nk, "v": nv}
+    nk, nv, nsk, nsv = new_leaves
+    return logits, {"k": nk, "v": nv}, {"k": nsk, "v": nsv}
 
 
 def paged_decode_step(cfg: ArchConfig, params, pool, tables, tokens,
-                      positions):
+                      positions, scales=None, kv_dtype: str = "bf16"):
     """Gather-free paged decode step (the serving O6 kernel path).
 
     Identical layer structure to :func:`decode_step`, but each layer's
@@ -230,17 +251,23 @@ def paged_decode_step(cfg: ArchConfig, params, pool, tables, tokens,
     dense (B, max_seq, ...) view is never materialized; the current
     token's K/V is appended into the active block in place and the
     Pallas kernel streams only the blocks each slot's table references.
+
+    Narrow pools (``scales`` given) re-quantize the slot's active block
+    around the append and return the scales as a third result:
+    (logits, pool, scales).
     """
 
-    def attn_body(layer_params, hn, ck, cv):
+    def attn_body(layer_params, hn, *kvs):
         return attn.paged_decode_attention(
-            layer_params["attn"], hn, {"k": ck, "v": cv}, tables, positions,
+            layer_params["attn"], hn, kvs, tables, positions,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
             qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+            kv_dtype=kv_dtype,
         )
 
-    return _decode_layers(cfg, params, (pool["k"], pool["v"]), tokens,
-                          attn_body)
+    logits, new_leaves = _decode_layers(
+        cfg, params, _paged_leaves(pool, scales), tokens, attn_body)
+    return _paged_result(logits, new_leaves, scales)
 
 
 def prefill_step(cfg: ArchConfig, params, cache, tokens, start, last):
@@ -259,23 +286,26 @@ def prefill_step(cfg: ArchConfig, params, cache, tokens, start, last):
                          max_seq - 1).astype(jnp.int32)
 
     def attn_body(layer_params, hn, ck, cv):
-        return attn.chunk_prefill_attention(
+        a, nc = attn.chunk_prefill_attention(
             layer_params["attn"], hn, {"k": ck, "v": cv}, positions,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
             qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
         )
+        return a, (nc["k"], nc["v"])
 
-    return _decode_layers(cfg, params, (cache["k"], cache["v"]), tokens,
-                          attn_body, last=last)
+    logits, (nk, nv) = _decode_layers(
+        cfg, params, (cache["k"], cache["v"]), tokens, attn_body, last=last)
+    return logits, {"k": nk, "v": nv}
 
 
 def paged_prefill_step(cfg: ArchConfig, params, pool, tables, tokens,
-                       start, last):
+                       start, last, scales=None, kv_dtype: str = "bf16"):
     """Prompt-chunk step straight off the paged block pool: the chunk's
     K/V is scattered into pool blocks through the slot's table and the
     multi-query Pallas kernel attends the whole prefix — the dense view
     is never materialized.  Same signature discipline as
-    :func:`prefill_step` plus the tables."""
+    :func:`prefill_step` plus the tables (and, for narrow pools, the
+    scales: returns (logits, pool, scales))."""
     C = tokens.shape[1]
     T = pool["k"].shape[2]
     nb = tables.shape[1]
@@ -283,16 +313,19 @@ def paged_prefill_step(cfg: ArchConfig, params, pool, tables, tokens,
                          nb * T - 1).astype(jnp.int32)
     lengths = (start + C).astype(jnp.int32)      # unclipped: exact row masks
 
-    def attn_body(layer_params, hn, ck, cv):
+    def attn_body(layer_params, hn, *kvs):
         return attn.paged_chunk_prefill_attention(
-            layer_params["attn"], hn, {"k": ck, "v": cv}, tables,
+            layer_params["attn"], hn, kvs, tables,
             positions, lengths,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
             qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+            kv_dtype=kv_dtype, start=start,
         )
 
-    return _decode_layers(cfg, params, (pool["k"], pool["v"]), tokens,
-                          attn_body, last=last)
+    logits, new_leaves = _decode_layers(
+        cfg, params, _paged_leaves(pool, scales), tokens, attn_body,
+        last=last)
+    return _paged_result(logits, new_leaves, scales)
 
 
 def verify_step(cfg: ArchConfig, params, cache, tokens, start):
@@ -312,24 +345,28 @@ def verify_step(cfg: ArchConfig, params, cache, tokens, start):
                          max_seq - 1).astype(jnp.int32)
 
     def attn_body(layer_params, hn, ck, cv):
-        return attn.chunk_prefill_attention(
+        a, nc = attn.chunk_prefill_attention(
             layer_params["attn"], hn, {"k": ck, "v": cv}, positions,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
             qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
         )
+        return a, (nc["k"], nc["v"])
 
-    return _decode_layers(cfg, params, (cache["k"], cache["v"]), tokens,
-                          attn_body, all_rows=True)
+    logits, (nk, nv) = _decode_layers(
+        cfg, params, (cache["k"], cache["v"]), tokens, attn_body,
+        all_rows=True)
+    return logits, {"k": nk, "v": nv}
 
 
-def paged_verify_step(cfg: ArchConfig, params, pool, tables, tokens, start):
+def paged_verify_step(cfg: ArchConfig, params, pool, tables, tokens, start,
+                      scales=None, kv_dtype: str = "bf16"):
     """Speculative-verify step straight off the paged block pool: the
     window's K/V is scattered into pool blocks through the slot's table
     (writes past the reservation are absorbed by the NULL block) and the
     multi-query Pallas kernel attends the whole prefix.  Same all-rows
     logits contract as :func:`verify_step`; rejected drafts roll back by
     slot-length truncation — the table rows never change, so blocks
-    never leak."""
+    never leak.  Narrow pools return (logits, pool, scales)."""
     C = tokens.shape[1]
     T = pool["k"].shape[2]
     nb = tables.shape[1]
@@ -337,16 +374,19 @@ def paged_verify_step(cfg: ArchConfig, params, pool, tables, tokens, start):
                          nb * T - 1).astype(jnp.int32)
     lengths = (start + C).astype(jnp.int32)      # unclipped: exact row masks
 
-    def attn_body(layer_params, hn, ck, cv):
+    def attn_body(layer_params, hn, *kvs):
         return attn.paged_chunk_prefill_attention(
-            layer_params["attn"], hn, {"k": ck, "v": cv}, tables,
+            layer_params["attn"], hn, kvs, tables,
             positions, lengths,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
             qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+            kv_dtype=kv_dtype, start=start,
         )
 
-    return _decode_layers(cfg, params, (pool["k"], pool["v"]), tokens,
-                          attn_body, all_rows=True)
+    logits, new_leaves = _decode_layers(
+        cfg, params, _paged_leaves(pool, scales), tokens, attn_body,
+        all_rows=True)
+    return _paged_result(logits, new_leaves, scales)
 
 
 # ---------------------------------------------------------------------------

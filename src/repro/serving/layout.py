@@ -79,37 +79,63 @@ def make_fused(model, sample):
     return _fused
 
 
+def _split_cache(cache, quantized):
+    """(pool, scales) from the step's cache argument: narrow pools
+    travel as a ``{"pool", "scale"}`` bundle, wide pools bare."""
+    if quantized:
+        return cache["pool"], cache["scale"]
+    return cache, None
+
+
+def _join_cache(pool, scales, quantized):
+    if quantized:
+        return {"pool": pool, "scale": scales}
+    return pool
+
+
 def make_paged_fused(model, sample, plan, constrain=None):
     """The paged GATHER step: block-table gather -> the SAME
     ``decode_step`` the dense rungs run -> single-block scatter.  The
     dense view the model sees is bit-identical at every unmasked
     position (see ``paged`` docstring), so greedy tokens cannot drift
-    from the contiguous path.
+    from the contiguous path.  Narrow pools (``kv_dtype`` int8/fp8)
+    dequantize inside the gather and re-quantize each slot's active
+    block inside the scatter — tokens then track the dense oracle only
+    up to the dtype's tolerance contract, never bit-exactly.
 
     ``constrain`` (from the sharded placement) re-shards the gathered
     dense view onto the batch axis in-graph, so under a mesh the model
     body runs PE-duplicated while the pool stays block-sharded.
     """
-    def _fused(params, pool, tables, tokens, positions, seeds):
-        dense = plan.gather(pool, tables)
+    quantized = plan.quantized
+
+    def _fused(params, cache, tables, tokens, positions, seeds):
+        pool, scales = _split_cache(cache, quantized)
+        dense = plan.gather(pool, tables, scales)
         if constrain is not None:
             dense = plan.map_batch_axes(dense, constrain)
         logits, new_dense = model.decode_step(
             params, dense, tokens, positions)
         toks = sample(_last_logits(logits), seeds)
+        if quantized:
+            pool, scales = plan.scatter(pool, tables, new_dense,
+                                        positions, scales=scales)
+            return toks, _join_cache(pool, scales, True)
         return toks, plan.scatter(pool, tables, new_dense, positions)
 
     return _fused
 
 
-def make_paged_kernel_fused(model, sample, replicate=None):
+def make_paged_kernel_fused(model, sample, plan, replicate=None):
     """The paged KERNEL step (``paged_attn="kernel"``): the model's
     ``paged_decode_step`` consumes the block pool + tables + positions
     DIRECTLY — the per-tick O(B * max_seq) dense gather/scatter of
     :func:`make_paged_fused` is gone; each layer appends the current
     token's K/V into the active block in place and the block-table-aware
     Pallas kernel streams only the blocks each slot references
-    (O(blocks touched) KV traffic per tick).
+    (O(blocks touched) KV traffic per tick).  Narrow pools thread the
+    per-block scale subtree alongside and the kernel dequantizes each
+    streamed block in place.
 
     ``replicate`` (from a sharded placement): the Pallas kernel is a
     single-device program, so under a BLOCK-axis-sharded pool the step
@@ -118,13 +144,25 @@ def make_paged_kernel_fused(model, sample, replicate=None):
     block axis.  Correct everywhere; whether it *wins* there is the
     autotuner's call, like every best-effort rung.
     """
-    def _fused(params, pool, tables, tokens, positions, seeds):
+    quantized = plan.quantized
+    kv_dtype = plan.kv_dtype
+
+    def _fused(params, cache, tables, tokens, positions, seeds):
+        pool, scales = _split_cache(cache, quantized)
         if replicate is not None:
             pool = jax.tree.map(replicate, pool)
-        logits, new_pool = model.paged_decode_step(
-            params, pool, tables, tokens, positions)
+            if scales is not None:
+                scales = jax.tree.map(replicate, scales)
+        if quantized:
+            logits, new_pool, new_scales = model.paged_decode_step(
+                params, pool, tables, tokens, positions,
+                scales=scales, kv_dtype=kv_dtype)
+        else:
+            logits, new_pool = model.paged_decode_step(
+                params, pool, tables, tokens, positions)
+            new_scales = None
         toks = sample(_last_logits(logits), seeds)
-        return toks, new_pool
+        return toks, _join_cache(new_pool, new_scales, quantized)
 
     return _fused
 
@@ -377,18 +415,31 @@ class PagedLayout(KVLayout):
     Pallas decode kernel straight on the pool.  ``attn_impl`` records
     what :meth:`make_step` actually built — a model without a paged
     decode step (recurrent families) degrades to gather, never fails.
+
+    ``kv_dtype`` selects the pool's STORED dtype
+    (``BestEffortConfig.kv_dtype``): "bf16" stores compute-width blocks
+    (bit-identical ladder contract); "int8"/"fp8" store narrow blocks
+    with per-block absmax scales — the manager's cache becomes a
+    ``{"pool", "scale"}`` bundle the steps split and re-join, and the
+    rung's contract relaxes to the dtype's tolerance contract
+    (``serving.kvquant.tolerance_contract``).
     """
 
     name = "paged"
     supports_step_fn = False
 
-    def __init__(self, paged_attn: str = "gather"):
+    def __init__(self, paged_attn: str = "gather",
+                 kv_dtype: str = "bf16"):
+        from repro.serving import kvquant
         if paged_attn not in ("gather", "kernel"):
             raise ValueError(
                 f"paged_attn must be 'gather' or 'kernel' "
                 f"(got {paged_attn!r})")
+        kvquant.validate_kv_dtype(kv_dtype)
         self.paged_attn = paged_attn
         self.attn_impl = paged_attn      # updated by make_step
+        self.kv_dtype = kv_dtype
+        self.quantized = kvquant.is_quantized(kv_dtype)
 
     def build_manager(self, model, batch_size, max_seq,
                       config: BestEffortConfig, placement):
@@ -396,7 +447,8 @@ class PagedLayout(KVLayout):
             model, batch_size, max_seq,
             block_size=config.kv_block_size,
             pool_blocks=config.kv_pool_blocks,
-            placement=placement)
+            placement=placement,
+            kv_dtype=self.kv_dtype)
 
     def wire_scheduler(self, scheduler, manager) -> None:
         # The scheduler drives the block lifecycle: admission is gated
@@ -419,7 +471,7 @@ class PagedLayout(KVLayout):
         sample = make_sampler(sampler_cfg)
         if use_kernel:
             fused = make_paged_kernel_fused(
-                model, sample,
+                model, sample, manager.plan,
                 replicate=placement.constrain_replicated
                 if placement.sharded else None)
         else:
@@ -455,24 +507,41 @@ class PagedLayout(KVLayout):
             return None
         sample = make_sampler(sampler_cfg)
         plan = manager.plan
+        quantized = plan.quantized
+        kv_dtype = plan.kv_dtype
         use_kernel = (self.attn_impl == "kernel"
                       and model.paged_prefill_step is not None)
         if use_kernel:
-            def _prefill(params, pool, tables, islot, tokens, start, last,
+            def _prefill(params, cache, tables, islot, tokens, start, last,
                          seeds):
+                pool, scales = _split_cache(cache, quantized)
                 row = jax.lax.dynamic_slice_in_dim(tables, islot, 1,
                                                    axis=0)
-                logits, new_pool = model.paged_prefill_step(
-                    params, pool, row, tokens, start, last)
-                return sample(logits, seeds)[0], new_pool
+                if quantized:
+                    logits, new_pool, new_scales = model.paged_prefill_step(
+                        params, pool, row, tokens, start, last,
+                        scales=scales, kv_dtype=kv_dtype)
+                else:
+                    logits, new_pool = model.paged_prefill_step(
+                        params, pool, row, tokens, start, last)
+                    new_scales = None
+                return (sample(logits, seeds)[0],
+                        _join_cache(new_pool, new_scales, quantized))
         else:
-            def _prefill(params, pool, tables, islot, tokens, start, last,
+            def _prefill(params, cache, tables, islot, tokens, start, last,
                          seeds):
+                pool, scales = _split_cache(cache, quantized)
                 row = jax.lax.dynamic_slice_in_dim(tables, islot, 1,
                                                    axis=0)
-                dense = plan.gather(pool, row)
+                dense = plan.gather(pool, row, scales)
                 logits, new_dense = model.prefill_step(
                     params, dense, tokens, start, last)
+                if quantized:
+                    new_pool, new_scales = plan.scatter_view(
+                        pool, row, new_dense, scales=scales,
+                        lengths=start + tokens.shape[1])
+                    return (sample(logits, seeds)[0],
+                            _join_cache(new_pool, new_scales, True))
                 new_pool = plan.scatter_view(pool, row, new_dense)
                 return sample(logits, seeds)[0], new_pool
         return jax.jit(_prefill, donate_argnums=(1,))
@@ -497,24 +566,44 @@ class PagedLayout(KVLayout):
             return None
         sample = make_sampler(sampler_cfg)
         plan = manager.plan
+        quantized = plan.quantized
+        kv_dtype = plan.kv_dtype
         use_kernel = (self.attn_impl == "kernel"
                       and model.paged_verify_step is not None)
         if use_kernel:
-            def _verify(params, pool, tables, tokens, start):
+            def _verify(params, cache, tables, tokens, start):
+                pool, scales = _split_cache(cache, quantized)
                 if placement.sharded:
                     pool = jax.tree.map(placement.constrain_replicated,
                                         pool)
-                logits, new_pool = model.paged_verify_step(
-                    params, pool, tables, tokens, start)
-                return sample(logits, None), new_pool
+                    if scales is not None:
+                        scales = jax.tree.map(
+                            placement.constrain_replicated, scales)
+                if quantized:
+                    logits, new_pool, new_scales = model.paged_verify_step(
+                        params, pool, tables, tokens, start,
+                        scales=scales, kv_dtype=kv_dtype)
+                else:
+                    logits, new_pool = model.paged_verify_step(
+                        params, pool, tables, tokens, start)
+                    new_scales = None
+                return (sample(logits, None),
+                        _join_cache(new_pool, new_scales, quantized))
         else:
-            def _verify(params, pool, tables, tokens, start):
-                dense = plan.gather(pool, tables)
+            def _verify(params, cache, tables, tokens, start):
+                pool, scales = _split_cache(cache, quantized)
+                dense = plan.gather(pool, tables, scales)
                 if placement.sharded:
                     dense = plan.map_batch_axes(dense,
                                                 placement.constrain_axis)
                 logits, new_dense = model.verify_step(params, dense,
                                                       tokens, start)
+                if quantized:
+                    new_pool, new_scales = plan.scatter_view(
+                        pool, tables, new_dense, scales=scales,
+                        lengths=start + tokens.shape[1])
+                    return (sample(logits, None),
+                            _join_cache(new_pool, new_scales, True))
                 new_pool = plan.scatter_view(pool, tables, new_dense)
                 return sample(logits, None), new_pool
         if not placement.sharded:
@@ -530,5 +619,6 @@ class PagedLayout(KVLayout):
 
 def select_layout(config: BestEffortConfig) -> KVLayout:
     """The layout axis of the config, as a strategy object."""
-    return PagedLayout(config.paged_attn) if config.kv_layout == "paged" \
-        else ContiguousLayout()
+    if config.kv_layout == "paged":
+        return PagedLayout(config.paged_attn, kv_dtype=config.kv_dtype)
+    return ContiguousLayout()

@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import kvquant
+
 NULL_BLOCK = 0
 
 
@@ -277,11 +279,14 @@ class BlockPagingPlan:
 
     def __init__(self, model, batch_size: int, max_seq: int,
                  block_size: int, pool_blocks: int, *,
-                 row_multiple: int = 1):
+                 row_multiple: int = 1, kv_dtype: str = "bf16"):
         self.B = batch_size
         self.max_seq = max_seq
         self.T = block_size
         self.nb = blocks_for(max_seq, block_size)
+        self.kv_dtype = kvquant.validate_kv_dtype(kv_dtype)
+        self.quantized = kvquant.is_quantized(kv_dtype)
+        self.store_dtype = kvquant.pool_dtype(kv_dtype)
         # + NULL block row; rounded up so a block-axis PlacementPlan can
         # shard the rows evenly (padding rows are never in any table, so
         # gather/scatter never touch them — pure dead memory).
@@ -293,27 +298,53 @@ class BlockPagingPlan:
         assert [ax for _, ax in paths_axes] == axes_flat, "leaf-order drift"
         specs = jax.tree.leaves(model.cache_spec(batch_size, max_seq))
         assert len(paths_axes) == len(specs), "cache axes drift"
-        self.plans = []          # (bax, paged) per leaf
-        self.token_bytes = 0     # paged-leaf bytes per token position
+        self.plans = []           # (bax, paged) per leaf
+        self.scale_axes = []      # per leaf: scale reduce-axes or None
+        self.compute_dtypes = []  # per leaf: the dense/compute dtype
+        # Bytes-per-token accounting derives from the STORED pool dtype
+        # (1 byte for int8/fp8), not the compute dtype — the `KV
+        # bytes/tick` ladder column is about traffic actually moved.
+        self.token_bytes = 0          # paged-leaf STORED bytes per token
+        self.compute_token_bytes = 0  # dense-view bytes per token (bf16)
+        self.scale_bytes_per_block = 0  # f32 scale bytes per pool row
         for (path, ax), spec in zip(paths_axes, specs):
             bax = ax.index("batch")
             cross = any("cross" in str(k) for k in path)
             paged = ("kv_seq" in ax and not cross
                      and spec.shape[ax.index("kv_seq")] == max_seq)
+            sx = None
             if paged:
                 assert ax.index("kv_seq") == bax + 1, (
                     f"paged leaf needs seq right after batch, got {ax}")
                 n = 1
                 for d in spec.shape:
                     n *= d
-                self.token_bytes += (n // (batch_size * max_seq)
-                                     * jnp.dtype(spec.dtype).itemsize)
+                per_tok = n // (batch_size * max_seq)
+                item = jnp.dtype(spec.dtype).itemsize
+                self.compute_token_bytes += per_tok * item
+                self.token_bytes += per_tok * (
+                    jnp.dtype(self.store_dtype).itemsize
+                    if self.quantized else item)
+                if self.quantized:
+                    # One f32 scale per (block row x every named axis
+                    # that isn't the sequence): reduce the block's token
+                    # axis and the unnamed head-dim axes, keep layers /
+                    # kv heads.
+                    sx = tuple(i for i, name in enumerate(ax)
+                               if name == "kv_seq" or name is None)
+                    scale_elems = 1
+                    for i, d in enumerate(spec.shape):
+                        if i != bax and i not in sx:
+                            scale_elems *= d
+                    self.scale_bytes_per_block += scale_elems * 4
             self.plans.append((bax, paged))
+            self.scale_axes.append(sx)
+            self.compute_dtypes.append(spec.dtype)
 
     def init_pool(self, model) -> tuple:
         """(pool tree, treedef): paged leaves become
-        (..., pool_rows, block_size, ...) zeros; recurrent leaves keep
-        their contiguous per-slot shape."""
+        (..., pool_rows, block_size, ...) zeros in the STORED dtype;
+        recurrent leaves keep their contiguous per-slot shape."""
         dense = model.init_cache(self.B, self.max_seq)
         leaves, treedef = jax.tree.flatten(dense)
         out = []
@@ -324,33 +355,78 @@ class BlockPagingPlan:
             shape = list(leaf.shape)
             shape[bax] = self.pool_rows
             shape[bax + 1] = self.T
-            out.append(jnp.zeros(tuple(shape), leaf.dtype))
+            dt = self.store_dtype if self.quantized else leaf.dtype
+            out.append(jnp.zeros(tuple(shape), dt))
         return jax.tree.unflatten(treedef, out), treedef
+
+    def scales_for_pool(self, pool):
+        """Zero-initialized scale tree matching the pool treedef: paged
+        leaves get their keepdims (..., pool_rows, 1, kv, 1) f32 scale
+        array (zeros: an unwritten block dequantizes to exactly 0, like
+        the zero bf16 pool); non-paged leaves get a scalar placeholder
+        so the scale tree zips leaf-for-leaf with the pool tree."""
+        leaves, treedef = jax.tree.flatten(pool)
+        out = []
+        for leaf, (bax, paged), sx in zip(leaves, self.plans,
+                                          self.scale_axes):
+            if sx is None:
+                out.append(jnp.zeros((), jnp.float32))
+                continue
+            shape = tuple(1 if i in sx else d
+                          for i, d in enumerate(leaf.shape))
+            out.append(jnp.zeros(shape, jnp.float32))
+        return jax.tree.unflatten(treedef, out)
 
     @property
     def geometry(self) -> dict:
-        """Pool geometry for kernels / benchmarks / bytes accounting."""
+        """Pool geometry for kernels / benchmarks / bytes accounting.
+        ``pool_bytes`` counts the whole persistent footprint: stored
+        block rows PLUS the per-block scale metadata."""
+        pool_bytes = self.pool_rows * (self.T * self.token_bytes
+                                       + self.scale_bytes_per_block)
         return {"block_size": self.T, "blocks_per_seq": self.nb,
                 "pool_rows": self.pool_rows, "batch": self.B,
-                "max_seq": self.max_seq, "token_bytes": self.token_bytes}
+                "max_seq": self.max_seq, "token_bytes": self.token_bytes,
+                "kv_dtype": self.kv_dtype,
+                "scale_bytes_per_block": self.scale_bytes_per_block,
+                "pool_bytes": pool_bytes,
+                "pool_mb": pool_bytes / 2**20}
 
     # -- per-tick KV traffic estimates (the gather-vs-kernel delta) ----------
     def gather_bytes_per_tick(self) -> int:
-        """KV bytes the GATHER step moves per decode tick: the dense
-        (B, nb*T) view is materialized from the pool (read + write),
-        read again by dense attention, and one block per slot scattered
-        back — O(B * max_seq) no matter how short the live requests."""
-        dense = self.B * self.nb * self.T * self.token_bytes
-        return 3 * dense + self.B * self.T * self.token_bytes
+        """KV bytes the GATHER step moves per decode tick: the pool is
+        read in its STORED dtype (plus per-block scales when narrow),
+        the dense compute-dtype view is written then read again by dense
+        attention, and one block per slot is quantized and scattered
+        back — O(B * max_seq) no matter how short the live requests.
+        For ``kv_dtype=bf16`` this reduces exactly to the historical
+        ``3 * dense + B * T * token_bytes``."""
+        pool_read = self.B * self.nb * (self.T * self.token_bytes
+                                        + self.scale_bytes_per_block)
+        dense = self.B * self.nb * self.T * self.compute_token_bytes
+        writeback = self.B * (self.T * self.token_bytes
+                              + self.scale_bytes_per_block)
+        return pool_read + 2 * dense + writeback
 
     def kernel_bytes_per_tick(self, lengths) -> int:
         """KV bytes the gather-free KERNEL step touches for the given
         per-slot valid lengths: only the blocks each slot's table
-        references (streamed once), plus the one-position in-place
-        append per slot — O(blocks touched)."""
+        references (streamed once, in the STORED dtype plus their
+        scales), plus the per-slot append — one stored position for
+        bf16; for narrow pools the append re-quantizes the tail block
+        in place (read + write of one block row and its scale).
+        For ``kv_dtype=bf16`` this reduces exactly to the historical
+        ``(blocks * T + len(lengths)) * token_bytes``."""
         lengths = [int(x) for x in lengths]
         blocks = sum(blocks_for(x, self.T) for x in lengths)
-        return (blocks * self.T + len(lengths)) * self.token_bytes
+        stream = blocks * (self.T * self.token_bytes
+                           + self.scale_bytes_per_block)
+        if self.quantized:
+            append = len(lengths) * 2 * (self.T * self.token_bytes
+                                         + self.scale_bytes_per_block)
+        else:
+            append = len(lengths) * self.token_bytes
+        return stream + append
 
     def map_batch_axes(self, dense, fn):
         """Apply ``fn(leaf, batch_axis)`` to every leaf of a DENSE
@@ -361,72 +437,139 @@ class BlockPagingPlan:
             fn(leaf, bax) for leaf, (bax, _) in zip(leaves, self.plans)])
 
     # Both halves below are traced inside the jitted decode step.
-    def gather(self, pool, tables):
+    def gather(self, pool, tables, scales=None):
         """pool tree + tables (Bv, nb) -> dense per-slot cache view with
         a (possibly block-padded) sequence axis of nb*T >= max_seq.  Bv
         is usually the full batch; the chunked-prefill step passes one
-        slot's table row (Bv == 1) to build a single-slot view."""
+        slot's table row (Bv == 1) to build a single-slot view.
+
+        With ``scales`` (narrow pools), each gathered block is
+        dequantized — ``kvquant.dequantize`` is THE shared rounding
+        site, so this dense view is bit-identical to what the
+        block-table kernel computes per streamed block."""
         Bv = tables.shape[0]
         leaves, treedef = jax.tree.flatten(pool)
+        scale_leaves = (jax.tree.leaves(scales) if scales is not None
+                        else [None] * len(leaves))
         flat = tables.reshape(-1)                     # (Bv*nb,)
         out = []
-        for leaf, (bax, paged) in zip(leaves, self.plans):
+        for leaf, sleaf, (bax, paged), cdt in zip(
+                leaves, scale_leaves, self.plans, self.compute_dtypes):
             if not paged:
                 out.append(leaf)
                 continue
             g = jnp.take(leaf, flat, axis=bax)        # bax: Bv*nb, bax+1: T
+            if scales is not None:
+                s = jnp.take(sleaf, flat, axis=bax)
+                g = kvquant.dequantize(g, s, cdt)
             shape = (g.shape[:bax] + (Bv, self.nb * self.T)
                      + g.shape[bax + 2:])
             out.append(g.reshape(shape))
         return jax.tree.unflatten(treedef, out)
 
-    def scatter_view(self, pool, tables, new_dense):
+    def scatter_view(self, pool, tables, new_dense, scales=None,
+                     lengths=None):
         """Write back EVERY block of the given slots' dense views — the
         chunked-prefill counterpart of :meth:`scatter` (a prompt chunk
         spans several blocks, so the whole per-slot view gathered this
         same tick is scattered back).  Untouched blocks rewrite their own
         just-gathered values and NULL table entries absorb the padded
-        tail into the write-garbage NULL row."""
+        tail into the write-garbage NULL row.
+
+        Narrow pools (``scales`` given) quantize each folded block with
+        a fresh absmax scale; ``lengths`` (Bv,) masks positions at or
+        beyond each slot's valid length to zero first, so stale-tenant
+        garbage in the just-gathered view can never inflate a scale.
+        Returns ``(pool, scales)`` in that mode, ``pool`` otherwise."""
         Bv, nb = tables.shape
         pool_leaves, treedef = jax.tree.flatten(pool)
+        scale_leaves = (jax.tree.leaves(scales) if scales is not None
+                        else [None] * len(pool_leaves))
         dense_leaves = jax.tree.leaves(new_dense)
-        out = []
-        for leaf, dense, (bax, paged) in zip(pool_leaves, dense_leaves,
-                                             self.plans):
+        valid = None
+        if scales is not None and lengths is not None:
+            valid = (jnp.arange(nb * self.T)[None, :]
+                     < lengths[:, None]).reshape(Bv * nb, self.T)
+        out, out_s = [], []
+        for leaf, sleaf, dense, (bax, paged), sx in zip(
+                pool_leaves, scale_leaves, dense_leaves, self.plans,
+                self.scale_axes):
             if not paged:
                 out.append(dense)                     # whole-state replace
+                out_s.append(sleaf)
                 continue
             shape = (dense.shape[:bax] + (Bv * nb, self.T)
                      + dense.shape[bax + 2:])
+            folded = dense.reshape(shape)
             sel = (slice(None),) * bax + (tables.reshape(-1),)
-            out.append(leaf.at[sel].set(dense.reshape(shape)))
-        return jax.tree.unflatten(treedef, out)
+            if scales is None:
+                out.append(leaf.at[sel].set(folded))
+                out_s.append(sleaf)
+                continue
+            if valid is not None:
+                vm = valid.reshape((1,) * bax + valid.shape
+                                   + (1,) * (folded.ndim - bax - 2))
+                folded = jnp.where(vm, folded, 0)
+            s = kvquant.block_scale(folded, sx, self.kv_dtype)
+            q = kvquant.quantize(folded, s, self.kv_dtype)
+            out.append(leaf.at[sel].set(q))
+            out_s.append(sleaf.at[sel].set(s))
+        new_pool = jax.tree.unflatten(treedef, out)
+        if scales is None:
+            return new_pool
+        return new_pool, jax.tree.unflatten(treedef, out_s)
 
-    def scatter(self, pool, tables, new_dense, positions):
+    def scatter(self, pool, tables, new_dense, positions, scales=None):
         """Write back the ONE block each slot touched this tick.
 
         A decode tick writes exactly position ``positions[b]`` per slot,
         so only logical block ``positions[b] // T`` changed; the other
         nb-1 blocks still hold what the pool holds.  Inactive slots point
         at the NULL block, which absorbs their garbage chunk.
-        """
+
+        Narrow pools (``scales`` given) mask positions beyond
+        ``positions[b]`` to zero (not-yet-written garbage must not
+        inflate the absmax), re-derive the block's scale, quantize, and
+        write both the block row and its scale row; returns
+        ``(pool, scales)`` in that mode, ``pool`` otherwise.  bf16 pools
+        deliberately skip the masking so the write-back is the exact
+        gathered bits (the round-trip test pins pool rows
+        bit-identical)."""
         jb = positions // self.T                      # (B,) logical block
         pb = jnp.take_along_axis(tables, jb[:, None], axis=1)[:, 0]
         seq_idx = (jb * self.T)[:, None] + jnp.arange(self.T)[None]  # (B, T)
+        valid = seq_idx <= positions[:, None]                        # (B, T)
         pool_leaves, treedef = jax.tree.flatten(pool)
+        scale_leaves = (jax.tree.leaves(scales) if scales is not None
+                        else [None] * len(pool_leaves))
         dense_leaves = jax.tree.leaves(new_dense)
-        out = []
-        for leaf, dense, (bax, paged) in zip(pool_leaves, dense_leaves,
-                                             self.plans):
+        out, out_s = [], []
+        for leaf, sleaf, dense, (bax, paged), sx in zip(
+                pool_leaves, scale_leaves, dense_leaves, self.plans,
+                self.scale_axes):
             if not paged:
                 out.append(dense)                     # whole-state replace
+                out_s.append(sleaf)
                 continue
             idx = seq_idx.reshape(
                 (1,) * bax + seq_idx.shape + (1,) * (dense.ndim - bax - 2))
             chunk = jnp.take_along_axis(dense, idx, axis=bax + 1)
             sel = (slice(None),) * bax + (pb,)
-            out.append(leaf.at[sel].set(chunk))
-        return jax.tree.unflatten(treedef, out)
+            if scales is None:
+                out.append(leaf.at[sel].set(chunk))
+                out_s.append(sleaf)
+                continue
+            vm = valid.reshape(
+                (1,) * bax + valid.shape + (1,) * (chunk.ndim - bax - 2))
+            chunk = jnp.where(vm, chunk, 0)
+            s = kvquant.block_scale(chunk, sx, self.kv_dtype)
+            q = kvquant.quantize(chunk, s, self.kv_dtype)
+            out.append(leaf.at[sel].set(q))
+            out_s.append(sleaf.at[sel].set(s))
+        new_pool = jax.tree.unflatten(treedef, out)
+        if scales is None:
+            return new_pool
+        return new_pool, jax.tree.unflatten(treedef, out_s)
 
 
 class PagedCacheManager(PagedAllocator):
@@ -449,20 +592,44 @@ class PagedCacheManager(PagedAllocator):
 
     def __init__(self, model, batch_size: int, max_seq: int, *,
                  block_size: int = 16, pool_blocks: int = 0,
-                 defrag: bool = False, placement=None):
+                 defrag: bool = False, placement=None,
+                 kv_dtype: str = "bf16"):
         super().__init__(batch_size, max_seq, block_size=block_size,
                          pool_blocks=pool_blocks, defrag=defrag)
         self.model = model
         self.placement = placement
         self.plan = BlockPagingPlan(
             model, batch_size, max_seq, self.block_size, self.pool_blocks,
-            row_multiple=placement.n_devices if placement is not None else 1)
-        self.cache, self._treedef = self.plan.init_pool(model)
+            row_multiple=placement.n_devices if placement is not None else 1,
+            kv_dtype=kv_dtype)
+        pool, self._treedef = self.plan.init_pool(model)
+        # Narrow pools carry their per-block scales as a sibling subtree
+        # of the SAME treedef: ``.cache`` becomes {"pool", "scale"} and
+        # the engine threads the bundle opaquely (it is just a pytree).
+        if self.plan.quantized:
+            self.cache = {"pool": pool,
+                          "scale": self.plan.scales_for_pool(pool)}
+        else:
+            self.cache = pool
         if placement is not None and placement.sharded:
             self.cache = jax.device_put(self.cache,
                                         self.pool_shardings(placement))
         self._state_zero = None
         self._tables_dev = None     # cached device copy of the tables
+
+    @property
+    def kv_dtype(self) -> str:
+        return self.plan.kv_dtype
+
+    def _split_cache(self):
+        """(pool tree, scale tree-or-None) view of ``.cache``."""
+        if self.plan.quantized:
+            return self.cache["pool"], self.cache["scale"]
+        return self.cache, None
+
+    def _join_cache(self, pool, scales) -> None:
+        self.cache = ({"pool": pool, "scale": scales}
+                      if self.plan.quantized else pool)
 
     # -- step inputs ---------------------------------------------------------
     @property
@@ -476,11 +643,18 @@ class PagedCacheManager(PagedAllocator):
     def pool_shardings(self, placement):
         """Sharding tree for the pool: every leaf sharded at its plan
         axis — the pool-row axis for paged leaves, the batch axis for
-        recurrent-state leaves (both sit at ``bax``)."""
-        leaves = jax.tree.leaves(self.cache)
-        return jax.tree.unflatten(self._treedef, [
-            placement.axis(bax)
-            for _leaf, (bax, _p) in zip(leaves, self.plan.plans)])
+        recurrent-state leaves (both sit at ``bax``).  Scale leaves
+        shard on the same pool-row axis (their other dims are keepdims
+        1s); the scalar placeholders stay replicated."""
+        pool_sh = jax.tree.unflatten(self._treedef, [
+            placement.axis(bax) for bax, _p in self.plan.plans])
+        if not self.plan.quantized:
+            return pool_sh
+        scale_sh = jax.tree.unflatten(self._treedef, [
+            placement.axis(bax) if sx is not None else placement.replicated
+            for (bax, _p), sx in zip(self.plan.plans,
+                                     self.plan.scale_axes)])
+        return {"pool": pool_sh, "scale": scale_sh}
 
     def step_extras(self) -> tuple:
         """Per-tick step inputs beyond (params, cache, tokens, positions,
@@ -529,8 +703,9 @@ class PagedCacheManager(PagedAllocator):
             self._state_zero = make_packed_zero(
                 [bax for bax, _ in self.plan.plans],
                 skip=[paged for _, paged in self.plan.plans])
-        self.cache = self._state_zero(
-            self.cache, jnp.asarray(indices, jnp.int32))
+        pool, scales = self._split_cache()
+        pool = self._state_zero(pool, jnp.asarray(indices, jnp.int32))
+        self._join_cache(pool, scales)
 
     def insert_slot(self, i: int, state) -> None:
         """Install an externally prefilled batch-1 DENSE cache tree into
@@ -540,20 +715,30 @@ class PagedCacheManager(PagedAllocator):
         through slot ``i``'s block table — ``place``/``admit`` rebuilt
         the table before this runs, and NULL entries past the reservation
         absorb the padded tail into the write-garbage NULL row.
-        Recurrent-state leaves copy the batch-1 slice over slot ``i``."""
+        Recurrent-state leaves copy the batch-1 slice over slot ``i``.
+
+        Narrow pools quantize each folded block with a fresh absmax
+        scale (the dense prefill state is zero past the prompt, so no
+        masking is needed) and install the scales alongside."""
         nb, T = self.plan.nb, self.plan.T
         row = jnp.asarray(self.tables[i], jnp.int32)        # (nb,)
-        leaves, treedef = jax.tree.flatten(self.cache)
+        pool, scales = self._split_cache()
+        leaves, treedef = jax.tree.flatten(pool)
+        scale_leaves = (jax.tree.leaves(scales) if scales is not None
+                        else [None] * len(leaves))
         st_leaves = jax.tree.leaves(state)
         assert len(leaves) == len(st_leaves), "prefill state tree drift"
-        out = []
-        for leaf, st, (bax, paged) in zip(leaves, st_leaves,
-                                          self.plan.plans):
-            st0 = jnp.take(st, 0, axis=bax).astype(leaf.dtype)
+        out, out_s = [], []
+        for leaf, sleaf, st, (bax, paged), sx in zip(
+                leaves, scale_leaves, st_leaves, self.plan.plans,
+                self.plan.scale_axes):
             if not paged:
+                st0 = jnp.take(st, 0, axis=bax).astype(leaf.dtype)
                 sel = (slice(None),) * bax + (i,)
                 out.append(leaf.at[sel].set(st0))
+                out_s.append(sleaf)
                 continue
+            st0 = jnp.take(st, 0, axis=bax)
             pad = nb * T - st0.shape[bax]         # seq axis now at bax
             if pad:
                 widths = [(0, 0)] * st0.ndim
@@ -562,8 +747,17 @@ class PagedCacheManager(PagedAllocator):
             folded = st0.reshape(
                 st0.shape[:bax] + (nb, T) + st0.shape[bax + 1:])
             sel = (slice(None),) * bax + (row,)
-            out.append(leaf.at[sel].set(folded))
-        self.cache = jax.tree.unflatten(treedef, out)
+            if scales is None:
+                out.append(leaf.at[sel].set(folded.astype(leaf.dtype)))
+                out_s.append(sleaf)
+                continue
+            s = kvquant.block_scale(folded, sx, self.plan.kv_dtype)
+            q = kvquant.quantize(folded, s, self.plan.kv_dtype)
+            out.append(leaf.at[sel].set(q))
+            out_s.append(sleaf.at[sel].set(s))
+        new_scales = (jax.tree.unflatten(treedef, out_s)
+                      if scales is not None else None)
+        self._join_cache(jax.tree.unflatten(treedef, out), new_scales)
         self._tables_dev = None
 
     def compact(self) -> None:
@@ -580,16 +774,25 @@ class PagedCacheManager(PagedAllocator):
             return
         src = jnp.asarray(list(moves.keys()), jnp.int32)
         dst = jnp.asarray(list(moves.values()), jnp.int32)
-        leaves = jax.tree.leaves(self.cache)
-        out = []
-        for leaf, (bax, paged) in zip(leaves, self.plan.plans):
-            if not paged:
-                out.append(leaf)
-                continue
-            sel_src = (slice(None),) * bax + (src,)
-            sel_dst = (slice(None),) * bax + (dst,)
-            out.append(leaf.at[sel_dst].set(leaf[sel_src]))
-        self.cache = jax.tree.unflatten(self._treedef, out)
+        pool, scales = self._split_cache()
+
+        def move_rows(tree):
+            # relocate pool rows; scale rows ride along (same bax), and
+            # non-paged leaves / scalar placeholders are left alone.
+            leaves, moved = jax.tree.leaves(tree), []
+            for leaf, (bax, paged) in zip(leaves, self.plan.plans):
+                if not paged or leaf.ndim == 0:
+                    moved.append(leaf)
+                    continue
+                sel_src = (slice(None),) * bax + (src,)
+                sel_dst = (slice(None),) * bax + (dst,)
+                moved.append(leaf.at[sel_dst].set(leaf[sel_src]))
+            return jax.tree.unflatten(self._treedef, moved)
+
+        pool = move_rows(pool)
+        if scales is not None:
+            scales = move_rows(scales)
+        self._join_cache(pool, scales)
         remap = np.vectorize(lambda b: moves.get(int(b), int(b)))
         self.tables = remap(self.tables).astype(np.int32)
         self.allocator.rebuild(len(held))

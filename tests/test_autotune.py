@@ -208,7 +208,8 @@ def test_serving_backend_measures_paged_attn_by_race():
     in meta — the AutoDSE keep-only-when-it-wins rule applied to the
     attention implementation knob."""
     b = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
-                       max_new=3, repeats=1, kv_block_size=4)
+                       max_new=3, repeats=1, kv_block_size=4,
+                       kv_dtype="bf16")
     m = b.measure(OptLevel.O6)
     walls = m.meta["paged_attn_walls"]
     assert set(walls) == {"gather", "kernel"}
@@ -234,7 +235,7 @@ def test_serving_backend_measures_paged_attn_by_race():
     # pinning the knob skips the race but still records the impl
     bk = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
                         max_new=3, repeats=1, kv_block_size=4,
-                        paged_attn="kernel")
+                        paged_attn="kernel", kv_dtype="bf16")
     mk = bk.measure(OptLevel.O6)
     assert mk.meta["paged_attn"] == "kernel"
     assert list(mk.meta["paged_attn_walls"]) == ["kernel"]
@@ -244,10 +245,56 @@ def test_serving_backend_measures_paged_attn_by_race():
     # to gather — and the walls record what actually ran, not the request
     br = ServingBackend("rwkv6-3b", batch_size=2, max_seq=16, n_requests=2,
                         max_new=3, repeats=1, kv_block_size=4,
-                        paged_attn="kernel")
+                        paged_attn="kernel", kv_dtype="bf16")
     mr = br.measure(OptLevel.O6)
     assert mr.meta["paged_attn"] == "gather"
     assert list(mr.meta["paged_attn_walls"]) == ["gather"]
+
+
+def test_serving_backend_races_kv_dtype():
+    """At the paged rung ``kv_dtype="auto"`` races the chosen bf16
+    engine against an int8 twin holding EQUAL pool bytes (the saved
+    token bytes buy extra blocks); narrow displaces bf16 only beyond
+    the 1% noise floor, and meta records both walls plus the measured
+    token agreement, which must clear the int8 tolerance contract."""
+    from repro.serving.kvquant import tolerance_contract
+
+    b = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
+                       max_new=3, repeats=1, kv_block_size=4,
+                       paged_attn="gather", prefill_chunk=0)
+    m = b.measure(OptLevel.O6)
+    walls = m.meta["kv_dtype_walls"]
+    assert set(walls) == {"bf16", "int8"}
+    assert all(w > 0 for w in walls.values())
+    assert m.meta["kv_agreement"] >= tolerance_contract("int8")[
+        "min_agreement"]
+    # the winner rule: narrow only displaces bf16 beyond the 1% floor,
+    # and total_s is always the shipped engine's wall
+    if walls["int8"] < 0.99 * walls["bf16"]:
+        assert m.meta["kv_dtype"] == "int8"
+        assert m.total_s == walls["int8"]
+    else:
+        assert m.meta["kv_dtype"] == "bf16"
+        assert m.total_s == walls["bf16"]
+
+    # below the paged rung there is no pool, hence no race
+    m5 = b.measure(OptLevel.O5)
+    assert "kv_dtype_walls" not in m5.meta
+    assert m5.meta["kv_dtype"] == "bf16"
+
+    # pinning int8 skips the keep-decision (narrow always ships) but
+    # still measures and records both walls
+    bq = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
+                        max_new=3, repeats=1, kv_block_size=4,
+                        paged_attn="gather", prefill_chunk=0,
+                        kv_dtype="int8")
+    mq = bq.measure(OptLevel.O6)
+    assert mq.meta["kv_dtype"] == "int8"
+    assert set(mq.meta["kv_dtype_walls"]) == {"bf16", "int8"}
+    assert mq.total_s == mq.meta["kv_dtype_walls"]["int8"]
+
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServingBackend("qwen3-8b", kv_dtype="int4")
 
 
 @pytest.mark.slow
@@ -259,7 +306,7 @@ def test_serving_ladder_walk_identical_tokens():
     round)."""
     b = ServingBackend("qwen3-8b", batch_size=2, max_seq=24, n_requests=4,
                        max_new=4, repeats=1, kv_block_size=8,
-                       kv_pool_blocks=5, draft_k=4)
+                       kv_pool_blocks=5, draft_k=4, kv_dtype="bf16")
     res = autotune(b, ladder=True)
     assert res.mode == "ladder" and not res.rejected
     assert [r.label for r in res.rounds] == [f"O{i}" for i in range(8)]
@@ -278,7 +325,8 @@ def test_serving_backend_races_draft_k():
     the chosen engine's acceptance telemetry."""
     b = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
                        max_new=3, repeats=1, kv_block_size=4,
-                       paged_attn="gather", prefill_chunk=0)
+                       paged_attn="gather", prefill_chunk=0,
+                       kv_dtype="bf16")
     m = b.measure(OptLevel.O7)
     walls = m.meta["draft_k_walls"]
     assert set(walls) == {0, 2, 4, 8}
@@ -298,7 +346,8 @@ def test_serving_backend_races_draft_k():
     # pinning draft_k=0 disables the race (and speculation) entirely
     b0 = ServingBackend("qwen3-8b", batch_size=2, max_seq=16, n_requests=3,
                         max_new=3, repeats=1, kv_block_size=4,
-                        paged_attn="gather", prefill_chunk=0, draft_k=0)
+                        paged_attn="gather", prefill_chunk=0, draft_k=0,
+                        kv_dtype="bf16")
     m0 = b0.measure(OptLevel.O7)
     assert "draft_k_walls" not in m0.meta
     assert m0.meta["spec_mode"] == "off" and m0.meta["draft_k"] == 0
@@ -307,7 +356,8 @@ def test_serving_backend_races_draft_k():
     # a family whose model cannot verify (no multi-token step) degrades
     # to plain decode — no race, no walls, spec_mode says so
     br = ServingBackend("rwkv6-3b", batch_size=2, max_seq=16, n_requests=2,
-                        max_new=3, repeats=1, kv_block_size=4)
+                        max_new=3, repeats=1, kv_block_size=4,
+                        kv_dtype="bf16")
     mr = br.measure(OptLevel.O7)
     assert "draft_k_walls" not in mr.meta
     assert mr.meta["spec_mode"] == "off"

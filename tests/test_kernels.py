@@ -214,6 +214,38 @@ def test_paged_attention_bf16():
                                rtol=0.06, atol=0.03)
 
 
+@pytest.mark.parametrize("kvd", ["int8", "fp8"])
+def test_paged_attention_quantized_matches_dequantized_pool(kvd):
+    """A narrow pool + (rows, KV) scale operands: the kernel's in-stream
+    dequant applies the SAME expression the gather path uses on its
+    dense view, so the output must be bitwise identical to calling the
+    kernel on the explicitly pre-dequantized pool with no scales."""
+    from repro.serving import kvquant
+
+    q, kp, vp, tables, lengths = _paged_case(3, 4, 2, 16, 4, 6,
+                                             dtype=jnp.bfloat16)
+    ks = kvquant.block_scale(kp, (1, 3), kvd)
+    vs = kvquant.block_scale(vp, (1, 3), kvd)
+    kq = kvquant.quantize(kp, ks, kvd)
+    vq = kvquant.quantize(vp, vs, kvd)
+    out = paged_attention(q, kq, vq, tables, lengths,
+                          k_scale=ks[:, 0, :, 0], v_scale=vs[:, 0, :, 0])
+    wide = paged_attention(q, kvquant.dequantize(kq, ks),
+                           kvquant.dequantize(vq, vs), tables, lengths)
+    assert out.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(out, np.float32),
+                          np.asarray(wide, np.float32))
+    # and it stays close to the full-precision pool's answer
+    ref = paged_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0.1, atol=0.05)
+    # scale operands are validated: wrong shape fails loudly
+    with pytest.raises(ValueError, match="scale"):
+        paged_attention(q, kq, vq, tables, lengths,
+                        k_scale=ks[:, 0, :, 0].T, v_scale=vs[:, 0, :, 0])
+
+
 def test_paged_attention_null_block_garbage_never_leaks():
     """Mutating the NULL block (row 0) and every unreferenced pool row
     must not change any output — the length mask plus the in-range block

@@ -1,0 +1,106 @@
+"""Quantized KV storage primitives (`serving/kvquant.py`): dtype map,
+per-block absmax scales, round-trip idempotence, and the per-dtype
+ladder contract (`tolerance_contract` / `token_agreement` /
+`assert_tokens_match`) every identity test goes through."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serving import kvquant
+
+
+def test_dtype_map_and_validation():
+    assert kvquant.KV_DTYPES == ("bf16", "int8", "fp8")
+    assert not kvquant.is_quantized("bf16")
+    assert kvquant.is_quantized("int8") and kvquant.is_quantized("fp8")
+    assert kvquant.pool_dtype("bf16") == jnp.bfloat16
+    assert kvquant.pool_dtype("int8") == jnp.int8
+    assert kvquant.pool_dtype("fp8") == jnp.float8_e4m3fn
+    with pytest.raises(ValueError, match="kv_dtype"):
+        kvquant.validate_kv_dtype("int4")
+    with pytest.raises(ValueError, match="not narrow"):
+        kvquant.quantize(jnp.ones(3), jnp.ones(3), "bf16")
+    assert kvquant.scale_bytes_per_block(2) == 8      # one f32 per kv head
+
+
+@pytest.mark.parametrize("kvd", ["int8", "fp8"])
+def test_block_scale_shape_and_zero_blocks(kvd):
+    """Scales are f32 keepdims absmax/QMAX over the reduce axes, and an
+    all-zero block dequantizes to EXACTLY zero (scale 1, not 0/0) —
+    matching the zero-initialized bf16 pool."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 2, 8),
+                          jnp.bfloat16)
+    x = x.at[2].set(0)                                # one all-zero block
+    s = kvquant.block_scale(x, (1, 3), kvd)
+    assert s.shape == (5, 1, 2, 1) and s.dtype == jnp.float32
+    assert np.all(np.asarray(s) > 0)
+    assert float(np.asarray(s)[2].max()) == 1.0
+    q = kvquant.quantize(x, s, kvd)
+    back = kvquant.dequantize(q, s)
+    assert back.dtype == jnp.bfloat16
+    assert np.all(np.asarray(back[2], np.float32) == 0.0)
+    # narrow words really are 1 byte
+    assert q.dtype.itemsize == 1
+
+
+@pytest.mark.parametrize("kvd", ["int8", "fp8"])
+def test_quantize_roundtrip_idempotent(kvd):
+    """Re-quantizing a dequantized block under its stored scale is
+    exact — the property the windowed requant-on-append writers rely on
+    (untouched positions of a partially rewritten block must not
+    drift)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 4, 2, 8),
+                          jnp.bfloat16) * 3.0
+    s = kvquant.block_scale(x, (1, 3), kvd)
+    q = kvquant.quantize(x, s, kvd)
+    q2 = kvquant.quantize(kvquant.dequantize(q, s), s, kvd)
+    assert np.array_equal(np.asarray(q, np.float32),
+                          np.asarray(q2, np.float32))
+
+
+def test_int8_range_is_symmetric():
+    """Saturating inputs clip to ±127 — never -128, so negating a block
+    round-trips through the same representable set."""
+    x = jnp.asarray([[-1e6, 1e6]], jnp.float32)
+    q = kvquant.quantize(x, jnp.ones((1, 1), jnp.float32), "int8")
+    assert np.asarray(q).tolist() == [[-127, 127]]
+
+
+def test_tolerance_contract_poles():
+    exact = kvquant.tolerance_contract("bf16")
+    assert exact["exact"] and exact["min_agreement"] == 1.0
+    for kvd in ("int8", "fp8"):
+        tc = kvquant.tolerance_contract(kvd)
+        assert not tc["exact"]
+        assert 0.0 < tc["min_agreement"] < 1.0
+        assert tc["kv_dtype"] == kvd
+
+
+def test_token_agreement_is_mean_matched_prefix():
+    assert kvquant.token_agreement([], []) == 1.0
+    assert kvquant.token_agreement([[1, 2, 3]], [[1, 2, 3]]) == 1.0
+    # divergence at position 1 of 4: prefix fraction 1/4
+    assert kvquant.token_agreement([[1, 2, 3, 4]], [[1, 9, 3, 4]]) == 0.25
+    # mean over requests; length mismatch counts against the prefix
+    got = kvquant.token_agreement([[1, 2], [5, 6, 7, 8]],
+                                  [[1, 2], [5, 6]])
+    assert got == (1.0 + 0.5) / 2
+
+
+def test_assert_tokens_match_enforces_both_contracts():
+    exact = kvquant.tolerance_contract("bf16")
+    tol = kvquant.tolerance_contract("int8")
+    ref = [[1, 2, 3], [4, 5]]
+    assert kvquant.assert_tokens_match(ref, ref, exact) == 1.0
+    with pytest.raises(AssertionError, match="exact contract"):
+        kvquant.assert_tokens_match(ref, [[1, 2, 9], [4, 5]], exact,
+                                    "label")
+    # tolerance: the same divergence passes (agreement 5/6 > floor) and
+    # the measured agreement is returned
+    got = kvquant.assert_tokens_match(ref, [[1, 2, 9], [4, 5]], tol)
+    assert abs(got - (2 / 3 + 1.0) / 2) < 1e-9
+    with pytest.raises(AssertionError, match="below the int8 contract"):
+        kvquant.assert_tokens_match(ref, [[9, 9, 9], [9, 9]], tol)

@@ -15,6 +15,7 @@ from repro.configs import get_smoke
 from repro.core.optlevel import BestEffortConfig, OptLevel
 from repro.models import get_model
 from repro.serving import DecodeEngine, Request
+from repro.serving.kvquant import assert_tokens_match, tolerance_contract
 from repro.launch.server import (AsyncServer, TokenEvent, latency_metrics,
                                  make_trace, replay_trace, serve_trace)
 
@@ -35,6 +36,14 @@ def _engine(arch="qwen3-8b", B=3, max_seq=32, **kw):
     cfg, model, params = _model(arch)
     return DecodeEngine(model, params, batch_size=B, max_seq=max_seq,
                         **kw), cfg
+
+
+def _match(want, got, label, contract=tolerance_contract("bf16")):
+    """Hold two {prompt: generated} maps to a ladder token contract."""
+    assert set(want) == set(got), label
+    keys = sorted(want)
+    assert_tokens_match([want[k] for k in keys], [got[k] for k in keys],
+                        contract, label)
 
 
 # ---------------------------------------------------------------------------
@@ -161,7 +170,7 @@ def test_async_server_tokens_bit_identical_to_sync():
         return {tuple(r.prompt): r.generated for r in done}
 
     got = asyncio.run(_run())
-    assert got == want
+    _match(want, got, "async vs sync")
 
 
 def test_async_server_streams_every_token_in_order():
@@ -206,7 +215,7 @@ def test_async_server_concurrent_staggered_submits():
         return {tuple(r.prompt): r.generated for r in done}
 
     got = asyncio.run(_run())
-    assert got == want
+    _match(want, got, "staggered async vs sync")
 
 
 def test_async_server_degenerate_request_resolves_immediately():
@@ -274,7 +283,24 @@ def test_serve_trace_paged_engine_bit_identical():
     eng, _ = _engine(**kw)
     out = serve_trace(eng, trace, time_scale=0.0)
     got = {tuple(r.prompt): r.generated for r in out["finished"]}
-    assert got == want
+    _match(want, got, "trace paged vs sync")
+
+
+def test_serve_trace_quantized_engine_within_contract():
+    """The front end also composes with the int8 pool: the replayed
+    trace's tokens are held to the narrow tolerance contract against
+    the bf16 sync reference, not bit-identity."""
+    trace = make_trace(n_requests=5, rate=100.0, seed=2, vocab=64,
+                       prompt_len=(2, 6), max_new=(2, 5))
+    jobs = [(t.prompt, t.max_new_tokens) for t in trace]
+    want = _sync_tokens(jobs, config=BestEffortConfig(
+        level=OptLevel.O6, kv_block_size=4))
+    eng, _ = _engine(config=BestEffortConfig(
+        level=OptLevel.O6, kv_block_size=4, kv_dtype="int8"))
+    out = serve_trace(eng, trace, time_scale=0.0)
+    got = {tuple(r.prompt): r.generated for r in out["finished"]}
+    _match(want, got, "trace int8 vs sync bf16",
+           contract=tolerance_contract("int8"))
 
 
 # ---------------------------------------------------------------------------
