@@ -786,7 +786,12 @@ class ServingBackend(CumulativeLadderState):
         # but still records both measured floors.
         kv_dtype_walls = None
         kv_agreement = None
-        if paged and self.kv_dtype != "bf16":
+        # Pure-state families (rwkv, mamba) have NO block leaves — state
+        # rows are never quantized, so there is nothing for a narrow
+        # pool to buy and the per-block byte arithmetic degenerates;
+        # the race only runs when the cache actually pages KV blocks.
+        has_blocks = paged and engine.cache_mgr.plan.token_bytes > 0
+        if paged and has_blocks and self.kv_dtype != "bf16":
             from repro.serving import kvquant
             from repro.serving.paged import BlockPagingPlan
 
@@ -865,6 +870,8 @@ class ServingBackend(CumulativeLadderState):
             "layout": engine.layout.name,
             "devices": engine.placement.n_devices,
             "paged_attn": getattr(engine.layout, "attn_impl", None),
+            "state_impl": getattr(engine.layout, "state_impl", "none"),
+            "degrade_reason": getattr(engine, "degrade_reason", None),
             "kv_dtype": getattr(engine.layout, "kv_dtype", "bf16"),
             "prefill_chunk": chunk,
             "prefill_mode": engine.prefill_mode,

@@ -3,6 +3,7 @@
 from repro.configs import (
     internvl2_26b,
     llama4_scout_17b_a16e,
+    mamba2_2p7b,
     mistral_large_123b,
     nemotron_4_340b,
     qwen3_8b,
@@ -25,6 +26,7 @@ _MODULES = {
     "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
     "zamba2-2.7b": zamba2_2p7b,
     "rwkv6-3b": rwkv6_3b,
+    "mamba2-2.7b": mamba2_2p7b,
     "mistral-large-123b": mistral_large_123b,
     "nemotron-4-340b": nemotron_4_340b,
     "smollm-360m": smollm_360m,

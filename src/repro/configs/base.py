@@ -17,7 +17,8 @@ from repro.core.optlevel import BestEffortConfig
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
     name: str
-    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    family: str                  # dense | moe | ssm | mamba | hybrid
+                                 # | audio | vlm
     n_layers: int
     d_model: int
     n_heads: int                 # 0 => attention-free (rwkv)
@@ -99,11 +100,11 @@ class ArchConfig:
 
     @property
     def attention_free(self) -> bool:
-        return self.family == "ssm"
+        return self.family in ("ssm", "mamba")
 
     @property
     def subquadratic(self) -> bool:
-        return self.family in ("ssm", "hybrid")
+        return self.family in ("ssm", "mamba", "hybrid")
 
     def n_params(self) -> float:
         """Total parameter count (embedding + blocks + head)."""
@@ -112,6 +113,8 @@ class ArchConfig:
         if self.family == "ssm":   # rwkv6
             per = _rwkv6_block_params(self)
             return emb + L * per
+        if self.family == "mamba":
+            return emb + L * _mamba2_block_params(self)
         if self.family == "hybrid":
             return emb + _zamba2_params(self)
         per = _attn_params(self) + _mlp_params(self)
@@ -167,16 +170,21 @@ def _rwkv6_block_params(c: ArchConfig) -> float:
     return tm + cm + 4 * d
 
 
-def _zamba2_params(c: ArchConfig) -> float:
+def _mamba2_block_params(c: ArchConfig) -> float:
     d = c.d_model
     d_in = c.ssm_expand * d
     nheads = d_in // c.ssm_head_dim
-    per_mamba = (
+    return (
         d * (2 * d_in + 2 * c.ssm_state + nheads)  # in_proj
         + c.conv_width * (d_in + 2 * c.ssm_state)  # conv
         + 3 * nheads                               # A, D, dt_bias
         + d_in * d + 2 * d                         # out_proj + norms
     )
+
+
+def _zamba2_params(c: ArchConfig) -> float:
+    d = c.d_model
+    per_mamba = _mamba2_block_params(c)
     n_apps = c.n_layers // max(1, c.attn_every)
     shared = _attn_params(c) + _mlp_params(c)
     proj = n_apps * (2 * d * d)  # per-application down-projections

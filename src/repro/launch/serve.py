@@ -76,6 +76,8 @@ def serve_demo(cfg, *, batch_size: int, max_seq: int, n_requests: int,
         "layout": engine.layout.name,
         "devices": engine.placement.n_devices,
         "paged_attn": getattr(engine.layout, "attn_impl", None),
+        "state_impl": getattr(engine.layout, "state_impl", "none"),
+        "degrade_reason": engine.degrade_reason,
         "kv_dtype": getattr(engine.layout, "kv_dtype", "bf16"),
         "prefill_mode": engine.prefill_mode,
         "spec_mode": engine.spec_mode,
@@ -166,6 +168,8 @@ def main():
         print(f"[serve] req {r.rid}: prompt[{r.n_prompt}] -> "
               f"{r.generated}")
     attn = f"/{out['paged_attn']}" if out["paged_attn"] else ""
+    if out.get("state_impl", "none") != "none":
+        attn += f"/state={out['state_impl']}"
     if out.get("kv_dtype", "bf16") != "bf16":
         attn += f"/kv={out['kv_dtype']}"
     if args.prefill_chunk:
@@ -182,6 +186,8 @@ def main():
           f"{len(out['finished'])} requests, {out['tokens']} new "
           f"tokens in {out['ticks']} ticks / {out['wall_s']:.2f}s "
           f"({out['tok_per_s']:.1f} tok/s batched)")
+    if out.get("degrade_reason"):
+        print(f"[serve] degraded: {out['degrade_reason']}")
     if args.expect_devices and out["devices"] != args.expect_devices:
         raise SystemExit(
             f"placement landed on {out['devices']} device(s), expected "

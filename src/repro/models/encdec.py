@@ -210,6 +210,78 @@ def cache_axes(cfg: ArchConfig) -> dict:
             "cross_kv": {"k": kv, "v": kv}}
 
 
+def paged_decode_step(cfg: ArchConfig, params, pool, tables, rows, tokens,
+                      positions, scales=None, kv_dtype: str = "bf16"):
+    """MIXED-pool decode step (serving O6): decoder self-attention runs
+    gather-free through per-slot block ``tables`` via the paged Pallas
+    kernel, while the per-slot cross-attention KV (a fixed-size blob,
+    not a growing sequence) lives in a state-row pool addressed by
+    ``rows`` — gathered to the dense batch view for the plain cross
+    attention and returned UNCHANGED (cross KV is written once at
+    insert, read-only thereafter).  Narrow pools quantize only the
+    self_kv block leaves; cross state stays bf16.  Returns
+    (logits, pool[, scales])."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embedding"].astype(dt)[tokens]
+    cross = jax.tree.map(lambda l: jnp.take(l, rows, axis=1),
+                         pool["cross_kv"])
+    kv_leaves = (pool["self_kv"]["k"], pool["self_kv"]["v"])
+    if scales is not None:
+        kv_leaves += (scales["self_kv"]["k"], scales["self_kv"]["v"])
+
+    def body(h, xs):
+        layer_params, ck, cv = xs[:3]
+        kvs = xs[3:]
+        a, new_kvs = attn.paged_decode_attention(
+            layer_params["attn"], rms_norm(h, layer_params["attn_norm"]),
+            kvs, tables, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, kv_dtype=kv_dtype,
+        )
+        h = h + a
+        c, _ = attn.decode_attention(
+            layer_params["cross"], rms_norm(h, layer_params["cross_norm"]),
+            {"k": ck, "v": cv}, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, cross=True,
+        )
+        h = h + c
+        m = mlp_apply(layer_params["mlp"],
+                      rms_norm(h, layer_params["mlp_norm"]), cfg.mlp_kind)
+        return h + m, tuple(new_kvs)
+
+    from repro.models.loops import scan_or_unroll
+    h, new_kvs = scan_or_unroll(
+        body, h, (params["decoder"], cross["k"], cross["v"]) + kv_leaves,
+        unroll=cfg.unroll_layers)
+    h = rms_norm(h, params["final_norm"])
+    logits = (h[:, 0] @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    if scales is None:
+        nk, nv = new_kvs
+        return logits, {"self_kv": {"k": nk, "v": nv},
+                        "cross_kv": pool["cross_kv"]}
+    nk, nv, nsk, nsv = new_kvs
+    return (logits,
+            {"self_kv": {"k": nk, "v": nv}, "cross_kv": pool["cross_kv"]},
+            {"self_kv": {"k": nsk, "v": nsv},
+             "cross_kv": scales["cross_kv"]})
+
+
+def prefill_step(cfg: ArchConfig, params, cache, tokens, start, last):
+    """Chunked prefill by scanning the decode body (see
+    :mod:`repro.models.scan_prefill`): self-KV writes freeze per-slot
+    past ``last``; cross KV passes through unchanged."""
+    from repro.models.scan_prefill import batch_axes_of, scan_prefill
+
+    def step(c, tok, pos):
+        return decode_step(cfg, params, c, tok, pos)
+
+    return scan_prefill(step, cache, tokens, start, last,
+                        logits_width=padded_vocab(cfg.vocab),
+                        batch_axes=batch_axes_of(cache_axes(cfg)),
+                        max_seq=cache["self_kv"]["k"].shape[2])
+
+
 def init(cfg: ArchConfig, rng):
     return init_params(rng, model_defs(cfg), jnp.dtype(cfg.param_dtype))
 

@@ -197,6 +197,97 @@ def cache_axes(cfg: ArchConfig) -> dict:
     }
 
 
+def paged_decode_step(cfg: ArchConfig, params, pool, tables, rows, tokens,
+                      positions, scales=None, kv_dtype: str = "bf16"):
+    """MIXED-pool decode step (serving O6): the shared attention block
+    reads/appends through per-slot block ``tables`` via the paged Pallas
+    kernel (gather-free, like the transformer path), while the mamba
+    trunk's carried state moves through ``rows`` — slot->state-row
+    indirection into the conv/ssm row pools, gathered to the dense batch
+    view around the exact contiguous layer bodies and scattered back.
+    Narrow pools quantize only the shared_kv block leaves; the mamba
+    scale placeholders pass through untouched (state is never
+    quantized).  Returns (logits, pool[, scales])."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embedding"].astype(dt)[tokens]            # (B,1,d)
+    emb0 = h[:, 0]
+    na, per = _n_apps(cfg), cfg.attn_every
+    mkw = _mamba_kw(cfg)
+
+    grouped = _regroup(params["mamba"], na, per)
+    mstate = jax.tree.map(lambda l: jnp.take(l, rows, axis=1),
+                          pool["mamba"])
+    mcache = _regroup(mstate, na, per)
+
+    kv_leaves = (pool["shared_kv"]["k"], pool["shared_kv"]["v"])
+    if scales is not None:
+        kv_leaves += (scales["shared_kv"]["k"], scales["shared_kv"]["v"])
+
+    from repro.models.loops import scan_or_unroll
+
+    def inner(h, xs):
+        layer_params, st = xs
+        out, new_st = mamba2.mamba2_decode(layer_params, h, st, **mkw)
+        return h + out, new_st
+
+    def group(carry, xs):
+        h = carry
+        layer_group, st_group, proj = xs[:3]
+        kvs = xs[3:]
+        h, new_states = scan_or_unroll(inner, h, (layer_group, st_group),
+                                       unroll=cfg.unroll_layers)
+        x = jnp.concatenate([h, emb0[:, None]], axis=-1) @ proj.astype(dt)
+        a, new_kvs = attn.paged_decode_attention(
+            params["shared"]["attn"],
+            rms_norm(x, params["shared"]["attn_norm"]), kvs, tables,
+            positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            kv_dtype=kv_dtype,
+        )
+        x = x + a
+        m = mlp_apply(params["shared"]["mlp"],
+                      rms_norm(x, params["shared"]["mlp_norm"]),
+                      cfg.mlp_kind)
+        h = h + (x + m)
+        return h, (new_states, tuple(new_kvs))
+
+    h, (new_m, new_kvs) = scan_or_unroll(
+        group, h, (grouped, mcache, params["app_proj"]) + kv_leaves,
+        unroll=cfg.unroll_layers)
+    h = rms_norm(h, params["final_norm"])
+    logits = (h[:, 0] @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    flat_m = jax.tree.map(
+        lambda x: x.reshape((na * per,) + x.shape[2:]), new_m)
+    new_mpool = jax.tree.map(
+        lambda p, n: p.at[:, rows].set(n.astype(p.dtype)),
+        pool["mamba"], flat_m)
+    if scales is None:
+        nk, nv = new_kvs
+        return logits, {"mamba": new_mpool,
+                        "shared_kv": {"k": nk, "v": nv}}
+    nk, nv, nsk, nsv = new_kvs
+    return (logits,
+            {"mamba": new_mpool, "shared_kv": {"k": nk, "v": nv}},
+            {"mamba": scales["mamba"],
+             "shared_kv": {"k": nsk, "v": nsv}})
+
+
+def prefill_step(cfg: ArchConfig, params, cache, tokens, start, last):
+    """Chunked prefill by scanning the decode body (see
+    :mod:`repro.models.scan_prefill`): the mamba trunk's carry freezes
+    per-slot past ``last``; shared_kv writes at clipped positions are
+    frozen out the same way."""
+    from repro.models.scan_prefill import batch_axes_of, scan_prefill
+
+    def step(c, tok, pos):
+        return decode_step(cfg, params, c, tok, pos)
+
+    return scan_prefill(step, cache, tokens, start, last,
+                        logits_width=padded_vocab(cfg.vocab),
+                        batch_axes=batch_axes_of(cache_axes(cfg)),
+                        max_seq=cache["shared_kv"]["k"].shape[2])
+
+
 def init(cfg: ArchConfig, rng):
     return init_params(rng, model_defs(cfg), jnp.dtype(cfg.param_dtype))
 

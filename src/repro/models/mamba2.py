@@ -16,7 +16,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import PDef, rms_norm
+from repro.models.layers import (
+    PDef, chunked_cross_entropy, init_params, param_axes, rms_norm,
+    rms_norm_defs, stack_defs,
+)
 from repro.parallel.sharding import constrain
 
 
@@ -222,3 +225,132 @@ def mamba2_decode(params, x, cache, *, expand=2, head_dim=64, state=64,
     out = y @ params["out_proj"].astype(dt_)
     return out, {"conv": new_conv.astype(cache["conv"].dtype),
                  "ssm": ssm.astype(cache["ssm"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Language model: embed -> L x residual mamba2 block -> norm -> head.
+# The pure-SSM zoo member ("mamba" family): same block library the hybrid
+# trunk uses, but no attention anywhere — decode state is O(1) per slot.
+# ---------------------------------------------------------------------------
+
+def _block_kw(cfg) -> dict:
+    return dict(expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                state=cfg.ssm_state, conv_width=cfg.conv_width)
+
+
+def model_defs(cfg) -> dict:
+    from repro.models.transformer import padded_vocab
+    d = cfg.d_model
+    vp = padded_vocab(cfg.vocab)
+    return {
+        "embedding": PDef((vp, d), ("vocab", "embed"), "small"),
+        "lm_head": PDef((d, vp), ("embed", "vocab")),
+        "final_norm": rms_norm_defs(d),
+        "layers": stack_defs(mamba2_defs(d, **_block_kw(cfg)),
+                             cfg.n_layers),
+    }
+
+
+def forward(cfg, params, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embedding"].astype(dt)[tokens]
+    h = constrain(h, "batch", None, None)
+
+    def body(h, layer_params):
+        out = mamba2_apply(layer_params, h, unroll=cfg.unroll_layers,
+                           **_block_kw(cfg))
+        return h + out, None
+
+    from repro.models.remat import resolve_policy, wrap_layer_body
+    body_fn = wrap_layer_body(body, resolve_policy(cfg))
+    from repro.models.loops import scan_or_unroll
+    h, _ = scan_or_unroll(body_fn, h, params["layers"],
+                          unroll=cfg.unroll_layers)
+    return rms_norm(h, params["final_norm"])
+
+
+def lm_loss(cfg, params, batch):
+    h = forward(cfg, params, batch["tokens"])
+    return chunked_cross_entropy(
+        h, params, batch["labels"],
+        chunk=min(cfg.loss_chunk, batch["labels"].shape[1]),
+        compute_dtype=jnp.dtype(cfg.compute_dtype),
+        unroll=cfg.unroll_layers,
+    )
+
+
+def cache_spec(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    per = mamba2_state_spec(batch, cfg.d_model, dtype=dtype,
+                            **_block_kw(cfg))
+    stack = lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape,
+                                           s.dtype)
+    return jax.tree.map(stack, per)
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq, dtype))
+
+
+def decode_step(cfg, params, cache, tokens, positions):
+    """positions unused (state carries history) but kept for API parity."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embedding"].astype(dt)[tokens]           # (B,1,d)
+
+    def body(h, xs):
+        layer_params, st = xs
+        out, new_st = mamba2_decode(layer_params, h, st, **_block_kw(cfg))
+        return h + out, new_st
+
+    from repro.models.loops import scan_or_unroll
+    h, new_cache = scan_or_unroll(
+        body, h, (params["layers"], {"conv": cache["conv"],
+                                     "ssm": cache["ssm"]}),
+        unroll=cfg.unroll_layers)
+    h = rms_norm(h, params["final_norm"])
+    logits = (h[:, 0] @ params["lm_head"].astype(dt)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def cache_axes(cfg) -> dict:
+    return {
+        "conv": ("layers", "batch", None, "mlp"),
+        "ssm": ("layers", "batch", "heads", None, None),
+    }
+
+
+def paged_decode_step(cfg, params, pool, rows, tokens, positions,
+                      scales=None, kv_dtype: str = "bf16"):
+    """State-pool decode step (serving O6): slot->row indirection over
+    the conv/ssm row pools; gather active rows, run the contiguous
+    decode body, scatter back (NULL-row slots sink into the garbage
+    row).  Recurrent state is never quantized — ``scales``/``kv_dtype``
+    exist only for signature parity."""
+    del scales, kv_dtype
+    cache = jax.tree.map(lambda l: jnp.take(l, rows, axis=1), pool)
+    logits, new = decode_step(cfg, params, cache, tokens, positions)
+    new_pool = jax.tree.map(
+        lambda p, n: p.at[:, rows].set(n.astype(p.dtype)), pool, new)
+    return logits, new_pool
+
+
+def prefill_step(cfg, params, cache, tokens, start, last):
+    """Chunked prefill by scanning the decode body, with per-slot freeze
+    past ``last`` (see :mod:`repro.models.scan_prefill`)."""
+    from repro.models.scan_prefill import batch_axes_of, scan_prefill
+    from repro.models.transformer import padded_vocab
+
+    def step(c, tok, pos):
+        return decode_step(cfg, params, c, tok, pos)
+
+    return scan_prefill(step, cache, tokens, start, last,
+                        logits_width=padded_vocab(cfg.vocab),
+                        batch_axes=batch_axes_of(cache_axes(cfg)))
+
+
+def init(cfg, rng):
+    return init_params(rng, model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def axes(cfg):
+    return param_axes(model_defs(cfg))

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.models import encdec, hybrid, rwkv_lm, transformer
+from repro.models import encdec, hybrid, mamba2, rwkv_lm, transformer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,18 +30,30 @@ class ModelAPI:
     cache_spec: Callable      # (batch, max_seq) -> spec tree
     init_cache: Callable      # (batch, max_seq) -> cache tree
     cache_axes: Callable      # () -> logical-axes tree matching cache_spec
-    # Gather-free paged decode (params, pool, tables, tokens, positions)
-    # -> (logits, pool): the serving O6 kernel path.  None for families
-    # without it (recurrent-state rwkv/mamba, hybrid, enc-dec) — the
-    # paged layout then falls back to the gather step.
+    # True for families whose decode cache is a CARRY (rwkv wkv state,
+    # mamba conv/ssm state, the hybrid trunk) rather than a
+    # position-addressed KV log.  The contiguous layout cannot park a
+    # carried-state slot mid-prompt (a pad feed would fold garbage into
+    # the carry forever), so it refuses chunked prefill for these
+    # families; the paged layout parks them on the NULL state row
+    # instead.  Enc-dec is False: its self-KV is rewrite-safe and its
+    # cross-KV is read-only.
+    carries_state: bool = False
+    # Paged decode step (params, pool, *extras, tokens, positions) ->
+    # (logits, pool): the serving O6 kernel path.  ``extras`` is what
+    # the manager's ``step_extras()`` emits for the family — (tables,)
+    # for pure transformers, (rows,) for pure recurrent state
+    # (rwkv/mamba), (tables, rows) for mixed pools (hybrid, enc-dec).
     paged_decode_step: Callable = None
     # Chunked prefill (params, cache, tokens (B, C), start (B,), last
     # (B,)) -> (logits, cache): C prompt tokens per call, logits taken
-    # at each row's ``last`` index.  None for families where a chunk is
-    # not equivalent to C single-token steps — MoE (expert capacity is
-    # token-count-dependent) and recurrent-state families (parked
-    # pad-feeds would corrupt carried state) — the engine then degrades
-    # to the legacy one-token-per-tick prestaged path.
+    # at each row's ``last`` index.  Transformers batch the chunk into
+    # one wide attention call; carried-state families scan the exact
+    # single-token decode body with per-slot freeze past ``last``
+    # (``models/scan_prefill.py``) — both bit-identical to C one-token
+    # steps.  None only for MoE (expert capacity is
+    # token-count-dependent) — the engine then degrades to the legacy
+    # one-token-per-tick prestaged path.
     prefill_step: Callable = None
     # Same, straight off the paged pool via the multi-query kernel:
     # (params, pool, tables, tokens, start, last) -> (logits, pool).
@@ -64,6 +76,8 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         mod = transformer
     elif cfg.family == "ssm":
         mod = rwkv_lm
+    elif cfg.family == "mamba":
+        mod = mamba2
     elif cfg.family == "hybrid":
         mod = hybrid
     elif cfg.family == "audio":
@@ -73,10 +87,13 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
 
     paged_step = None
     if hasattr(mod, "paged_decode_step"):
-        paged_step = (lambda params, pool, tables, tokens, positions,
+        # The *extras* between pool and tokens are family-shaped —
+        # tables and/or state rows, exactly what the paged manager's
+        # ``step_extras()`` emits — so the wiring passes them through
+        # positionally.
+        paged_step = (lambda params, pool, *rest,
                       scales=None, kv_dtype="bf16":
-                      mod.paged_decode_step(cfg, params, pool, tables,
-                                            tokens, positions,
+                      mod.paged_decode_step(cfg, params, pool, *rest,
                                             scales=scales,
                                             kv_dtype=kv_dtype))
 
@@ -107,6 +124,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
 
     return ModelAPI(
         cfg=cfg,
+        carries_state=cfg.family in ("ssm", "mamba", "hybrid"),
         init=lambda rng: mod.init(cfg, rng),
         axes=lambda: mod.axes(cfg),
         defs=lambda: mod.model_defs(cfg),

@@ -118,6 +118,39 @@ def cache_axes(cfg: ArchConfig) -> dict:
     }
 
 
+def paged_decode_step(cfg: ArchConfig, params, pool, rows, tokens,
+                      positions, scales=None, kv_dtype: str = "bf16"):
+    """State-pool decode step (serving O6): every cache leaf lives in a
+    row pool with a spare NULL garbage row; ``rows`` (B,) int32 maps
+    each slot to its state row.  Gather the active rows to the dense
+    batch view, run the exact contiguous decode body, scatter back
+    through the same rows — slots parked on the NULL row read garbage
+    (their logits are discarded) and their writes collapse into the
+    sink.  Recurrent state is never quantized, so ``scales``/
+    ``kv_dtype`` are accepted only for signature parity with the
+    transformer's paged step."""
+    del scales, kv_dtype
+    cache = jax.tree.map(lambda l: jnp.take(l, rows, axis=1), pool)
+    logits, new = decode_step(cfg, params, cache, tokens, positions)
+    new_pool = jax.tree.map(
+        lambda p, n: p.at[:, rows].set(n.astype(p.dtype)), pool, new)
+    return logits, new_pool
+
+
+def prefill_step(cfg: ArchConfig, params, cache, tokens, start, last):
+    """Chunked prefill by scanning the decode body: bit-identical to C
+    one-token ticks, with per-slot freeze past ``last`` so pad feeds
+    never corrupt the carried wkv/token-shift state."""
+    from repro.models.scan_prefill import batch_axes_of, scan_prefill
+
+    def step(c, tok, pos):
+        return decode_step(cfg, params, c, tok, pos)
+
+    return scan_prefill(step, cache, tokens, start, last,
+                        logits_width=padded_vocab(cfg.vocab),
+                        batch_axes=batch_axes_of(cache_axes(cfg)))
+
+
 def init(cfg: ArchConfig, rng):
     return init_params(rng, model_defs(cfg), jnp.dtype(cfg.param_dtype))
 

@@ -1,0 +1,82 @@
+"""Chunked prefill for carried-state decoders, by scanning the decode body.
+
+Transformers chunk prefill by batching C prompt tokens into one wide
+attention call (``transformer.prefill_step``) — legal because a KV cache
+is position-addressed: a padded tail's writes land at future positions
+that are rewritten before first read.  Recurrent families (rwkv, mamba,
+hybrid) cannot do that: their state is carried, so feeding a parked
+slot's pad token would fold garbage into the carry forever.
+
+This module makes chunking legal for those families a different way:
+``lax.scan`` the exact single-token decode body over the chunk's C
+positions, and FREEZE each slot's cache leaves once the scan passes that
+slot's last real token (``j > last``) — a per-leaf ``where`` on the
+batch axis, so a short slot's carry stops advancing instead of eating
+pads.  The result is bit-identical to C one-token-per-tick steps by
+construction (same body, same order, same dtypes), which is what lets
+``prefill_mode == "chunked"`` stay inside the ladder's bit-exactness
+contract for every family, not just transformers.
+
+One jitted scan per chunk width replaces C dispatches — the win is
+dispatch overhead and scheduler ticks, not FLOPs (the body still runs C
+times).  That is exactly the paper's communication-batching posture:
+same work, fewer round trips.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_axes_of(axes_tree) -> list:
+    """Batch-axis index per cache leaf, in tree-flatten order."""
+    leaves = jax.tree.leaves(axes_tree,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    return [ax.index("batch") for ax in leaves]
+
+
+def scan_prefill(decode_fn, cache, tokens, start, last, *,
+                 logits_width: int, batch_axes: list, max_seq=None):
+    """Run ``decode_fn`` over a prompt chunk, one token at a time.
+
+    ``decode_fn(cache, tok (B, 1), pos (B,)) -> (logits (B, V), cache)``
+    is the family's single-token decode body.  ``tokens`` (B, C) holds C
+    consecutive prompt tokens per slot starting at position ``start``
+    (B,); ``last`` (B,) is the row index of each slot's final real token
+    in this chunk (rows past it are pad).  Returns (logits (B, V) f32
+    taken at each slot's ``last`` row, new_cache).
+
+    Slots whose prompt ends mid-chunk are frozen: every cache leaf keeps
+    its pre-step value on that slot's batch row for ``j > last``, so pad
+    feeds never touch carried state.  ``max_seq`` clips positions for
+    families that also hold a position-addressed KV leaf (hybrid
+    shared_kv, enc-dec self_kv) — the clipped tail writes are frozen out
+    anyway, the clip just keeps indices in range.
+    """
+    B, C = tokens.shape
+    leaves0, treedef = jax.tree.flatten(cache)
+    sel0 = jnp.zeros((B, logits_width), jnp.float32)
+
+    def body(carry, j):
+        leaves, sel = carry
+        tok = jax.lax.dynamic_index_in_dim(tokens, j, axis=1,
+                                           keepdims=True)        # (B, 1)
+        pos = (start + j).astype(jnp.int32)
+        if max_seq is not None:
+            pos = jnp.clip(pos, 0, max_seq - 1)
+        logits, new_cache = decode_fn(jax.tree.unflatten(treedef, leaves),
+                                      tok, pos)
+        live = j <= last                                          # (B,)
+        out = []
+        for old, new, bax in zip(leaves, jax.tree.leaves(new_cache),
+                                 batch_axes):
+            mask = live.reshape((1,) * bax + (B,) +
+                                (1,) * (old.ndim - bax - 1))
+            out.append(jnp.where(mask, new.astype(old.dtype), old))
+        sel = jnp.where((last == j)[:, None], logits, sel)
+        return (out, sel), None
+
+    (leaves, sel), _ = jax.lax.scan(body, (leaves0, sel0),
+                                    jnp.arange(C, dtype=jnp.int32))
+    return sel, jax.tree.unflatten(treedef, leaves)

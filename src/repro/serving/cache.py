@@ -70,11 +70,15 @@ class CacheManager:
         reservation the paged manager's block pool replaces)."""
         return self.B * self.max_seq
 
-    def step_extras(self) -> tuple:
+    def step_extras(self, parked=None) -> tuple:
         """Per-tick step inputs beyond (params, cache, tokens, positions,
         seeds).  The contiguous step needs none; the paged manager
-        returns its block tables here — the hook that keeps the engine's
-        dispatch path layout-blind."""
+        returns its block tables (and state rows, for families with
+        recurrent/cross state) here — the hook that keeps the engine's
+        dispatch path layout-blind.  ``parked`` (slot indices mid-prefill
+        this tick) is a paged-manager concern — contiguous KV writes are
+        rewrite-safe, so it is ignored here."""
+        del parked
         return ()
 
     def insert_slot(self, i: int, state):

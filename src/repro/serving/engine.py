@@ -208,6 +208,11 @@ class DecodeEngine:
                 model, self.sampler_cfg, self.cache_mgr, self.placement)
         self.prefill_mode = ("chunked" if self._prefill_fn is not None
                              else "token")
+        # Best-effort degrades are RECORDED, never silent: the layout
+        # stamps a reason when a requested capability fell back (kernel
+        # attention without a paged step, chunked prefill on a family
+        # the cell cannot chunk) — surfaced in serve/autotune meta.
+        self.degrade_reason = getattr(self.layout, "degrade_reason", None)
 
         # O7: speculative decoding.  Active only when every piece is in
         # place — the rung enabled, a drafter configured (by name in the
@@ -444,17 +449,20 @@ class DecodeEngine:
             return self._step_overlapped()
         return self._step_serial()
 
-    def _dispatch(self, tokens_np, positions_np, seeds_np):
+    def _dispatch(self, tokens_np, positions_np, seeds_np, parked=None):
         """Run the batched fused device step; returns the (possibly still
         in-flight) sampled tokens and installs the new cache.  The
         manager's ``step_extras()`` supplies any layout-specific step
-        inputs — the paged manager's cached device block tables
-        (invalidated at admission/retirement; the (B, nb) shape never
-        changes, so there is no retrace) — keeping this path
-        layout-blind."""
+        inputs — the paged manager's cached device block tables and
+        state rows (invalidated at admission/retirement; the shapes
+        never change, so there is no retrace) — keeping this path
+        layout-blind.  ``parked`` names slots mid-chunked-prefill this
+        tick: managers with carried state alias them to the NULL state
+        row so the batched pad-feed cannot advance their real state
+        (their prompt advances only through ``_prefill_tick``)."""
         toks_dev, new_cache = self._step_fn(
             self.params, self.cache_mgr.cache,
-            *self.cache_mgr.step_extras(),
+            *self.cache_mgr.step_extras(parked=parked),
             jnp.asarray(tokens_np), jnp.asarray(positions_np),
             jnp.asarray(seeds_np))
         self.cache_mgr.cache = new_cache
@@ -727,7 +735,9 @@ class DecodeEngine:
         # dispatches before the batched step; slots still consuming
         # their prompt are PARKED in that step — fed their real next
         # prompt token (so the row's write is the value a later chunk
-        # rewrites) but advanced only by chunks.
+        # rewrites; carried-state families additionally alias parked
+        # slots to the NULL state row) but advanced only by chunks.
+        parked = None
         if self._prefill_fn is not None:
             pf = sched.prefill_queue()
             if pf:
@@ -739,6 +749,7 @@ class DecodeEngine:
                    if slots[i].pos >= slots[i].req.n_prompt]
             if not gen:
                 return True                     # prefill-only tick
+            parked = [i for i in active if i not in set(gen)]
         else:
             gen = active
 
@@ -753,7 +764,8 @@ class DecodeEngine:
              if s.active else 0 for s in slots], np.int32)
             if cfg.stochastic else np.zeros((self.B,), np.int32))
 
-        toks_dev = self._dispatch(tokens_np, positions_np, seeds_np)
+        toks_dev = self._dispatch(tokens_np, positions_np, seeds_np,
+                                  parked=parked)
         toks = np.asarray(toks_dev).reshape(self.B, -1)[:, -1]
         for i in gen:
             sched.advance(i, toks[i])
@@ -796,21 +808,29 @@ class DecodeEngine:
                 buf.seeds[i] = cfg.request_seed(
                     s.req.rid, len(s.req.generated))
 
-        toks_dev = self._dispatch(buf.tokens, buf.positions, buf.seeds)
-
-        # -- bookkeeping for the next tick, under the running step -----------
-        # Chunked prefill rides the overlap seam: the chunk dispatch is
-        # queued behind the decode step (so the device never idles), and
-        # prefilling slots are parked — excluded from tick_advance; their
-        # positions move through the chunk's own bookkeeping.
+        # Chunked prefill rides the overlap seam: prefilling slots are
+        # parked — excluded from tick_advance (their positions move
+        # through the chunk's own bookkeeping) and flagged to the cache
+        # manager so carried-state families alias them to the NULL
+        # state row for this decode step.
         if self._prefill_fn is not None:
             gen = [i for i in active
                    if sched.slots[i].pos >= sched.slots[i].req.n_prompt]
+            parked = [i for i in active if i not in set(gen)]
+        else:
+            gen = active
+            parked = None
+
+        toks_dev = self._dispatch(buf.tokens, buf.positions, buf.seeds,
+                                  parked=parked)
+
+        # -- bookkeeping for the next tick, under the running step -----------
+        # The chunk dispatch is queued behind the decode step (so the
+        # device never idles).
+        if self._prefill_fn is not None:
             pf = sched.prefill_queue()
             if pf:
                 self._prefill_tick(pf[0])
-        else:
-            gen = active
         emissions = sched.tick_advance(gen)
         self._pending = (toks_dev, emissions)
         admitted = sched.admit()                 # refills planned-free slots

@@ -50,6 +50,7 @@ process that keeps constructing engines never pins dead models (the old
 from __future__ import annotations
 
 import collections
+import logging
 import weakref
 
 import jax
@@ -58,6 +59,8 @@ from repro.core.optlevel import BestEffortConfig
 from repro.serving.cache import CacheManager
 from repro.serving.paged import PagedCacheManager
 from repro.serving.sampler import make_sampler
+
+log = logging.getLogger("repro.serving")
 
 
 def _last_logits(logits):
@@ -93,47 +96,75 @@ def _join_cache(pool, scales, quantized):
     return pool
 
 
-def make_paged_fused(model, sample, plan, constrain=None):
-    """The paged GATHER step: block-table gather -> the SAME
-    ``decode_step`` the dense rungs run -> single-block scatter.  The
+def _split_extras(manager, extras):
+    """(tables, rows) from a step's variadic extras, per the manager's
+    leaf population: tables iff it has block leaves, rows iff it has
+    state leaves — the same order ``step_extras()`` emits."""
+    tables = rows = None
+    it = iter(extras)
+    if manager.has_blocks:
+        tables = next(it)
+    if manager.state is not None:
+        rows = next(it)
+    return tables, rows
+
+
+def make_paged_fused(model, sample, manager, constrain=None):
+    """The paged GATHER step: block-table gather (block leaves) +
+    state-row gather (state leaves) -> the SAME ``decode_step`` the
+    dense rungs run -> state-row scatter + single-block scatter.  The
     dense view the model sees is bit-identical at every unmasked
-    position (see ``paged`` docstring), so greedy tokens cannot drift
-    from the contiguous path.  Narrow pools (``kv_dtype`` int8/fp8)
-    dequantize inside the gather and re-quantize each slot's active
-    block inside the scatter — tokens then track the dense oracle only
-    up to the dtype's tolerance contract, never bit-exactly.
+    position (see ``paged`` docstring) and state rows gather the exact
+    carried state, so greedy tokens cannot drift from the contiguous
+    path.  Narrow pools (``kv_dtype`` int8/fp8) dequantize inside the
+    gather and re-quantize each slot's active block inside the scatter —
+    tokens then track the dense oracle only up to the dtype's tolerance
+    contract, never bit-exactly (state rows are never quantized).
 
     ``constrain`` (from the sharded placement) re-shards the gathered
     dense view onto the batch axis in-graph, so under a mesh the model
-    body runs PE-duplicated while the pool stays block-sharded.
+    body runs PE-duplicated while the pool stays block/row-sharded.
     """
+    plan, splan = manager.plan, manager.state_plan
     quantized = plan.quantized
 
-    def _fused(params, cache, tables, tokens, positions, seeds):
+    def _fused(params, cache, *rest):
+        extras, (tokens, positions, seeds) = rest[:-3], rest[-3:]
+        tables, rows = _split_extras(manager, extras)
         pool, scales = _split_cache(cache, quantized)
-        dense = plan.gather(pool, tables, scales)
+        dense = pool
+        if tables is not None:
+            dense = plan.gather(dense, tables, scales)
+        if rows is not None:
+            dense = splan.gather(dense, rows)
         if constrain is not None:
             dense = plan.map_batch_axes(dense, constrain)
         logits, new_dense = model.decode_step(
             params, dense, tokens, positions)
         toks = sample(_last_logits(logits), seeds)
+        new_pool = pool
+        if rows is not None:
+            new_pool = splan.scatter(new_pool, rows, new_dense)
+        if tables is None:
+            return toks, _join_cache(new_pool, scales, quantized)
         if quantized:
-            pool, scales = plan.scatter(pool, tables, new_dense,
-                                        positions, scales=scales)
-            return toks, _join_cache(pool, scales, True)
-        return toks, plan.scatter(pool, tables, new_dense, positions)
+            new_pool, scales = plan.scatter(new_pool, tables, new_dense,
+                                            positions, scales=scales)
+            return toks, _join_cache(new_pool, scales, True)
+        return toks, plan.scatter(new_pool, tables, new_dense, positions)
 
     return _fused
 
 
-def make_paged_kernel_fused(model, sample, plan, replicate=None):
+def make_paged_kernel_fused(model, sample, manager, replicate=None):
     """The paged KERNEL step (``paged_attn="kernel"``): the model's
-    ``paged_decode_step`` consumes the block pool + tables + positions
-    DIRECTLY — the per-tick O(B * max_seq) dense gather/scatter of
-    :func:`make_paged_fused` is gone; each layer appends the current
-    token's K/V into the active block in place and the block-table-aware
-    Pallas kernel streams only the blocks each slot references
-    (O(blocks touched) KV traffic per tick).  Narrow pools thread the
+    ``paged_decode_step`` consumes the block pool + tables (+ state
+    rows) + positions DIRECTLY — the per-tick O(B * max_seq) dense
+    gather/scatter of :func:`make_paged_fused` is gone; each attention
+    layer appends the current token's K/V into the active block in place
+    and the block-table-aware Pallas kernel streams only the blocks each
+    slot references (O(blocks touched) KV traffic per tick), while state
+    leaves move through O(B) row indirection.  Narrow pools thread the
     per-block scale subtree alongside and the kernel dequantizes each
     streamed block in place.
 
@@ -144,10 +175,11 @@ def make_paged_kernel_fused(model, sample, plan, replicate=None):
     block axis.  Correct everywhere; whether it *wins* there is the
     autotuner's call, like every best-effort rung.
     """
-    quantized = plan.quantized
-    kv_dtype = plan.kv_dtype
+    quantized = manager.plan.quantized
+    kv_dtype = manager.plan.kv_dtype
 
-    def _fused(params, cache, tables, tokens, positions, seeds):
+    def _fused(params, cache, *rest):
+        extras, (tokens, positions, seeds) = rest[:-3], rest[-3:]
         pool, scales = _split_cache(cache, quantized)
         if replicate is not None:
             pool = jax.tree.map(replicate, pool)
@@ -155,11 +187,11 @@ def make_paged_kernel_fused(model, sample, plan, replicate=None):
                 scales = jax.tree.map(replicate, scales)
         if quantized:
             logits, new_pool, new_scales = model.paged_decode_step(
-                params, pool, tables, tokens, positions,
+                params, pool, *extras, tokens, positions,
                 scales=scales, kv_dtype=kv_dtype)
         else:
             logits, new_pool = model.paged_decode_step(
-                params, pool, tables, tokens, positions)
+                params, pool, *extras, tokens, positions)
             new_scales = None
         toks = sample(_last_logits(logits), seeds)
         return toks, _join_cache(new_pool, new_scales, quantized)
@@ -308,13 +340,29 @@ class KVLayout:
                             prestaged prefill).
 
     The engine holds one of each and never branches on layout again; the
-    extra per-tick step inputs (block tables) come from the manager's
-    ``step_extras()`` so the dispatch path is layout-blind too — the
-    prefill step takes the same extras between cache and slot index.
+    extra per-tick step inputs (block tables, state rows) come from the
+    manager's ``step_extras()`` so the dispatch path is layout-blind
+    too — the prefill step takes the same extras between cache and slot
+    index.
+
+    Three RECORDED strings replace silent degrades (the best-effort
+    contract: degrade, don't fail, and say so):
+
+    ``attn_impl``   — the attention implementation the built step
+                      actually uses ("gather"/"kernel"; None on the
+                      contiguous layout).
+    ``state_impl``  — how recurrent/cross state moves ("rows" when the
+                      paged manager row-pools state leaves, "none" when
+                      the family has none or the layout is contiguous).
+    ``degrade_reason`` — why a requested capability fell back (kernel ->
+                      gather, chunked -> token), None when nothing did.
     """
 
     name: str = "?"
     supports_step_fn: bool = False
+    attn_impl = None
+    state_impl: str = "none"
+    degrade_reason = None
 
     def build_manager(self, model, batch_size, max_seq, config, placement):
         raise NotImplementedError
@@ -374,6 +422,21 @@ class ContiguousLayout(KVLayout):
     def make_prefill_step(self, model, sampler_cfg, manager, placement):
         if placement.sharded or model.prefill_step is None:
             return None
+        if model.carries_state:
+            # Chunked prefill parks mid-prompt slots inside the BATCHED
+            # decode tick by feeding them their next prompt token; for
+            # KV families that write is rewritten by the next chunk, but
+            # carried state would advance twice.  The contiguous layout
+            # has no indirection to park through — the paged layout
+            # aliases parked slots to the NULL state row instead.
+            self.degrade_reason = (
+                f"prefill_chunk requested but family "
+                f"'{model.cfg.family}' carries recurrent state, which the "
+                f"contiguous layout cannot park mid-prompt; degraded to "
+                f"token-by-token prefill (the paged layout (level>=6) "
+                f"chunks this family via NULL-row parking)")
+            log.warning("%s", self.degrade_reason)
+            return None
         return shared_steps(model, sampler_cfg)["prefill"]
 
     def make_verify_step(self, model, sampler_cfg, manager, placement):
@@ -414,7 +477,11 @@ class PagedLayout(KVLayout):
     dense per-slot view every tick; "kernel" runs the block-table-aware
     Pallas decode kernel straight on the pool.  ``attn_impl`` records
     what :meth:`make_step` actually built — a model without a paged
-    decode step (recurrent families) degrades to gather, never fails.
+    decode step degrades to gather, never fails, and ``degrade_reason``
+    + a warning log say why (every zoo family ships one now, so this
+    fires only for stripped/exotic ModelAPIs).  ``state_impl`` records
+    "rows" when the family's recurrent/cross state leaves live in the
+    row pool.
 
     ``kv_dtype`` selects the pool's STORED dtype
     (``BestEffortConfig.kv_dtype``): "bf16" stores compute-width blocks
@@ -438,6 +505,8 @@ class PagedLayout(KVLayout):
         kvquant.validate_kv_dtype(kv_dtype)
         self.paged_attn = paged_attn
         self.attn_impl = paged_attn      # updated by make_step
+        self.state_impl = "none"         # "rows" when state leaves pool
+        self.degrade_reason = None       # recorded fallback, or None
         self.kv_dtype = kv_dtype
         self.quantized = kvquant.is_quantized(kv_dtype)
 
@@ -468,15 +537,22 @@ class PagedLayout(KVLayout):
         use_kernel = (self.paged_attn == "kernel"
                       and model.paged_decode_step is not None)
         self.attn_impl = "kernel" if use_kernel else "gather"
+        self.state_impl = "rows" if manager.state is not None else "none"
+        if self.paged_attn == "kernel" and not use_kernel:
+            self.degrade_reason = (
+                f"paged_attn='kernel' requested but family "
+                f"'{model.cfg.family}' has no paged_decode_step; "
+                f"degraded to the dense gather step")
+            log.warning("%s", self.degrade_reason)
         sample = make_sampler(sampler_cfg)
         if use_kernel:
             fused = make_paged_kernel_fused(
-                model, sample, manager.plan,
+                model, sample, manager,
                 replicate=placement.constrain_replicated
                 if placement.sharded else None)
         else:
             fused = make_paged_fused(
-                model, sample, manager.plan,
+                model, sample, manager,
                 constrain=placement.constrain_axis if placement.sharded
                 else None)
         if not placement.sharded:
@@ -484,18 +560,24 @@ class PagedLayout(KVLayout):
         pool_sh = manager.pool_shardings(placement)
         tok_sh, pos_sh = placement.token_shardings()
         repl = placement.replicated
+        n_extras = int(manager.has_blocks) + int(manager.state is not None)
         return jax.jit(
             fused, donate_argnums=(1,),
-            in_shardings=(repl, pool_sh, repl, tok_sh, pos_sh, pos_sh),
+            in_shardings=(repl, pool_sh) + (repl,) * n_extras
+            + (tok_sh, pos_sh, pos_sh),
             out_shardings=(pos_sh, pool_sh))
 
     def make_prefill_step(self, model, sampler_cfg, manager, placement):
         """The paged prefill chunk, matching ``attn_impl``:
 
-        * gather — slice slot ``islot``'s block-table row, gather its
-          single-slot dense view, run the SAME dense ``prefill_step``
-          the contiguous rungs run, scatter every block of the view
-          back (``scatter_view`` — a chunk spans several blocks).
+        * gather — slice slot ``islot``'s block-table row and/or state
+          row, gather its single-slot dense view, run the SAME dense
+          ``prefill_step`` the contiguous rungs run, scatter the state
+          row and every block of the view back (``scatter_view`` — a
+          chunk spans several blocks).  This is how carried-state
+          families chunk: the chunk advances the slot's REAL state row
+          here, while the batched decode tick parks the slot on the
+          NULL row (``step_extras(parked=...)``).
         * kernel — the model's ``paged_prefill_step`` writes chunk K/V
           straight into pool blocks and runs the multi-query
           block-table Pallas kernel; no dense view is built at all.
@@ -506,14 +588,16 @@ class PagedLayout(KVLayout):
         if placement.sharded or model.prefill_step is None:
             return None
         sample = make_sampler(sampler_cfg)
-        plan = manager.plan
+        plan, splan = manager.plan, manager.state_plan
         quantized = plan.quantized
         kv_dtype = plan.kv_dtype
         use_kernel = (self.attn_impl == "kernel"
                       and model.paged_prefill_step is not None)
         if use_kernel:
-            def _prefill(params, cache, tables, islot, tokens, start, last,
-                         seeds):
+            def _prefill(params, cache, *rest):
+                extras = rest[:-5]
+                islot, tokens, start, last, seeds = rest[-5:]
+                tables, _rows = _split_extras(manager, extras)
                 pool, scales = _split_cache(cache, quantized)
                 row = jax.lax.dynamic_slice_in_dim(tables, islot, 1,
                                                    axis=0)
@@ -528,21 +612,36 @@ class PagedLayout(KVLayout):
                 return (sample(logits, seeds)[0],
                         _join_cache(new_pool, new_scales, quantized))
         else:
-            def _prefill(params, cache, tables, islot, tokens, start, last,
-                         seeds):
+            def _prefill(params, cache, *rest):
+                extras = rest[:-5]
+                islot, tokens, start, last, seeds = rest[-5:]
+                tables, rows = _split_extras(manager, extras)
                 pool, scales = _split_cache(cache, quantized)
-                row = jax.lax.dynamic_slice_in_dim(tables, islot, 1,
-                                                   axis=0)
-                dense = plan.gather(pool, row, scales)
+                row_t = row_r = None
+                dense = pool
+                if tables is not None:
+                    row_t = jax.lax.dynamic_slice_in_dim(tables, islot, 1,
+                                                         axis=0)
+                    dense = plan.gather(dense, row_t, scales)
+                if rows is not None:
+                    row_r = jax.lax.dynamic_slice_in_dim(rows, islot, 1,
+                                                         axis=0)
+                    dense = splan.gather(dense, row_r)
                 logits, new_dense = model.prefill_step(
                     params, dense, tokens, start, last)
+                new_pool = pool
+                if rows is not None:
+                    new_pool = splan.scatter(new_pool, row_r, new_dense)
+                if tables is None:
+                    return (sample(logits, seeds)[0],
+                            _join_cache(new_pool, scales, quantized))
                 if quantized:
                     new_pool, new_scales = plan.scatter_view(
-                        pool, row, new_dense, scales=scales,
+                        new_pool, row_t, new_dense, scales=scales,
                         lengths=start + tokens.shape[1])
                     return (sample(logits, seeds)[0],
                             _join_cache(new_pool, new_scales, True))
-                new_pool = plan.scatter_view(pool, row, new_dense)
+                new_pool = plan.scatter_view(new_pool, row_t, new_dense)
                 return sample(logits, seeds)[0], new_pool
         return jax.jit(_prefill, donate_argnums=(1,))
 
@@ -570,8 +669,11 @@ class PagedLayout(KVLayout):
         kv_dtype = plan.kv_dtype
         use_kernel = (self.attn_impl == "kernel"
                       and model.paged_verify_step is not None)
+        splan = manager.state_plan
         if use_kernel:
-            def _verify(params, cache, tables, tokens, start):
+            def _verify(params, cache, *rest):
+                extras, (tokens, start) = rest[:-2], rest[-2:]
+                tables, _rows = _split_extras(manager, extras)
                 pool, scales = _split_cache(cache, quantized)
                 if placement.sharded:
                     pool = jax.tree.map(placement.constrain_replicated,
@@ -590,30 +692,44 @@ class PagedLayout(KVLayout):
                 return (sample(logits, None),
                         _join_cache(new_pool, new_scales, quantized))
         else:
-            def _verify(params, cache, tables, tokens, start):
+            def _verify(params, cache, *rest):
+                extras, (tokens, start) = rest[:-2], rest[-2:]
+                tables, rows = _split_extras(manager, extras)
                 pool, scales = _split_cache(cache, quantized)
-                dense = plan.gather(pool, tables, scales)
+                dense = pool
+                if tables is not None:
+                    dense = plan.gather(dense, tables, scales)
+                if rows is not None:
+                    dense = splan.gather(dense, rows)
                 if placement.sharded:
                     dense = plan.map_batch_axes(dense,
                                                 placement.constrain_axis)
                 logits, new_dense = model.verify_step(params, dense,
                                                       tokens, start)
+                new_pool = pool
+                if rows is not None:
+                    new_pool = splan.scatter(new_pool, rows, new_dense)
+                if tables is None:
+                    return (sample(logits, None),
+                            _join_cache(new_pool, scales, quantized))
                 if quantized:
                     new_pool, new_scales = plan.scatter_view(
-                        pool, tables, new_dense, scales=scales,
+                        new_pool, tables, new_dense, scales=scales,
                         lengths=start + tokens.shape[1])
                     return (sample(logits, None),
                             _join_cache(new_pool, new_scales, True))
-                new_pool = plan.scatter_view(pool, tables, new_dense)
+                new_pool = plan.scatter_view(new_pool, tables, new_dense)
                 return sample(logits, None), new_pool
         if not placement.sharded:
             return jax.jit(_verify, donate_argnums=(1,))
         pool_sh = manager.pool_shardings(placement)
         tok_sh, pos_sh = placement.token_shardings()
         repl = placement.replicated
+        n_extras = int(manager.has_blocks) + int(manager.state is not None)
         return jax.jit(
             _verify, donate_argnums=(1,),
-            in_shardings=(repl, pool_sh, repl, tok_sh, pos_sh),
+            in_shardings=(repl, pool_sh) + (repl,) * n_extras
+            + (tok_sh, pos_sh),
             out_shardings=(tok_sh, pool_sh))
 
 

@@ -10,7 +10,19 @@ is then the pool size over the *actual* per-request reservations
 (``min(n_prompt + max_new_tokens, max_seq)`` tokens), so long-tail
 prompt mixes admit more concurrent requests at equal memory.
 
-Layering (so the allocator is testable without jax):
+Recurrent state (RWKV wkv, Mamba conv/ssm) has no sequence axis at all —
+it is O(1) per slot — so per-position blocks are the wrong shape for it.
+Those leaves get the *state pool* instead: a pool of per-slot state ROWS
+with a slot -> row indirection map, no block tables.  One level of
+indirection buys the same things block tables buy the KV leaves —
+admit-without-reshape, pool-row sharding, defrag by row copy — at one
+int per slot.  Hybrid models compose both pools (block tables for the
+shared-attention KV, state rows for the mamba trunk); enc-dec stores its
+fixed-length cross-attention KV as a state row too (cross attention is
+unmasked, so the stale-positions-are-masked argument below never applies
+to it — a whole-blob row swap does).
+
+Layering (so the allocators are testable without jax):
 
   * :class:`BlockAllocator` — pure free-list arithmetic: allocate /
     append / release over integer block ids.  Block 0 is reserved as the
@@ -20,11 +32,20 @@ Layering (so the allocator is testable without jax):
     admission on top of the free list.  Drives the scheduler's admission
     gate: a request whose reservation exceeds the free blocks *queues*
     (never raises) until retirements free blocks.
+  * :class:`StatePool` — the state-row sibling: slot -> row map plus a
+    row free list (row 0 reserved as the NULL row — the write-garbage
+    sink for parked and inactive slots), with the same conservation
+    invariants.
+  * :class:`StatePagingPlan` — the jax layer for state leaves: pooled
+    ``(rows, ...)`` storage, row gather/scatter, per-row byte
+    accounting.  Sibling of :class:`BlockPagingPlan`, composed by the
+    manager, never forked on inside the engine.
   * :class:`PagedCacheManager` — the jax layer: owns the pooled cache
     tree and presents the contiguous manager's ``reset_slots`` / cache
     interface to the engine; the jitted decode step threads the block
     table through a gather (pool -> dense per-slot view) and a scatter
-    (the one block each slot wrote this tick -> pool).
+    (the one block each slot wrote this tick -> pool), and the state
+    rows through a row gather/scatter on the state leaves.
 
 Bit-identity with the contiguous path (the ladder's O0..O6 contract)
 rests on one invariant: a slot at position ``p`` has itself written every
@@ -45,6 +66,7 @@ import numpy as np
 from repro.serving import kvquant
 
 NULL_BLOCK = 0
+NULL_ROW = 0
 
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
@@ -242,6 +264,93 @@ class PagedAllocator:
         assert len(set(held)) == len(held), "block held twice"
 
 
+class StatePool:
+    """Slot -> state-row indirection for O(1)-per-slot cache leaves.
+
+    The state-row sibling of :class:`PagedAllocator`: pure host
+    bookkeeping (a numpy row map + python free list) so the scheduler
+    property tests can drive random admit/retire traffic against the
+    real invariants without touching jax.  Row 0 is the reserved NULL
+    row — never handed out, aliased by parked and unoccupied slots, its
+    contents write-garbage by design (the state-pool analogue of the
+    NULL block).
+
+    ``n_rows`` is the number of *allocatable* rows (default: one per
+    engine slot, the capacity-parity configuration); physical pool
+    storage has ``n_rows + 1`` rows.  Unlike blocks, a slot holds
+    exactly ONE row for its whole lifetime — recurrent state does not
+    grow with the sequence — so admission is a single pop and there is
+    no reservation arithmetic.
+    """
+
+    def __init__(self, batch_size: int, *, n_rows: int = 0):
+        self.B = batch_size
+        self.n_rows = n_rows or batch_size
+        if self.n_rows < 1:
+            raise ValueError(f"need at least one row (got {self.n_rows})")
+        # rows[i] = physical state row of slot i (NULL_ROW = unoccupied)
+        self.rows = np.full((batch_size,), NULL_ROW, np.int32)
+        self._free = list(range(self.n_rows, 0, -1))   # pop() -> lowest id
+
+    @property
+    def free_rows(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_rows(self) -> int:
+        return self.n_rows - len(self._free)
+
+    def can_admit(self, req=None) -> bool:
+        return bool(self._free)
+
+    def infeasible_reason(self, req=None):
+        return None      # one row always fits a pool of >= 1 rows
+
+    def admit_slot(self, i: int, req=None) -> None:
+        if self.rows[i] != NULL_ROW:
+            raise RuntimeError(f"slot {i} admitted while holding row "
+                               f"{int(self.rows[i])}")
+        if not self._free:
+            raise RuntimeError(
+                "state pool exhausted (admission gate should have queued)")
+        self.rows[i] = self._free.pop()
+
+    def release_slot(self, i: int, req=None) -> None:
+        r = int(self.rows[i])
+        if r == NULL_ROW:
+            return                       # releasing an empty slot: no-op
+        if r in self._free or not (1 <= r <= self.n_rows):
+            raise RuntimeError(f"double/invalid free of state row {r}")
+        self.rows[i] = NULL_ROW
+        self._free.append(r)
+
+    def compaction_moves(self) -> dict:
+        """{old_row: new_row} packing the held rows into the lowest ids
+        in slot order (the defrag plan — the manager applies the device
+        copies, then calls :meth:`apply_moves`)."""
+        held = [(i, int(r)) for i, r in enumerate(self.rows)
+                if r != NULL_ROW]
+        return {old: new for (_, old), new in
+                zip(held, range(1, len(held) + 1)) if old != new}
+
+    def apply_moves(self, moves: dict) -> None:
+        for i in range(self.B):
+            r = int(self.rows[i])
+            if r in moves:
+                self.rows[i] = moves[r]
+        held = {int(r) for r in self.rows if r != NULL_ROW}
+        self._free = [r for r in range(self.n_rows, 0, -1) if r not in held]
+
+    def check_conservation(self) -> None:
+        """held + free == total, and no row is in two places."""
+        held = [int(r) for r in self.rows if r != NULL_ROW]
+        assert len(set(held)) == len(held), "state row held twice"
+        assert len(held) + len(self._free) == self.n_rows, (
+            held, self._free)
+        assert not (set(held) & set(self._free)), "row both held and free"
+        assert all(1 <= r <= self.n_rows for r in held), held
+
+
 # ---------------------------------------------------------------------------
 # The jax layer: pooled cache tree + gather/scatter layout.
 # ---------------------------------------------------------------------------
@@ -269,9 +378,15 @@ class BlockPagingPlan:
     cache — cross-attention caches (path contains "cross") pass through
     untouched, whatever their length: cross attention is unmasked, so
     the stale-positions-are-masked argument that makes paging safe does
-    not apply to them.  Recurrent-state leaves (RWKV wkv, Mamba conv/ssm
-    — no sequence axis) keep per-slot contiguous storage: there is
-    nothing to page in O(1)-state families.  In every paged leaf of every
+    not apply to them.  Non-paged leaves — recurrent state (RWKV wkv,
+    Mamba conv/ssm: no sequence axis, nothing to block-page) and the
+    cross caches — are *state* leaves: with ``state_pooled=False``
+    (direct construction, the legacy single-plan mode) they keep dense
+    per-slot storage and scatter replaces them wholesale; with
+    ``state_pooled=True`` (the manager composing this plan with a
+    :class:`StatePagingPlan`) they pass through gather AND scatter
+    untouched in their pooled row shape, and the state plan owns their
+    row indirection.  In every paged leaf of every
     model family here the sequence axis sits immediately after the batch
     axis, which makes the (batch, seq) <-> (block, in-block) reshapes
     below pure metadata.
@@ -279,11 +394,13 @@ class BlockPagingPlan:
 
     def __init__(self, model, batch_size: int, max_seq: int,
                  block_size: int, pool_blocks: int, *,
-                 row_multiple: int = 1, kv_dtype: str = "bf16"):
+                 row_multiple: int = 1, kv_dtype: str = "bf16",
+                 state_pooled: bool = False):
         self.B = batch_size
         self.max_seq = max_seq
         self.T = block_size
         self.nb = blocks_for(max_seq, block_size)
+        self.state_pooled = state_pooled
         self.kv_dtype = kvquant.validate_kv_dtype(kv_dtype)
         self.quantized = kvquant.is_quantized(kv_dtype)
         self.store_dtype = kvquant.pool_dtype(kv_dtype)
@@ -495,7 +612,10 @@ class BlockPagingPlan:
                 pool_leaves, scale_leaves, dense_leaves, self.plans,
                 self.scale_axes):
             if not paged:
-                out.append(dense)                     # whole-state replace
+                # state_pooled: the StatePagingPlan row-scattered this
+                # leaf already (or will) — keep the pool leaf untouched.
+                # Legacy single-plan mode: whole-state replace.
+                out.append(leaf if self.state_pooled else dense)
                 out_s.append(sleaf)
                 continue
             shape = (dense.shape[:bax] + (Bv * nb, self.T)
@@ -548,7 +668,10 @@ class BlockPagingPlan:
                 pool_leaves, scale_leaves, dense_leaves, self.plans,
                 self.scale_axes):
             if not paged:
-                out.append(dense)                     # whole-state replace
+                # state_pooled: the StatePagingPlan row-scattered this
+                # leaf already (or will) — keep the pool leaf untouched.
+                # Legacy single-plan mode: whole-state replace.
+                out.append(leaf if self.state_pooled else dense)
                 out_s.append(sleaf)
                 continue
             idx = seq_idx.reshape(
@@ -572,6 +695,94 @@ class BlockPagingPlan:
         return new_pool, jax.tree.unflatten(treedef, out_s)
 
 
+class StatePagingPlan:
+    """Row-pooled storage plan for the non-block leaves of a
+    :class:`BlockPagingPlan` — recurrent state and cross-attention KV.
+
+    State leaves trade their dense ``batch`` axis for a pool-row axis of
+    ``total_rows = roundup(n_rows + 1, row_multiple)`` physical rows
+    (row 0 = NULL, padding rows for even device sharding) at the SAME
+    axis position ``bax``, so the sharding plan and the packed-zero
+    helper work unchanged.  ``gather(tree, rows)`` takes each slot's row
+    back out into a dense batch view; ``scatter(tree, rows, new_dense)``
+    writes the dense view into the rows (duplicate NULL-row writes from
+    parked/inactive slots collapse into the garbage sink).  Composes
+    with the block plan in either order on disjoint leaves.
+    """
+
+    def __init__(self, block_plan: BlockPagingPlan, model,
+                 batch_size: int, max_seq: int, *,
+                 n_rows: int = 0, row_multiple: int = 1):
+        self.n_rows = n_rows or batch_size
+        self.total_rows = -(-(self.n_rows + 1) // row_multiple) \
+            * row_multiple
+        self.baxes = [bax for bax, _ in block_plan.plans]
+        self.state = [not paged for _, paged in block_plan.plans]
+        specs = jax.tree.leaves(model.cache_spec(batch_size, max_seq))
+        # Per-row stored bytes across all state leaves (state is never
+        # quantized — it is carried, not masked, and the tolerance
+        # contract only covers attention reads).
+        self.state_row_bytes = 0
+        for spec, st, bax in zip(specs, self.state, self.baxes):
+            if not st:
+                continue
+            n = 1
+            for i, d in enumerate(spec.shape):
+                if i != bax:
+                    n *= d
+            self.state_row_bytes += n * jnp.dtype(spec.dtype).itemsize
+
+    @property
+    def geometry(self) -> dict:
+        return {"state_rows": self.total_rows,
+                "state_row_bytes": self.state_row_bytes,
+                "state_bytes": self.total_rows * self.state_row_bytes}
+
+    def init_pool(self, pool):
+        """Re-shape the state leaves of a freshly built pool tree from
+        dense (batch at bax) to pooled (total_rows at bax) zeros."""
+        leaves, treedef = jax.tree.flatten(pool)
+        out = []
+        for leaf, st, bax in zip(leaves, self.state, self.baxes):
+            if not st:
+                out.append(leaf)
+                continue
+            shape = list(leaf.shape)
+            shape[bax] = self.total_rows
+            out.append(jnp.zeros(tuple(shape), leaf.dtype))
+        return jax.tree.unflatten(treedef, out)
+
+    # Both halves below are traced inside the jitted decode step.
+    def gather(self, tree, rows):
+        """Pooled state leaves + rows (Bv,) -> dense per-slot view (the
+        block leaves — already dense from the block gather, or absent —
+        pass through untouched)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        out = []
+        for leaf, st, bax in zip(leaves, self.state, self.baxes):
+            out.append(jnp.take(leaf, rows, axis=bax) if st else leaf)
+        return jax.tree.unflatten(treedef, out)
+
+    def scatter(self, tree, rows, new_dense):
+        """Write each slot's dense state back into its pool row.  Slots
+        whose row is NULL (parked mid-prefill, inactive) all land in row
+        0 — the write-garbage sink — so their carried state is exactly
+        NOT advanced, which is what makes chunked prefill safe for
+        recurrent families (satellite: park via no-advance, not via
+        degrading to token-by-token)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        dense_leaves = jax.tree.leaves(new_dense)
+        out = []
+        for leaf, dense, st, bax in zip(leaves, dense_leaves,
+                                        self.state, self.baxes):
+            if not st:
+                out.append(leaf)
+                continue
+            sel = (slice(None),) * bax + (rows,)
+            out.append(leaf.at[sel].set(dense.astype(leaf.dtype)))
+        return jax.tree.unflatten(treedef, out)
+
+
 class PagedCacheManager(PagedAllocator):
     """Block-pooled drop-in for ``cache.CacheManager`` at O6.
 
@@ -584,10 +795,18 @@ class PagedCacheManager(PagedAllocator):
     masked, not zeroed — see the module docstring), and retirement
     returns the blocks before the next admission wave runs.
 
+    Families with state leaves (recurrent state, cross KV) additionally
+    own a :class:`StatePool` + :class:`StatePagingPlan` pair: admission
+    takes one state row per slot next to the block reservation (pure-
+    state families skip block allocation entirely — no phantom
+    reservations), retirement returns it, ``reset_slots`` zeroes the
+    freshly assigned rows (state is carried, not masked), and
+    ``insert_slot``/``compact`` move state through row indirection.
+
     Under a sharded :class:`~repro.parallel.sharding.PlacementPlan` the
-    pool leaves are sharded on their BLOCK axis (rows padded to a device
-    multiple by the plan) and the recurrent-state leaves on their batch
-    axis; block tables stay replicated.
+    pool leaves are sharded on their BLOCK axis and the state leaves on
+    their ROW axis (both padded to a device multiple by their plan);
+    block tables and row maps stay replicated.
     """
 
     def __init__(self, model, batch_size: int, max_seq: int, *,
@@ -598,11 +817,26 @@ class PagedCacheManager(PagedAllocator):
                          pool_blocks=pool_blocks, defrag=defrag)
         self.model = model
         self.placement = placement
+        row_mult = placement.n_devices if placement is not None else 1
         self.plan = BlockPagingPlan(
             model, batch_size, max_seq, self.block_size, self.pool_blocks,
-            row_multiple=placement.n_devices if placement is not None else 1,
-            kv_dtype=kv_dtype)
+            row_multiple=row_mult, kv_dtype=kv_dtype, state_pooled=True)
+        self.has_blocks = any(paged for _, paged in self.plan.plans)
+        # State leaves (recurrent state, cross KV) get the row pool;
+        # pure-state families have no block leaves at all and their
+        # admission runs entirely on state rows (no phantom block
+        # reservations — the admit-without-reshape win).
+        if all(paged for _, paged in self.plan.plans):
+            self.state = None
+            self.state_plan = None
+        else:
+            self.state = StatePool(batch_size)
+            self.state_plan = StatePagingPlan(
+                self.plan, model, batch_size, max_seq,
+                n_rows=self.state.n_rows, row_multiple=row_mult)
         pool, self._treedef = self.plan.init_pool(model)
+        if self.state_plan is not None:
+            pool = self.state_plan.init_pool(pool)
         # Narrow pools carry their per-block scales as a sibling subtree
         # of the SAME treedef: ``.cache`` becomes {"pool", "scale"} and
         # the engine threads the bundle opaquely (it is just a pytree).
@@ -616,6 +850,7 @@ class PagedCacheManager(PagedAllocator):
                                         self.pool_shardings(placement))
         self._state_zero = None
         self._tables_dev = None     # cached device copy of the tables
+        self._rows_dev = None       # cached device copy of the row map
 
     @property
     def kv_dtype(self) -> str:
@@ -635,15 +870,25 @@ class PagedCacheManager(PagedAllocator):
     @property
     def geometry(self) -> dict:
         """Pool geometry (block size / blocks-per-seq / pool rows /
-        per-token bytes) — what the KV-bytes accounting in
+        per-token bytes, plus the state-row pool when the family has
+        state leaves) — what the KV-bytes accounting in
         ``benchmarks/serving_ladder.py`` and ad-hoc tooling consume
-        instead of reaching into the plan."""
-        return self.plan.geometry
+        instead of reaching into the plan.  ``pool_bytes`` covers the
+        whole persistent footprint: block rows + scales + state rows."""
+        g = dict(self.plan.geometry)
+        if self.state_plan is not None:
+            g.update(self.state_plan.geometry)
+            g["pool_bytes"] += g["state_bytes"]
+            g["pool_mb"] = g["pool_bytes"] / 2**20
+        else:
+            g.update({"state_rows": 0, "state_row_bytes": 0,
+                      "state_bytes": 0})
+        return g
 
     def pool_shardings(self, placement):
         """Sharding tree for the pool: every leaf sharded at its plan
-        axis — the pool-row axis for paged leaves, the batch axis for
-        recurrent-state leaves (both sit at ``bax``).  Scale leaves
+        axis — the block-row axis for paged leaves, the state-row axis
+        for state leaves (both sit at ``bax``).  Scale leaves
         shard on the same pool-row axis (their other dims are keepdims
         1s); the scalar placeholders stay replicated."""
         pool_sh = jax.tree.unflatten(self._treedef, [
@@ -656,23 +901,60 @@ class PagedCacheManager(PagedAllocator):
                                      self.plan.scale_axes)])
         return {"pool": pool_sh, "scale": scale_sh}
 
-    def step_extras(self) -> tuple:
+    def _put_host(self, arr):
+        if self.placement is not None and self.placement.sharded:
+            return jax.device_put(arr, self.placement.replicated)
+        return jnp.asarray(arr)
+
+    def step_extras(self, parked=None) -> tuple:
         """Per-tick step inputs beyond (params, cache, tokens, positions,
-        seeds): the block tables, as a CACHED device array.  Tables only
-        change at admission/retirement/compaction — those paths
-        invalidate — so steady-state decode ticks re-use one upload
-        instead of paying a host->device transfer per tick."""
-        if self._tables_dev is None:
-            if self.placement is not None and self.placement.sharded:
-                self._tables_dev = jax.device_put(
-                    self.tables, self.placement.replicated)
+        seeds): the block tables (iff the family has block leaves) then
+        the state rows (iff it has state leaves), as CACHED device
+        arrays.  Tables/rows only change at admission / retirement /
+        compaction — those paths invalidate — so steady-state decode
+        ticks re-use one upload instead of paying a host->device
+        transfer per tick.
+
+        ``parked``: slot indices whose state row is aliased to the NULL
+        row for THIS tick — the chunked-prefill park.  A parked slot's
+        batched-decode read pulls NULL garbage (its output is discarded
+        anyway; batch rows are independent in every family) and its
+        state write lands in the garbage sink, so its real carried state
+        advances only through the prefill chunks.  Block tables are NOT
+        aliased: a parked slot's KV write at position p is rewritten by
+        its next chunk — the standing stale-positions invariant."""
+        out = []
+        if self.has_blocks:
+            if self._tables_dev is None:
+                self._tables_dev = self._put_host(self.tables)
+            out.append(self._tables_dev)
+        if self.state is not None:
+            if parked:
+                rows = self.state.rows.copy()
+                rows[list(parked)] = NULL_ROW
+                out.append(self._put_host(rows))
             else:
-                self._tables_dev = jnp.asarray(self.tables)
-        return (self._tables_dev,)
+                if self._rows_dev is None:
+                    self._rows_dev = self._put_host(self.state.rows)
+                out.append(self._rows_dev)
+        return tuple(out)
+
+    # -- admission: both pools must say yes -----------------------------------
+    def blocks_needed(self, req) -> int:
+        return super().blocks_needed(req) if self.has_blocks else 0
+
+    def can_admit(self, req) -> bool:
+        if self.has_blocks and not super().can_admit(req):
+            return False
+        return self.state is None or self.state.can_admit(req)
 
     def admit_slot(self, i: int, req) -> None:
-        super().admit_slot(i, req)
-        self._tables_dev = None
+        if self.has_blocks:
+            super().admit_slot(i, req)
+            self._tables_dev = None
+        if self.state is not None:
+            self.state.admit_slot(i, req)
+            self._rows_dev = None
 
     def grow_slot(self, i: int, total_tokens: int) -> int:
         added = super().grow_slot(i, total_tokens)
@@ -681,8 +963,18 @@ class PagedCacheManager(PagedAllocator):
         return added
 
     def release_slot(self, i: int, req=None) -> None:
-        super().release_slot(i, req)
-        self._tables_dev = None
+        if self.has_blocks:
+            super().release_slot(i, req)
+            self._tables_dev = None
+        if self.state is not None:
+            self.state.release_slot(i, req)
+            self._rows_dev = None
+
+    def check_conservation(self) -> None:
+        if self.has_blocks:
+            super().check_conservation()
+        if self.state is not None:
+            self.state.check_conservation()
 
     def reset_slots(self, indices: list, live: list) -> None:
         """Admission reset under paging.
@@ -693,9 +985,11 @@ class PagedCacheManager(PagedAllocator):
         leaves (RWKV wkv / Mamba conv+ssm — per-slot, no sequence axis)
         are different: state is carried, not masked, so the previous
         tenant's state would leak straight into the new request's first
-        step.  Those leaves get the O5-style packed one-call zeroing.
+        step.  Their freshly allocated pool ROWS get the O5-style packed
+        one-call zeroing (``admit_slot`` assigned the rows before this
+        runs).
         """
-        if not indices or all(paged for _, paged in self.plan.plans):
+        if not indices or self.state is None:
             return
         if self._state_zero is None:
             from repro.serving.cache import make_packed_zero
@@ -703,8 +997,9 @@ class PagedCacheManager(PagedAllocator):
             self._state_zero = make_packed_zero(
                 [bax for bax, _ in self.plan.plans],
                 skip=[paged for _, paged in self.plan.plans])
+        rows = [int(self.state.rows[i]) for i in indices]
         pool, scales = self._split_cache()
-        pool = self._state_zero(pool, jnp.asarray(indices, jnp.int32))
+        pool = self._state_zero(pool, jnp.asarray(rows, jnp.int32))
         self._join_cache(pool, scales)
 
     def insert_slot(self, i: int, state) -> None:
@@ -715,7 +1010,9 @@ class PagedCacheManager(PagedAllocator):
         through slot ``i``'s block table — ``place``/``admit`` rebuilt
         the table before this runs, and NULL entries past the reservation
         absorb the padded tail into the write-garbage NULL row.
-        Recurrent-state leaves copy the batch-1 slice over slot ``i``.
+        State leaves (recurrent state, cross KV) copy the batch-1 slice
+        into slot ``i``'s pool row — cross-attention KV built offline
+        (``encdec.build_cross_cache``) rides in through the same door.
 
         Narrow pools quantize each folded block with a fresh absmax
         scale (the dense prefill state is zero past the prompt, so no
@@ -734,7 +1031,7 @@ class PagedCacheManager(PagedAllocator):
                 self.plan.scale_axes):
             if not paged:
                 st0 = jnp.take(st, 0, axis=bax).astype(leaf.dtype)
-                sel = (slice(None),) * bax + (i,)
+                sel = (slice(None),) * bax + (int(self.state.rows[i]),)
                 out.append(leaf.at[sel].set(st0))
                 out_s.append(sleaf)
                 continue
@@ -770,22 +1067,29 @@ class PagedCacheManager(PagedAllocator):
                        for b in row[:n].tolist()})
         want = list(range(1, len(held) + 1))
         moves = {old: new for old, new in zip(held, want) if old != new}
-        if not moves:
+        smoves = (self.state.compaction_moves()
+                  if self.state is not None else {})
+        if not moves and not smoves:
             return
-        src = jnp.asarray(list(moves.keys()), jnp.int32)
-        dst = jnp.asarray(list(moves.values()), jnp.int32)
+        src = jnp.asarray(list(moves.keys()) or [0], jnp.int32)
+        dst = jnp.asarray(list(moves.values()) or [0], jnp.int32)
+        ssrc = jnp.asarray(list(smoves.keys()) or [0], jnp.int32)
+        sdst = jnp.asarray(list(smoves.values()) or [0], jnp.int32)
         pool, scales = self._split_cache()
 
         def move_rows(tree):
-            # relocate pool rows; scale rows ride along (same bax), and
-            # non-paged leaves / scalar placeholders are left alone.
+            # relocate pool rows — block rows by the block moves, state
+            # rows by the state moves; scale rows ride along (same bax)
+            # and scalar placeholders are left alone.  "or [0]" above
+            # keeps an empty move set a NULL-row self-copy no-op.
             leaves, moved = jax.tree.leaves(tree), []
             for leaf, (bax, paged) in zip(leaves, self.plan.plans):
-                if not paged or leaf.ndim == 0:
+                if leaf.ndim == 0:
                     moved.append(leaf)
                     continue
-                sel_src = (slice(None),) * bax + (src,)
-                sel_dst = (slice(None),) * bax + (dst,)
+                s, d = (src, dst) if paged else (ssrc, sdst)
+                sel_src = (slice(None),) * bax + (s,)
+                sel_dst = (slice(None),) * bax + (d,)
                 moved.append(leaf.at[sel_dst].set(leaf[sel_src]))
             return jax.tree.unflatten(self._treedef, moved)
 
@@ -793,7 +1097,11 @@ class PagedCacheManager(PagedAllocator):
         if scales is not None:
             scales = move_rows(scales)
         self._join_cache(pool, scales)
-        remap = np.vectorize(lambda b: moves.get(int(b), int(b)))
-        self.tables = remap(self.tables).astype(np.int32)
-        self.allocator.rebuild(len(held))
-        self._tables_dev = None
+        if moves:
+            remap = np.vectorize(lambda b: moves.get(int(b), int(b)))
+            self.tables = remap(self.tables).astype(np.int32)
+            self.allocator.rebuild(len(held))
+            self._tables_dev = None
+        if smoves:
+            self.state.apply_moves(smoves)
+            self._rows_dev = None

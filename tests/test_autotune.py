@@ -241,14 +241,17 @@ def test_serving_backend_measures_paged_attn_by_race():
     assert list(mk.meta["paged_attn_walls"]) == ["kernel"]
     assert mk.meta["generated"] == m.meta["generated"]
 
-    # pinning "kernel" on a family WITHOUT a paged decode step degrades
-    # to gather — and the walls record what actually ran, not the request
+    # recurrent families race the kernel rung for real now: rwkv6's
+    # paged step reads state through row indirection, so pinning
+    # "kernel" runs the kernel path (no silent gather degrade) and the
+    # meta records the state impl alongside
     br = ServingBackend("rwkv6-3b", batch_size=2, max_seq=16, n_requests=2,
                         max_new=3, repeats=1, kv_block_size=4,
                         paged_attn="kernel", kv_dtype="bf16")
     mr = br.measure(OptLevel.O6)
-    assert mr.meta["paged_attn"] == "gather"
-    assert list(mr.meta["paged_attn_walls"]) == ["gather"]
+    assert mr.meta["paged_attn"] == "kernel"
+    assert list(mr.meta["paged_attn_walls"]) == ["kernel"]
+    assert mr.meta["state_impl"] == "rows"
 
 
 def test_serving_backend_races_kv_dtype():

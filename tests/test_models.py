@@ -123,7 +123,7 @@ def test_param_counts_match_formula():
     """ArchConfig.n_params() (used for MODEL_FLOPS) vs actual tree size."""
     from repro.models.layers import count_params
     for arch in ("qwen3-8b", "smollm-360m", "rwkv6-3b", "zamba2-2.7b",
-                 "qwen3-moe-30b-a3b"):
+                 "mamba2-2.7b", "qwen3-moe-30b-a3b"):
         cfg = get_smoke(arch)
         model = get_model(cfg)
         params = model.init(RNG)
@@ -139,7 +139,7 @@ def test_applicable_shapes_skips():
     for arch in ARCH_NAMES:
         cfg = get_config(arch)
         names = {s.name for s in applicable_shapes(cfg)}
-        if arch in ("zamba2-2.7b", "rwkv6-3b"):
+        if arch in ("zamba2-2.7b", "rwkv6-3b", "mamba2-2.7b"):
             assert "long_500k" in names
         else:
             assert "long_500k" not in names

@@ -567,3 +567,125 @@ def test_deadline_policy_prefill_queue_orders_by_deadline():
     sched.admit()
     pf = sched.prefill_queue()
     assert [sched.slots[i].req for i in pf] == [c, b, a]
+
+
+# ---------------------------------------------------------------------------
+# StatePool: the state-row sibling of the block allocator (recurrent
+# families).  Same conservation discipline, but a slot holds exactly one
+# O(1) row for its whole lifetime — no reservation arithmetic.
+# ---------------------------------------------------------------------------
+
+from repro.serving.paged import NULL_ROW, StatePool  # noqa: E402
+
+
+def test_state_pool_basics():
+    pool = StatePool(3, n_rows=2)
+    assert pool.free_rows == 2 and pool.used_rows == 0
+    assert pool.can_admit()
+    assert pool.infeasible_reason(Request(prompt=[1] * 30,
+                                          max_new_tokens=100)) is None
+
+    pool.admit_slot(0)
+    pool.admit_slot(2)
+    pool.check_conservation()
+    assert pool.free_rows == 0 and pool.used_rows == 2
+    assert not pool.can_admit()
+    assert int(pool.rows[1]) == NULL_ROW
+    # distinct real rows, handed out lowest-first
+    assert sorted(int(r) for r in pool.rows if r != NULL_ROW) == [1, 2]
+
+    with pytest.raises(RuntimeError, match="admitted while holding"):
+        pool.admit_slot(0)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.admit_slot(1)
+
+    pool.release_slot(1)                     # releasing an empty slot: no-op
+    assert pool.free_rows == 0
+    pool.release_slot(0)
+    pool.check_conservation()
+    assert pool.free_rows == 1 and pool.used_rows == 1
+    pool.admit_slot(0)
+
+    # a corrupted alias (two slots claiming one row) must trip the
+    # double-free guard on the second release
+    pool.rows[1] = pool.rows[0]
+    pool.release_slot(0)
+    with pytest.raises(RuntimeError, match="double/invalid free"):
+        pool.release_slot(1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_state_pool_random_traffic_conserves_rows(seed):
+    """held + free == total and no double-occupancy under random
+    admit/retire/eos traffic driven through the scheduler hooks (the
+    wiring the paged layout uses for recurrent families)."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(2, 5))
+    pool = StatePool(B, n_rows=int(rng.integers(1, B + 1)))
+    sched = Scheduler(B, 16)
+    sched.admission_gate = pool.can_admit
+    sched.on_admit = pool.admit_slot
+    sched.on_retire = pool.release_slot
+
+    for _ in range(60):
+        if rng.random() < 0.5:
+            sched.submit(Request(
+                prompt=[1] * int(rng.integers(1, 6)),
+                max_new_tokens=int(rng.integers(1, 6)), eos_id=0))
+        for i in sched.admit():
+            assert int(pool.rows[i]) != NULL_ROW
+        pool.check_conservation()
+        # every active slot holds exactly one real row; idle slots none
+        for i, slot in enumerate(sched.slots):
+            held = int(pool.rows[i]) != NULL_ROW
+            assert held == slot.active, (i, slot)
+        for i in list(sched.active_indices):
+            # advance; sometimes force a surprise eos mid-generation
+            tok = 0 if rng.random() < 0.1 else int(rng.integers(3, 9))
+            sched.advance(i, tok)
+        pool.check_conservation()
+    assert pool.used_rows == sum(s.active for s in sched.slots)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_state_pool_defrag_packs_rows_and_preserves_mapping(seed):
+    """compaction_moves packs held rows into the lowest ids in slot
+    order; apply_moves rewrites the map consistently (bit-exactness of
+    the device copies is covered by the serving differential tests —
+    here we pin that the *plan* is a permutation the manager can apply)."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(2, 8))
+    pool = StatePool(B)
+    # random churn to fragment the row map
+    for _ in range(40):
+        i = int(rng.integers(0, B))
+        if int(pool.rows[i]) == NULL_ROW and pool.can_admit():
+            pool.admit_slot(i)
+        elif rng.random() < 0.6:
+            pool.release_slot(i)
+    pool.check_conservation()
+    before = {i: int(r) for i, r in enumerate(pool.rows) if r != NULL_ROW}
+
+    moves = pool.compaction_moves()
+    # valid plan for the manager's simultaneous snapshot copy
+    # (``leaf.at[dst].set(leaf[src])``): sources held, destinations
+    # distinct, and no destination clobbers a held row that is NOT
+    # itself relocated by the same plan.
+    held = set(before.values())
+    assert set(moves) <= held
+    assert len(set(moves.values())) == len(moves)
+    assert not set(moves.values()) & (held - set(moves))
+    pool.apply_moves(moves)
+    pool.check_conservation()
+
+    after = {i: int(r) for i, r in enumerate(pool.rows) if r != NULL_ROW}
+    assert set(after) == set(before)          # same slots occupied
+    n = len(after)
+    assert sorted(after.values()) == list(range(1, n + 1))
+    # slot order preserved: lower slot index -> lower packed row id
+    packed = [after[i] for i in sorted(after)]
+    assert packed == sorted(packed)
+    # idempotent: a second plan is empty
+    assert pool.compaction_moves() == {}

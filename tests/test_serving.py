@@ -319,9 +319,12 @@ def test_differential_fuzz_quantized_pool(seed, policy):
 
 def test_prefill_chunk_mode_recorded_and_degrades():
     """``prefill_mode`` is the best-effort record: "chunked" at fused
-    rungs for families with a prefill step, "token" when the knob is off,
-    below O2, or for families without one (recurrent rwkv) — recorded,
-    never an exception, and the degraded engine still decodes."""
+    rungs for families with a prefill step, "token" when the knob is off
+    or below O2 — recorded, never an exception, and the degraded engine
+    still decodes.  Carried-state families chunk only on the PAGED
+    layout (NULL-row parking); the contiguous layout has no indirection
+    to park through, so it degrades to token prefill with a recorded
+    ``degrade_reason``."""
     eng, _ = _engine(config=BestEffortConfig(level=OptLevel.O5,
                                              prefill_chunk=4))
     assert eng.prefill_mode == "chunked"
@@ -334,8 +337,17 @@ def test_prefill_chunk_mode_recorded_and_degrades():
                       config=BestEffortConfig(level=OptLevel.O5,
                                               prefill_chunk=4))
     assert eng4.prefill_mode == "token"
+    assert "carries recurrent state" in eng4.degrade_reason
     eng4.submit(Request(prompt=[5, 6, 7], max_new_tokens=3))
     assert len(eng4.run()) == 1
+    # the paged layout parks carried state on the NULL row, so the same
+    # family chunks for real at O6 — no degrade recorded
+    eng5, _ = _engine("rwkv6-3b", B=2, max_seq=24,
+                      config=BestEffortConfig(level=OptLevel.O6,
+                                              kv_block_size=8,
+                                              prefill_chunk=4))
+    assert eng5.prefill_mode == "chunked"
+    assert eng5.degrade_reason is None
 
 
 @pytest.mark.parametrize("level,kw", [
@@ -443,18 +455,55 @@ def test_paged_recurrent_state_zeroed_on_slot_reuse(arch):
     assert ref[0] == ref[1], arch
 
 
+@pytest.mark.parametrize("arch,seed", [("rwkv6-3b", 71),
+                                       ("mamba2-2.7b", 72),
+                                       ("zamba2-2.7b", 73),
+                                       ("whisper-base", 74)])
+def test_differential_fuzz_state_pool_per_family(arch, seed):
+    """The full-rung O6 contract for every non-transformer family: the
+    recurrent/cross state lives in the row pool (``state_impl="rows"``,
+    no gather degrade) and random mixes — mid-flight arrivals, planted
+    eos stops, a block pool small enough to queue admissions for the
+    families that also page attention KV — decode to bit-identical
+    greedy tokens on the contiguous O5 path, the O6 gather step, the
+    gather-free kernel step, and chunked prefill on both (the NULL-row
+    parking path for carried state)."""
+    cfg, _, _ = _model(arch)
+    mix = _random_mix(seed, cfg.vocab, max_seq=24, prompt_hi=8, new_hi=5)
+    ref = _run_mix(mix, OptLevel.O5, arch=arch, B=2, max_seq=24)
+    eos = {k: g[len(g) // 2] for k, g in enumerate(ref) if k % 2 == 0
+           and len(g) > 1}
+    ref = _run_mix(mix, OptLevel.O5, arch=arch, B=2, max_seq=24,
+                   eos=eos, late_from=5)
+    pool = dict(kv_block_size=4, kv_pool_blocks=10)
+    cells = [dict(pool),
+             dict(pool, paged_attn="kernel"),
+             dict(pool, prefill_chunk=3),
+             dict(pool, paged_attn="kernel", prefill_chunk=3)]
+    for kw in cells:
+        out = _run_mix(mix, OptLevel.O6, arch=arch, B=2, max_seq=24,
+                       eos=eos, late_from=5, **kw)
+        assert_tokens_match(ref, out, EXACT, f"{arch} O6 {kw}")
+
+
 def test_paged_kernel_attn_impl_recorded_and_fallback():
-    """``paged_attn="kernel"`` builds the gather-free step for
-    transformer families and records ``attn_impl="kernel"``; a family
-    without a paged decode step (recurrent rwkv) degrades to the gather
-    step — recorded, never an exception, and still bit-identical to O5
-    (the best-effort degradation contract)."""
+    """``paged_attn="kernel"`` builds the gather-free step and records
+    ``attn_impl="kernel"`` — for transformers AND for recurrent
+    families, whose paged step reads state through row indirection
+    (``state_impl="rows"``).  A model genuinely without a paged decode
+    step degrades to the gather step — recorded with a loud
+    ``degrade_reason``, never an exception, and still bit-identical to
+    O5 (the best-effort degradation contract)."""
+    import dataclasses
+
     eng, _ = _engine(B=2, max_seq=16,
                      config=BestEffortConfig(level=OptLevel.O6,
                                              kv_block_size=4,
                                              paged_attn="kernel"))
     assert eng.layout.paged_attn == "kernel"
     assert eng.layout.attn_impl == "kernel"
+    assert eng.layout.state_impl == "none"        # all leaves paged
+    assert eng.degrade_reason is None
 
     mix = [([5, 6, 7], 4), ([9, 9], 5), ([3, 1, 4], 3)]
     ref = [_run_mix(mix, lvl, arch="rwkv6-3b", B=2, max_seq=24,
@@ -467,7 +516,21 @@ def test_paged_kernel_attn_impl_recorded_and_fallback():
                       config=BestEffortConfig(level=OptLevel.O6,
                                               kv_block_size=8,
                                               paged_attn="kernel"))
-    assert eng2.layout.attn_impl == "gather"      # degraded, recorded
+    assert eng2.layout.attn_impl == "kernel"      # real kernel rung now
+    assert eng2.layout.state_impl == "rows"
+    assert eng2.degrade_reason is None
+
+    # strip the paged step to exercise the degrade path itself: the
+    # layout falls back to gather and RECORDS why, loudly
+    cfg, model, params = _model("rwkv6-3b")
+    stripped = dataclasses.replace(model, paged_decode_step=None)
+    eng3 = DecodeEngine(stripped, params, batch_size=2, max_seq=24,
+                        config=BestEffortConfig(level=OptLevel.O6,
+                                                kv_block_size=8,
+                                                paged_attn="kernel"))
+    assert eng3.layout.attn_impl == "gather"      # degraded, recorded
+    assert eng3.layout.state_impl == "rows"
+    assert "paged_decode_step" in eng3.degrade_reason
 
     with pytest.raises(ValueError, match="paged_attn"):
         _engine(B=2, max_seq=16,
